@@ -1,0 +1,91 @@
+"""Kernel micro-benchmarks.
+
+On this CPU container the Pallas kernels execute in interpret mode, so
+us_per_call for them measures the *oracle jnp path* (the deployable number)
+and `derived` carries the kernel-vs-oracle max error — the correctness
+contract that transfers to TPU.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Timer
+from repro.core import distill
+from repro.kernels.distill import ops as dops
+from repro.kernels.distill import ref as dref
+from repro.kernels.fedagg import ops as aops
+from repro.kernels.flash import ops as fops
+from repro.kernels.flash import ref as fref
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)                                   # compile
+    t0 = time.time()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / iters * 1e6
+
+
+def bench_flash():
+    key = jax.random.PRNGKey(0)
+    rows = []
+    for (S, H, hd) in [(256, 4, 64), (512, 4, 128)]:
+        q = jax.random.normal(key, (1, S, H, hd))
+        k = jax.random.normal(jax.random.fold_in(key, 1), (1, S, H, hd))
+        v = jax.random.normal(jax.random.fold_in(key, 2), (1, S, H, hd))
+        qb = q.transpose(0, 2, 1, 3).reshape(H, S, hd)
+        kb = k.transpose(0, 2, 1, 3).reshape(H, S, hd)
+        vb = v.transpose(0, 2, 1, 3).reshape(H, S, hd)
+        ref_fn = jax.jit(lambda a, b, c: fref.attention_bh(a, b, c, causal=True))
+        us = _time(ref_fn, qb, kb, vb)
+        out = fops.flash_attention(q, k, v, causal=True)
+        ref = ref_fn(qb, kb, vb).reshape(1, H, S, hd).transpose(0, 2, 1, 3)
+        err = float(jnp.max(jnp.abs(out - ref)))
+        rows.append((f"kernel/flash/S{S}hd{hd}", us, f"max_err={err:.2e}"))
+    return rows
+
+
+def bench_distill():
+    key = jax.random.PRNGKey(0)
+    rows = []
+    for (N, V) in [(256, 8192), (64, 32768)]:
+        s = jax.random.normal(key, (N, V)) * 3
+        t = jax.random.normal(jax.random.fold_in(key, 1), (N, V)) * 3
+        y = jax.random.randint(key, (N,), 0, V)
+        ref_fn = jax.jit(lambda a, b, c: jnp.mean(dref.kd_loss_rows(a, b, c)))
+        us = _time(ref_fn, s, t, y)
+        got = float(dops.kd_loss(s, y, t))
+        want = float(ref_fn(s, t, y))
+        rows.append((f"kernel/distill/N{N}V{V}", us,
+                     f"rel_err={abs(got - want) / abs(want):.2e}"))
+    return rows
+
+
+def bench_fedagg():
+    key = jax.random.PRNGKey(0)
+    rows = []
+    for (C, D) in [(16, 1 << 18), (40, 1 << 16)]:
+        x = jax.random.normal(key, (C, D))
+        w = jax.nn.softmax(jax.random.normal(key, (C,)))
+        ref_fn = jax.jit(lambda a, b: jnp.einsum("c,cd->d", b, a))
+        us = _time(ref_fn, x, w)
+        got = aops.aggregate_tree({"x": x}, w)["x"]
+        err = float(jnp.max(jnp.abs(got - ref_fn(x, w))))
+        rows.append((f"kernel/fedagg/C{C}D{D}", us, f"max_err={err:.2e}"))
+    return rows
+
+
+def bench_kd_jnp_vs_kernel_math():
+    """Fused-KD kernel agreement on a padded-vocab LM-shaped case."""
+    key = jax.random.PRNGKey(1)
+    s = jax.random.normal(key, (4, 8, 1000)) * 2
+    t = jax.random.normal(jax.random.fold_in(key, 1), (4, 8, 1000)) * 2
+    y = jax.random.randint(key, (4, 8), 0, 1000)
+    with Timer() as tm:
+        a = float(distill.kd_loss(s, y, t))
+    b = float(distill.kd_loss(s, y, t, use_kernel=True))
+    return [("kernel/kd_e2e", tm.us, f"jnp={a:.4f};kernel={b:.4f}")]

@@ -1,0 +1,39 @@
+"""MAR schedule analysis (Eq. 2 / 9 / 10): straggler cost of plain FedAvg vs
+Fed-RAC's parallel master-slave schedule vs the sequential variant, on the
+paper's 40 real resource vectors."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Timer
+from repro.core import cost_model
+from repro.core.resources import TABLE_III, participants_from_matrix
+
+
+def bench_mar():
+    parts = participants_from_matrix(TABLE_III, n_data=[60] * 40)
+    model_bytes = 4e6          # 1M-param fp32 CNN
+    flops = 2e6
+    rows = []
+    with Timer() as t:
+        # Eq. 2: synchronous FedAvg — every round waits for the straggler
+        times = np.array([cost_model.round_time(p, flops, model_bytes, E=2)
+                          for p in parts])
+        fedavg_total = cost_model.total_time_sync(times, rounds=100)
+        # Fed-RAC: cluster C_m time is the slowest member's round on the
+        # smallest model; masters run the full model fast
+        t_small = np.array([cost_model.round_time(p, flops * 0.125,
+                                                  model_bytes * 0.125, E=2)
+                            for p in parts])
+        T_m = float(np.max(t_small)) * 100
+        for kappa in (0.5, 0.7):
+            for m in (3, 4, 5):
+                par = cost_model.mar_parallel(T_m, kappa, m)
+                seq = cost_model.mar_sequential(T_m, kappa, m)
+                rows.append((f"mar/k{kappa}/m{m}", 0.0,
+                             f"parallel={par:.1f}s;sequential={seq:.1f}s;"
+                             f"speedup={seq / par:.2f}x"))
+    rows.append(("mar/fedavg_eq2_100r", t.us,
+                 f"total={fedavg_total:.1f}s;straggler={float(times.max()):.2f}s;"
+                 f"median={float(np.median(times)):.2f}s"))
+    return rows

@@ -1,0 +1,76 @@
+"""Roofline table from the dry-run artifacts (§Roofline deliverable).
+
+Reads benchmarks/results/dryrun/*.json (produced by
+``python -m repro.launch.dryrun --all``) and emits one row per
+(arch × shape × mesh): the three roofline terms, the dominant bottleneck,
+and the useful-flops ratio.  Also writes a markdown table next to the JSONs
+for EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+
+def load_results(d=DRYRUN_DIR):
+    out = []
+    for p in sorted(glob.glob(os.path.join(d, "*.json"))):
+        with open(p) as f:
+            out.append(json.load(f))
+    return out
+
+
+def bench_roofline():
+    rows = []
+    results = load_results()
+    if not results:
+        return [("roofline/missing", 0.0,
+                 "run `python -m repro.launch.dryrun --all` first")]
+    n_ok = n_skip = n_err = 0
+    for r in results:
+        tag = f"roofline/{r['arch']}/{r['shape']}/{r.get('mesh', '?')}"
+        if r.get("variant"):
+            tag += f"/{r['variant']}"
+        if "skipped" in r:
+            n_skip += 1
+            rows.append((tag, 0.0, "SKIP:" + r["skipped"][:60]))
+            continue
+        if "error" in r:
+            n_err += 1
+            rows.append((tag, 0.0, "ERROR"))
+            continue
+        n_ok += 1
+        roof = r["roofline"]
+        dom_s = max(roof["compute_s"], roof["memory_s"], roof["collective_s"])
+        rows.append((tag, dom_s * 1e6,
+                     f"dom={roof['dominant']};c={roof['compute_s']:.3g}s;"
+                     f"m={roof['memory_s']:.3g}s;n={roof['collective_s']:.3g}s;"
+                     f"useful={roof['useful_flops_ratio']:.2f}"))
+    rows.append(("roofline/summary", 0.0,
+                 f"ok={n_ok};skip={n_skip};error={n_err}"))
+    return rows
+
+
+def write_markdown(out_path=os.path.join(DRYRUN_DIR, "roofline.md")):
+    results = [r for r in load_results() if "roofline" in r]
+    lines = ["| arch | shape | mesh | variant | compute s | memory s | "
+             "collective s | dominant | useful FLOPs | fits 16G |",
+             "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(results, key=lambda x: (x["arch"], x["shape"],
+                                            x.get("mesh", ""),
+                                            x.get("variant", ""))):
+        roof, mem = r["roofline"], r.get("memory", {})
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r.get('mesh','?')} "
+            f"| {r.get('variant','') or 'baseline'} "
+            f"| {roof['compute_s']:.4g} | {roof['memory_s']:.4g} "
+            f"| {roof['collective_s']:.4g} | **{roof['dominant']}** "
+            f"| {roof['useful_flops_ratio']:.2f} "
+            f"| {'yes' if mem.get('fits_16g') else 'NO'} |")
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    return out_path

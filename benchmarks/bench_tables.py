@@ -1,0 +1,188 @@
+"""Paper-table benchmarks (Tables II, IV, V, VI, VII; Figs 2, 3, 4).
+
+Each function returns rows (name, us_per_call, derived).  us_per_call is the
+wall time per FL communication round (or per clustering call); derived packs
+the table's headline numbers.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (LAMBDA_EQUAL, LAMBDA_PAPER, ROUNDS, Timer,
+                               run_fedrac, setup_fl)
+from repro.core import baselines as bl
+from repro.core import clustering as C
+from repro.core import resources as R
+from repro.core.server import rounds_to_reach
+from repro.models import cnn
+
+import jax
+import jax.numpy as jnp
+
+
+# ----------------------------------------------------------- Table II
+def bench_table2_clustering():
+    """DI values at k=2..6 for k-means / DBSCAN / OPTICS on Table III."""
+    rows = []
+    Vb = R.unit_normalize(R.TABLE_III)
+    lam = LAMBDA_PAPER
+    S = R.similarity_matrix(Vb, lam)
+    X = Vb * np.sqrt(np.asarray(lam))
+    for method in ("kmeans", "dbscan", "optics"):
+        with Timer() as t:
+            dis = {}
+            for k in range(2, 7):
+                if method == "kmeans":
+                    lab, _ = C.kmeans(X, k, seed=3, restarts=1)
+                elif method == "dbscan":
+                    lab = C.dbscan_at_k(X, k)
+                else:
+                    lab = C.optics_at_k(X, k)
+                dis[k] = round(C.dunn_index(S, lab), 4) if lab is not None else None
+        best = max((v, k) for k, v in dis.items() if v is not None)[1]
+        rows.append((f"table2/{method}", t.us / 5,
+                     f"best_k={best};DI={dis}"))
+    return rows
+
+
+# ----------------------------------------------------------- Table IV
+def bench_table4_normalization():
+    """Resource-vector types → optimal k + global accuracy."""
+    rows = []
+    for tag, lam, norm in [("unnormalized", LAMBDA_EQUAL, False),
+                           ("norm_equal", LAMBDA_EQUAL, True),
+                           ("norm_paper", LAMBDA_PAPER, True)]:
+        parts, cdata, testb, fam, classes, _ = setup_fl()
+        with Timer() as t:
+            eng, res = run_fedrac(parts, cdata, testb, fam, classes,
+                                  lam=lam, normalize=norm, compact_to=4)
+        rows.append((f"table4/{tag}", t.us / ROUNDS,
+                     f"k={eng.k_optimal};m={eng.m};"
+                     f"global_acc={res.global_acc:.4f}"))
+    return rows
+
+
+# ----------------------------------------------------------- Table V
+def bench_table5_compaction():
+    rows = []
+    for m in (5, 4, 3):
+        parts, cdata, testb, fam, classes, _ = setup_fl()
+        with Timer() as t:
+            eng, res = run_fedrac(parts, cdata, testb, fam, classes,
+                                  compact_to=m)
+        accs = ";".join(f"C{l + 1}={res.final_acc.get(l, float('nan')):.3f}"
+                        for l in range(eng.m))
+        rows.append((f"table5/m={m}", t.us / ROUNDS,
+                     f"global={res.global_acc:.4f};{accs}"))
+    return rows
+
+
+# ----------------------------------------------------------- Fig 2 (+ A1-A4)
+def _loss_fn(params, batch):
+    logits = cnn.forward(params, batch["x"])
+    lse = jax.nn.logsumexp(logits, -1)
+    picked = jnp.take_along_axis(logits, batch["y"][:, None], -1)[:, 0]
+    return jnp.mean(lse - picked), logits
+
+
+def bench_fig2_convergence(datasets=("synth-mnist", "synth-har")):
+    rows = []
+    for dsname in datasets:
+        parts, cdata, testb, fam, classes, _ = setup_fl(dsname)
+        with Timer() as t:
+            eng, res = run_fedrac(parts, cdata, testb, fam, classes)
+        curve0 = [round(a, 3) for a in res.history[0]]
+        rows.append((f"fig2/{dsname}/fedrac", t.us / ROUNDS,
+                     f"global={res.global_acc:.4f};master_curve={curve0}"))
+        cfg = bl.BaselineConfig(rounds=ROUNDS, steps_per_round=3, lr=0.08,
+                                seed=3)
+        # baselines use the smallest slave model so all 40 participate
+        init = cnn.init_params(jax.random.PRNGKey(0), in_channels=1,
+                               classes=classes, base_width=0.125 * 0.25)
+        for name, fn in [("fedavg", bl.fedavg), ("fedprox", bl.fedprox)]:
+            with Timer() as t:
+                _, hist = fn(_loss_fn, init, parts, cdata, testb, cfg)
+            rows.append((f"fig2/{dsname}/{name}", t.us / ROUNDS,
+                         f"final={hist[-1]:.4f};curve={[round(a,3) for a in hist]}"))
+        with Timer() as t:
+            _, hist = bl.oort(_loss_fn, init, parts, cdata, testb, cfg,
+                              flops_per_sample=1e6, model_bytes=2e5)
+        rows.append((f"fig2/{dsname}/oort", t.us / ROUNDS,
+                     f"final={hist[-1]:.4f}"))
+        levels = {p.pid: min(2, int(3 * i / len(parts)))
+                  for i, p in enumerate(parts)}
+        with Timer() as t:
+            _, hist = bl.heterofl(parts, cdata, levels, testb, cfg,
+                                  in_channels=1, classes=classes, levels=3,
+                                  base_width=0.125)
+        rows.append((f"fig2/{dsname}/heterofl", t.us / ROUNDS,
+                     f"final={hist[-1]:.4f}"))
+    return rows
+
+
+# ----------------------------------------------------------- Fig 3
+def bench_fig3_masterslave():
+    rows = []
+    for use_kd in (True, False):
+        parts, cdata, testb, fam, classes, _ = setup_fl()
+        with Timer() as t:
+            eng, res = run_fedrac(parts, cdata, testb, fam, classes,
+                                  compact_to=4, use_kd=use_kd)
+        accs = ";".join(f"C{l + 1}={res.final_acc.get(l, float('nan')):.3f}"
+                        for l in range(eng.m))
+        rows.append((f"fig3/{'kd' if use_kd else 'no_kd'}", t.us / ROUNDS,
+                     accs))
+    return rows
+
+
+# ----------------------------------------------------------- Table VI
+def bench_table6_rounds_to_reach(target=0.55):
+    rows = []
+    for use_kd in (True, False):
+        parts, cdata, testb, fam, classes, _ = setup_fl()
+        with Timer() as t:
+            eng, res = run_fedrac(parts, cdata, testb, fam, classes,
+                                  rounds=12, compact_to=4, use_kd=use_kd)
+        per = {f"C{l + 1}": rounds_to_reach(res.history.get(l, []), target)
+               for l in range(eng.m)}
+        r1 = per.get("C1")
+        slaves = [v for k, v in per.items() if k != "C1" and v]
+        trr = (r1 or 12) + (max(slaves) if slaves else 12)
+        rows.append((f"table6/{'kd' if use_kd else 'no_kd'}", t.us / 12,
+                     f"target={target};TRR={trr};per_cluster={per}"))
+    return rows
+
+
+# ----------------------------------------------------------- Fig 4
+def bench_fig4_leave_one_out():
+    from repro.data.sampler import leave_one_out
+    rows = []
+    for use_kd in (True, False):
+        parts, cdata, testb, fam, classes, train = setup_fl()
+        # drop the most frequent class from every client's training data
+        drop = int(np.bincount(train.y).argmax())
+        cdata2 = []
+        for d in cdata:
+            x, y = leave_one_out(d["x"], d["y"], drop)
+            if len(y) < 8:
+                x, y = d["x"], d["y"]
+            cdata2.append({"x": x, "y": y})
+        with Timer() as t:
+            eng, res = run_fedrac(parts, cdata2, testb, fam, classes,
+                                  compact_to=4, use_kd=use_kd)
+        rows.append((f"fig4/{'kd' if use_kd else 'no_kd'}", t.us / ROUNDS,
+                     f"dropped={drop};global={res.global_acc:.4f}"))
+    return rows
+
+
+# ----------------------------------------------------------- Table VII
+def bench_table7_learning_rate():
+    rows = []
+    for lr in (0.002, 0.02, 0.08, 0.2):
+        parts, cdata, testb, fam, classes, _ = setup_fl()
+        with Timer() as t:
+            eng, res = run_fedrac(parts, cdata, testb, fam, classes,
+                                  rounds=5, compact_to=4, lr=lr)
+        rows.append((f"table7/lr={lr}", t.us / 5,
+                     f"master_acc={res.final_acc.get(0, float('nan')):.4f}"))
+    return rows

@@ -1,0 +1,62 @@
+"""Benchmark harness — one entry per paper table/figure + kernels + roofline.
+
+  PYTHONPATH=src python -m benchmarks.run [--only substring] [--fast]
+
+Prints ``name,us_per_call,derived`` CSV (one row per measurement).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def _suites(fast: bool):
+    from benchmarks import bench_kernels, bench_mar, bench_roofline, bench_tables
+    suites = [
+        ("table2", bench_tables.bench_table2_clustering),
+        ("mar", bench_mar.bench_mar),
+        ("kernels/flash", bench_kernels.bench_flash),
+        ("kernels/distill", bench_kernels.bench_distill),
+        ("kernels/fedagg", bench_kernels.bench_fedagg),
+        ("kernels/kd", bench_kernels.bench_kd_jnp_vs_kernel_math),
+        ("roofline", bench_roofline.bench_roofline),
+    ]
+    if not fast:
+        suites += [
+            ("table4", bench_tables.bench_table4_normalization),
+            ("table5", bench_tables.bench_table5_compaction),
+            ("fig2", bench_tables.bench_fig2_convergence),
+            ("fig3", bench_tables.bench_fig3_masterslave),
+            ("table6", bench_tables.bench_table6_rounds_to_reach),
+            ("fig4", bench_tables.bench_fig4_leave_one_out),
+            ("table7", bench_tables.bench_table7_learning_rate),
+        ]
+    return suites
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    ap.add_argument("--fast", action="store_true",
+                    help="skip the FL-training table benchmarks")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    t_start = time.time()
+    for name, fn in _suites(args.fast):
+        if args.only and args.only not in name:
+            continue
+        try:
+            for row, us, derived in fn():
+                print(f"{row},{us:.1f},{str(derived).replace(',', ';')}",
+                      flush=True)
+        except Exception:
+            print(f"{name},0.0,HARNESS_ERROR:"
+                  f"{traceback.format_exc().splitlines()[-1]}", flush=True)
+    print(f"# total wall: {time.time() - t_start:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

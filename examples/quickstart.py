@@ -1,0 +1,45 @@
+"""Quickstart: Fed-RAC in ~60 lines on the public API.
+
+Clusters the paper's 40 real participants by resources (Procedure 1),
+compacts, assigns (Procedure 2), trains the master cluster by FedAvg and the
+slaves under master KD, then prints per-cluster accuracy.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax.numpy as jnp
+
+from repro.core import server as srv
+from repro.core.families import cnn_family
+from repro.core.resources import TABLE_III, participants_from_matrix
+from repro.data.partition import dirichlet_partition
+from repro.data.synthetic import make_classification, train_test_split
+
+
+def main():
+    # 1. synthetic federated dataset, non-iid across 40 participants
+    ds = make_classification("synth-mnist", 2400, seed=0)
+    train, test = train_test_split(ds)
+    idx = dirichlet_partition(train.y, 40, alpha=1.0, seed=0)
+    parts = participants_from_matrix(TABLE_III, n_data=[len(p) for p in idx])
+    client_data = [{"x": train.x[p], "y": train.y[p]} for p in idx]
+
+    # 2. the model family: the paper's CNN, α-compressed per cluster level
+    family = cnn_family(classes=10, in_channels=1)
+
+    # 3. Fed-RAC end to end
+    cfg = srv.FLConfig(rounds=8, compact_to=4, seed=3)
+    engine = srv.FedRAC(parts, client_data, family, cfg, classes=10).setup()
+    print(f"optimal k = {engine.k_optimal} (Dunn indices: "
+          f"{ {k: round(v, 3) for k, v in engine.di_values.items()} })")
+    print(f"compacted to m = {engine.m} clusters; members: "
+          f"{ {l: len(v) for l, v in engine.assignment.members.items()} }")
+
+    result = engine.train({"x": jnp.asarray(test.x), "y": jnp.asarray(test.y)})
+    for lvl in range(engine.m):
+        print(f"  cluster C{lvl + 1}: acc = "
+              f"{result.final_acc.get(lvl, float('nan')):.3f}")
+    print(f"global accuracy = {result.global_acc:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""msgpack-based pytree checkpointing (offline container: no orbax).
+
+Layout: <dir>/step_<n>.ckpt — a msgpack map {path: {dtype, shape, data}}
+using tree paths as stable keys, so restore does not need the live pytree
+(but can verify against one).
+"""
+from __future__ import annotations
+
+import os
+import re
+
+import jax
+import msgpack
+import numpy as np
+
+
+def _path_str(path) -> str:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+        else:
+            out.append(str(p))
+    return "/".join(out)
+
+
+def save(path: str, tree) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    payload = {}
+    for p, leaf in flat:
+        arr = np.asarray(leaf)
+        payload[_path_str(p)] = {
+            "dtype": str(arr.dtype), "shape": list(arr.shape),
+            "data": arr.tobytes()}
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+    os.replace(tmp, path)
+
+
+def restore(path: str, like=None):
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    arrays = {k: np.frombuffer(v["data"], dtype=v["dtype"]).reshape(v["shape"])
+              for k, v in payload.items()}
+    if like is None:
+        return arrays
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for p, leaf in flat:
+        key = _path_str(p)
+        assert key in arrays, f"checkpoint missing {key}"
+        a = arrays[key]
+        assert list(a.shape) == list(np.shape(leaf)), (key, a.shape, np.shape(leaf))
+        leaves.append(a.astype(np.asarray(leaf).dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def save_step(ckpt_dir: str, step: int, tree, keep: int = 3) -> str:
+    path = os.path.join(ckpt_dir, f"step_{step:08d}.ckpt")
+    save(path, tree)
+    ckpts = sorted(f for f in os.listdir(ckpt_dir) if re.match(r"step_\d+\.ckpt$", f))
+    for old in ckpts[:-keep]:
+        os.remove(os.path.join(ckpt_dir, old))
+    return path
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(ckpt_dir)
+             if (m := re.match(r"step_(\d+)\.ckpt$", f))]
+    return max(steps) if steps else None

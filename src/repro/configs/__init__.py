@@ -1,0 +1,6 @@
+from repro.configs.base import (INPUT_SHAPES, InputShape, ModelConfig,
+                                TrainConfig, pad_vocab)
+from repro.configs.archs import ARCHS, get_config, list_archs, smoke_variant
+
+__all__ = ["INPUT_SHAPES", "InputShape", "ModelConfig", "TrainConfig",
+           "pad_vocab", "ARCHS", "get_config", "list_archs", "smoke_variant"]

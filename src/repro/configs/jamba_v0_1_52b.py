@@ -1,0 +1,4 @@
+"""Selectable config for --arch (see archs.py for the cited source)."""
+from repro.configs.archs import JAMBA_52B as CONFIG, smoke_variant
+
+SMOKE = smoke_variant(CONFIG)

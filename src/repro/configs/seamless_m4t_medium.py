@@ -1,0 +1,4 @@
+"""Selectable config for --arch (see archs.py for the cited source)."""
+from repro.configs.archs import SEAMLESS_M4T_MED as CONFIG, smoke_variant
+
+SMOKE = smoke_variant(CONFIG)

@@ -1,0 +1,3 @@
+from repro.core import (aggregation, assignment, baselines, client, clustering,
+                        compaction, cost_model, distill, resources, rounds,
+                        scaling, server)

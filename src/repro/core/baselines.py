@@ -1,0 +1,155 @@
+"""Baselines re-implemented for fair comparison (§V-B):
+
+  * FedAvg  [McMahan et al., AISTATS'17] — single global model sized for the
+    weakest participant (the paper runs the smallest slave model on all 40).
+  * FedProx [Li et al., MLSys'20] — FedAvg + proximal term μ/2·||w - w_g||².
+  * Oort    [Lai et al., OSDI'21] — guided participant selection by
+    statistical utility × system-speed penalty.
+  * HeteroFL[Diao et al., ICLR'21] — width-sliced submodels per client
+    capacity; server aggregates overlapping slices.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aggregation, cost_model
+from repro.core.client import local_update
+from repro.core.resources import Participant
+from repro.data.sampler import sample_batches
+from repro.models import cnn
+
+
+@dataclass
+class BaselineConfig:
+    rounds: int = 20
+    lr: float = 0.05
+    local_batch: int = 16
+    steps_per_round: int = 4
+    seed: int = 0
+    prox_mu: float = 0.001       # FedProx
+    oort_frac: float = 0.5       # fraction of clients per round
+    oort_alpha: float = 2.0      # system-utility exponent
+    alpha: float = 0.5           # HeteroFL width ratio per level
+
+
+def _eval(loss_fn, params, test):
+    _, logits = loss_fn(params, test)
+    return float(jnp.mean((jnp.argmax(logits, -1) == test["y"])))
+
+
+def _run_rounds(loss_fn, params, parts, client_data, test, cfg: BaselineConfig,
+                *, prox_mu: float = 0.0, select=None):
+    upd = jax.jit(lambda p, b, g: local_update(
+        loss_fn, p, b, cfg.lr, prox_mu=prox_mu, global_params=g))
+    history = []
+    losses = {p.pid: 1.0 for p in parts}
+    for r in range(cfg.rounds):
+        chosen = select(parts, losses, r) if select else parts
+        stack, ws = [], []
+        for p in chosen:
+            d = client_data[p.pid]
+            batches = jax.tree.map(jnp.asarray, sample_batches(
+                d["x"], d["y"], cfg.local_batch, cfg.steps_per_round,
+                seed=cfg.seed + 977 * p.pid + r))
+            p_new, l = upd(params, batches, params)
+            losses[p.pid] = float(l)
+            stack.append(p_new)
+            ws.append(len(d["x"]))
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *stack)
+        params = aggregation.aggregate(stacked, aggregation.normalized_weights(ws))
+        history.append(_eval(loss_fn, params, test))
+    return params, history
+
+
+def fedavg(loss_fn, init_params, parts, client_data, test, cfg: BaselineConfig):
+    return _run_rounds(loss_fn, init_params, parts, client_data, test, cfg)
+
+
+def fedprox(loss_fn, init_params, parts, client_data, test, cfg: BaselineConfig):
+    return _run_rounds(loss_fn, init_params, parts, client_data, test, cfg,
+                       prox_mu=cfg.prox_mu)
+
+
+def oort(loss_fn, init_params, parts, client_data, test, cfg: BaselineConfig,
+         flops_per_sample: float, model_bytes: float, mar: float = 60.0):
+    k = max(1, int(len(parts) * cfg.oort_frac))
+
+    def select(ps, losses, r):
+        utils = []
+        for p in ps:
+            stat = len(client_data[p.pid]["x"]) ** 0.5 * (losses[p.pid] + 1e-3)
+            t = cost_model.round_time(p, flops_per_sample, model_bytes, 1,
+                                      cfg.local_batch * cfg.steps_per_round)
+            sys_u = 1.0 if t <= mar else (mar / t) ** cfg.oort_alpha
+            utils.append(stat * sys_u)
+        order = np.argsort(-np.asarray(utils))
+        # ε-greedy exploration as in Oort
+        rng = np.random.default_rng(cfg.seed + r)
+        n_exploit = max(1, int(0.8 * k))
+        chosen = list(order[:n_exploit])
+        rest = [i for i in order[n_exploit:]]
+        if rest and k - n_exploit > 0:
+            chosen += list(rng.choice(rest, min(k - n_exploit, len(rest)),
+                                      replace=False))
+        return [ps[i] for i in chosen]
+
+    return _run_rounds(loss_fn, init_params, parts, client_data, test, cfg,
+                       select=select)
+
+
+# ------------------------------------------------------------------ HeteroFL
+def _slice_like(full, small):
+    """Take the leading-corner slice of ``full`` matching ``small``'s shape."""
+    slices = tuple(slice(0, s) for s in small.shape)
+    return full[slices]
+
+
+def heterofl(parts, client_data, client_levels, test, cfg: BaselineConfig,
+             *, in_channels: int, classes: int, levels: int,
+             base_width: float = 0.125):
+    """CNN-family HeteroFL: client at level ℓ trains the α^ℓ-width slice."""
+    key = jax.random.PRNGKey(cfg.seed)
+    global_params = cnn.init_params(key, in_channels=in_channels,
+                                    classes=classes, alpha=1.0, level=0,
+                                    base_width=base_width)
+    sub_templates = [cnn.init_params(key, in_channels=in_channels,
+                                     classes=classes, alpha=cfg.alpha, level=l,
+                                     base_width=base_width)
+                     for l in range(levels)]
+    loss_fn = jax.tree_util.Partial(lambda p, b: (cnn.loss_fn(p, b)[0],
+                                                  cnn.forward(p, b["x"])))
+    upds = [jax.jit(lambda p, b: local_update(loss_fn, p, b, cfg.lr))
+            for _ in range(levels)]
+
+    history = []
+    for r in range(cfg.rounds):
+        acc = jax.tree.map(lambda x: np.zeros_like(np.asarray(x)), global_params)
+        cnt = jax.tree.map(lambda x: np.zeros(np.asarray(x).shape), global_params)
+        for p in parts:
+            lvl = client_levels[p.pid]
+            sub = jax.tree.map(_slice_like, global_params, sub_templates[lvl])
+            d = client_data[p.pid]
+            batches = jax.tree.map(jnp.asarray, sample_batches(
+                d["x"], d["y"], cfg.local_batch, cfg.steps_per_round,
+                seed=cfg.seed + 977 * p.pid + r))
+            sub_new, _ = upds[lvl](sub, batches)
+            flat_acc = jax.tree.leaves(acc)
+            flat_cnt = jax.tree.leaves(cnt)
+            for i, leaf in enumerate(jax.tree.leaves(sub_new)):
+                a = np.asarray(leaf)
+                sl = tuple(slice(0, s) for s in a.shape)
+                flat_acc[i][sl] += a
+                flat_cnt[i][sl] += 1
+        tdef = jax.tree.structure(global_params)
+        flat_g = jax.tree.leaves(global_params)
+        new_leaves = []
+        for g, a, c in zip(flat_g, jax.tree.leaves(acc), jax.tree.leaves(cnt)):
+            g_np = np.asarray(g)
+            new_leaves.append(jnp.asarray(np.where(c > 0, a / np.maximum(c, 1), g_np)))
+        global_params = jax.tree_util.tree_unflatten(tdef, new_leaves)
+        history.append(_eval(loss_fn, global_params, test))
+    return global_params, history

@@ -1,0 +1,215 @@
+"""Resource-aware clustering: jnp k-means + Dunn index + Procedure 1,
+plus DBSCAN / OPTICS alternatives evaluated in the paper's Table II.
+
+k-means runs in jnp (jit-able, multi-restart); Dunn uses the λ-weighted
+similarity matrix per Eq. 3-5.  DBSCAN/OPTICS are one-shot server-side
+setup computations and run in numpy.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.resources import similarity_matrix, unit_normalize
+
+
+# ------------------------------------------------------------------ k-means
+def _kmeans_once(X, k, key, iters=50):
+    n = X.shape[0]
+    idx = jax.random.choice(key, n, (k,), replace=False)
+    centers = X[idx]
+
+    def step(centers, _):
+        d = jnp.linalg.norm(X[:, None] - centers[None], axis=-1)
+        lab = jnp.argmin(d, axis=1)
+        oh = jax.nn.one_hot(lab, k)                       # (n,k)
+        cnt = oh.sum(0)
+        new = (oh.T @ X) / jnp.maximum(cnt, 1)[:, None]
+        new = jnp.where(cnt[:, None] > 0, new, centers)
+        return new, None
+
+    centers, _ = jax.lax.scan(step, centers, None, length=iters)
+    d = jnp.linalg.norm(X[:, None] - centers[None], axis=-1)
+    lab = jnp.argmin(d, axis=1)
+    inertia = jnp.sum(jnp.min(d, axis=1) ** 2)
+    return lab, centers, inertia
+
+
+def kmeans(X: np.ndarray, k: int, seed: int = 0, restarts: int = 8):
+    """Multi-restart Lloyd's; returns (labels, centers)."""
+    Xj = jnp.asarray(X)
+    keys = jax.random.split(jax.random.PRNGKey(seed), restarts)
+    labs, cents, inert = jax.vmap(lambda kk: _kmeans_once(Xj, k, kk))(keys)
+    best = int(jnp.argmin(inert))
+    return np.asarray(labs[best]), np.asarray(cents[best])
+
+
+# ------------------------------------------------------------------ Dunn
+def dunn_index(S: np.ndarray, labels: np.ndarray) -> float:
+    """Eq. 5: min over cluster pairs of dist(Cf,Cg) / max_f dia(Cf).
+
+    dist = min inter-cluster pairwise similarity-distance (Eq. 3);
+    dia  = max intra-cluster pairwise distance (Eq. 4).
+    """
+    ks = np.unique(labels)
+    if len(ks) < 2:
+        return 0.0
+    dia = 0.0
+    for f in ks:
+        m = labels == f
+        if m.sum() >= 2:
+            dia = max(dia, float(S[np.ix_(m, m)].max()))
+    if dia == 0.0:
+        return 0.0
+    dmin = np.inf
+    for i, f in enumerate(ks):
+        for g in ks[i + 1:]:
+            mf, mg = labels == f, labels == g
+            dmin = min(dmin, float(S[np.ix_(mf, mg)].min()))
+    return float(dmin / dia)
+
+
+@dataclass
+class ClusteringResult:
+    k: int
+    labels: np.ndarray
+    di_values: dict          # k -> Dunn index
+    normalized: np.ndarray   # the normalized resource matrix used
+
+
+def optimal_clusters(V: np.ndarray, lam=(1 / 3, 1 / 3, 1 / 3), *,
+                     normalize: bool = True, seed: int = 0,
+                     k_max: int | None = None, method: str = "kmeans",
+                     restarts: int = 8) -> ClusteringResult:
+    """Procedure 1: sweep k = 2..⌊√N⌋, pick argmax Dunn index."""
+    N = V.shape[0]
+    Vb = unit_normalize(V) if normalize else V.astype(np.float64)
+    # similarity uses λ-weights; k-means operates on √λ-scaled coords so its
+    # Euclidean metric matches S_ij exactly.
+    lam_a = np.asarray(lam)
+    Xw = Vb * np.sqrt(lam_a)
+    S = similarity_matrix(Vb, lam)
+    k_max = k_max or int(math.floor(math.sqrt(N)))
+    di, labs = {}, {}
+    for k in range(2, k_max + 1):
+        if method == "kmeans":
+            lab, _ = kmeans(Xw, k, seed=seed, restarts=restarts)
+        elif method == "dbscan":
+            lab = dbscan_at_k(Xw, k)
+        elif method == "optics":
+            lab = optics_at_k(Xw, k)
+        else:
+            raise ValueError(method)
+        di[k] = dunn_index(S, lab) if lab is not None else 0.0
+        labs[k] = lab
+    best = max(di, key=di.get)
+    return ClusteringResult(best, labs[best], di, Vb)
+
+
+def order_clusters_by_resources(V: np.ndarray, labels: np.ndarray) -> np.ndarray:
+    """Relabel clusters so C_0 has the HIGHEST mean resources (master first,
+    §IV-A2: clusters arranged in descending order of available resources)."""
+    ks = np.unique(labels)
+    score = np.array([V[labels == f].sum(axis=1).mean() for f in ks])
+    order = ks[np.argsort(-score)]
+    remap = {int(old): new for new, old in enumerate(order)}
+    return np.array([remap[int(l)] for l in labels])
+
+
+# ------------------------------------------------------------------ DBSCAN
+def dbscan(X: np.ndarray, eps: float, min_pts: int = 3) -> np.ndarray:
+    n = len(X)
+    D = np.linalg.norm(X[:, None] - X[None], axis=-1)
+    labels = np.full(n, -1)
+    cid = 0
+    for i in range(n):
+        if labels[i] != -1:
+            continue
+        nbrs = np.where(D[i] <= eps)[0]
+        if len(nbrs) < min_pts:
+            continue
+        labels[i] = cid
+        stack = list(nbrs)
+        while stack:
+            j = stack.pop()
+            if labels[j] == -1:
+                labels[j] = cid
+                nb2 = np.where(D[j] <= eps)[0]
+                if len(nb2) >= min_pts:
+                    stack.extend([q for q in nb2 if labels[q] == -1])
+        cid += 1
+    # assign noise points to nearest cluster (all participants must train)
+    if cid > 0:
+        for i in np.where(labels == -1)[0]:
+            labels[i] = labels[np.argmin(np.where(labels >= 0, D[i], np.inf))]
+    return labels
+
+
+def dbscan_at_k(X: np.ndarray, k: int, min_pts: int = 3):
+    """Binary-search eps to produce exactly k clusters (how the paper's
+    Table II evaluates DBSCAN at each k); None if unreachable."""
+    lo, hi = 1e-4, float(np.linalg.norm(X.max(0) - X.min(0))) + 1e-3
+    best = None
+    for _ in range(60):
+        mid = 0.5 * (lo + hi)
+        lab = dbscan(X, mid, min_pts)
+        kk = len(np.unique(lab))
+        if kk == k:
+            best = lab
+            break
+        if kk < k:      # too few clusters -> shrink eps
+            hi = mid
+        else:
+            lo = mid
+    return best
+
+
+# ------------------------------------------------------------------ OPTICS
+def optics_order(X: np.ndarray, min_pts: int = 3):
+    n = len(X)
+    D = np.linalg.norm(X[:, None] - X[None], axis=-1)
+    core = np.sort(D, axis=1)[:, min_pts - 1]
+    reach = np.full(n, np.inf)
+    seen = np.zeros(n, bool)
+    order = []
+    for start in range(n):
+        if seen[start]:
+            continue
+        seeds = {start: np.inf}
+        while seeds:
+            i = min(seeds, key=seeds.get)
+            del seeds[i]
+            if seen[i]:
+                continue
+            seen[i] = True
+            order.append(i)
+            for j in range(n):
+                if seen[j]:
+                    continue
+                nr = max(core[i], D[i, j])
+                if nr < reach[j]:
+                    reach[j] = nr
+                    seeds[j] = nr
+    return np.array(order), reach
+
+
+def optics_at_k(X: np.ndarray, k: int, min_pts: int = 3):
+    """Cut the OPTICS reachability plot at the (k-1) largest peaks."""
+    order, reach = optics_order(X, min_pts)
+    r = reach[order]
+    r[0] = 0.0
+    if k <= 1:
+        return np.zeros(len(X), int)
+    cut_positions = np.sort(np.argsort(-r[1:])[:k - 1] + 1)
+    labels = np.zeros(len(X), int)
+    cid = 0
+    pos = 0
+    for c in list(cut_positions) + [len(X)]:
+        labels[order[pos:c]] = cid
+        cid += 1
+        pos = c
+    return np.clip(labels, 0, k - 1)

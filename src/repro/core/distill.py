@@ -1,0 +1,49 @@
+"""Master-slave knowledge distillation (§IV-C).
+
+The master cluster's trained model M_1 guides every slave cluster's training:
+L = α·CE(student, labels) + (1-α)·T²·KL(softmax(teacher/T) ‖ softmax(student/T)).
+
+The pure-jnp path is the oracle; ``use_kernel=True`` routes through the fused
+Pallas kernel (kernels/distill) which streams over vocab blocks — the KD loss
+over a 150k vocab is the technique's TPU hot spot (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def kl_teacher_student(teacher_logits, student_logits, T: float = 1.0,
+                       valid_mask=None):
+    """KL(p_T ‖ p_S) per example, temperature-scaled logits in fp32."""
+    t = teacher_logits.astype(jnp.float32) / T
+    s = student_logits.astype(jnp.float32) / T
+    if valid_mask is not None:
+        neg = jnp.float32(-2.0 ** 30)
+        t = jnp.where(valid_mask, t, neg)
+        s = jnp.where(valid_mask, s, neg)
+    t_lse = jax.nn.logsumexp(t, axis=-1, keepdims=True)
+    s_lse = jax.nn.logsumexp(s, axis=-1, keepdims=True)
+    p_t = jnp.exp(t - t_lse)
+    return jnp.sum(p_t * ((t - t_lse) - (s - s_lse)), axis=-1)
+
+
+def ce_loss(logits, labels, valid_mask=None):
+    lg = logits.astype(jnp.float32)
+    if valid_mask is not None:
+        lg = jnp.where(valid_mask, lg, jnp.float32(-2.0 ** 30))
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    picked = jnp.take_along_axis(lg, labels[..., None], axis=-1)[..., 0]
+    return lse - picked
+
+
+def kd_loss(student_logits, labels, teacher_logits, *, T: float = 2.0,
+            alpha: float = 0.3, valid_mask=None, use_kernel: bool = False):
+    """Per-example Hinton-KD loss (mean-reduced)."""
+    if use_kernel:
+        from repro.kernels.distill import ops as distill_ops
+        return distill_ops.kd_loss(student_logits, labels, teacher_logits,
+                                   T=T, alpha=alpha)
+    ce = ce_loss(student_logits, labels, valid_mask)
+    kl = kl_teacher_student(teacher_logits, student_logits, T, valid_mask)
+    return jnp.mean(alpha * ce + (1.0 - alpha) * (T ** 2) * kl)

@@ -1,0 +1,70 @@
+"""Ready-made FLModelFamily adapters: the paper's CNN and a tiny LM."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.server import FLModelFamily
+from repro.models import cnn
+from repro.models import transformer
+from repro.configs.base import ModelConfig
+from repro.core.scaling import compress_config, model_bytes, param_count
+
+
+def cnn_family(*, classes: int = 10, in_channels: int = 1, alpha: float = 0.5,
+               base_width: float = 0.25, input_hw: int = 14) -> FLModelFamily:
+    def init(key, level):
+        return cnn.init_params(key, in_channels=in_channels, classes=classes,
+                               alpha=alpha, level=level, base_width=base_width)
+
+    def loss_and_logits(level, params, batch):
+        logits = cnn.forward(params, batch["x"])
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(logits, batch["y"][:, None], axis=-1)[:, 0]
+        return jnp.mean(lse - picked), logits
+
+    def mb(level):
+        p = cnn.init_params(jax.random.PRNGKey(0), in_channels=in_channels,
+                            classes=classes, alpha=alpha, level=level,
+                            base_width=base_width)
+        return cnn.param_count(p) * 4.0
+
+    def flops(level):
+        fs = cnn.filters(alpha, level, base_width)
+        hw = input_hw ** 2
+        total, cin, cur = 0.0, in_channels, hw
+        for i, f in enumerate(fs):
+            total += cur * cin * f * 9 * 2
+            cin = f
+            if i % 2 == 1:
+                cur = max(1, cur // 4)
+        return total
+
+    return FLModelFamily(init=init, loss_and_logits=loss_and_logits,
+                         model_bytes=mb, flops_per_sample=flops)
+
+
+def lm_family(base_cfg: ModelConfig, alpha: float = 0.5) -> FLModelFamily:
+    """Federated LM family: per-cluster α-compressed configs (same vocab →
+    KD-compatible logits).  batch = {"tokens": (B,S), "y": (B,S) next ids}."""
+    def cfg_at(level):
+        return compress_config(base_cfg, alpha, level)
+
+    def init(key, level):
+        return transformer.init_params(cfg_at(level), key)
+
+    def loss_and_logits(level, params, batch):
+        cfg = cfg_at(level)
+        logits, aux = transformer.forward(cfg, params, batch["tokens"])
+        lg = logits[:, :-1].astype(jnp.float32)
+        lbl = batch["tokens"][:, 1:]
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        picked = jnp.take_along_axis(lg, lbl[..., None], axis=-1)[..., 0]
+        ce = jnp.mean(lse - picked) + cfg.router_aux_coef * aux
+        # logits for KD: last position distribution ((B,V) to match CNN API)
+        return ce, logits[:, -1]
+
+    return FLModelFamily(
+        init=init, loss_and_logits=loss_and_logits,
+        model_bytes=lambda l: float(model_bytes(cfg_at(l))),
+        flops_per_sample=lambda l: 6.0 * param_count(cfg_at(l)))

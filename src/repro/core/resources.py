@@ -1,0 +1,74 @@
+"""Participant resource vectors, unit normalization, λ-weighted similarity (§IV-A).
+
+Includes the paper's exact data: Table I (10-participant example) and
+Table III (the 40 real participants used in §V-F1) — these anchor the
+reproduction tests.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Sequence
+
+import numpy as np
+
+
+@dataclass
+class Participant:
+    pid: int
+    s: float        # processing speed (GHz-equivalents)
+    r: float        # transmission rate (Mbps)
+    a: float        # available memory (GB)
+    n_data: int = 0
+
+    @property
+    def vector(self):
+        return np.array([self.s, self.r, self.a], dtype=np.float64)
+
+
+def resource_matrix(parts: Sequence[Participant]) -> np.ndarray:
+    return np.stack([p.vector for p in parts])
+
+
+def unit_normalize(V: np.ndarray) -> np.ndarray:
+    """Per-column min-max to [0,1]; constant columns map to 0 (paper §IV-A)."""
+    lo, hi = V.min(axis=0), V.max(axis=0)
+    span = np.where(hi > lo, hi - lo, 1.0)
+    return (V - lo) / span
+
+
+def similarity_matrix(Vbar: np.ndarray, lam=(1 / 3, 1 / 3, 1 / 3)) -> np.ndarray:
+    """S_ij = sqrt(Σ_d λ_d (v_id - v_jd)^2) — λ-weighted Euclidean distance."""
+    lam = np.asarray(lam, dtype=np.float64)
+    assert abs(lam.sum() - 1.0) < 1e-9, "λ must sum to 1 (paper constraint)"
+    diff = Vbar[:, None, :] - Vbar[None, :, :]
+    return np.sqrt(np.einsum("ijd,d->ij", diff ** 2, lam))
+
+
+# ----------------------------------------------------------------- paper data
+# Table I — 10-participant illustration (Example 2; optimal k = 3).
+TABLE_I = np.array([
+    [100, 10, 20], [50, 15, 30], [75, 8, 25], [125, 10, 15], [150, 7, 10],
+    [110, 10, 25], [125, 15, 20], [80, 10, 10], [75, 15, 20], [50, 10, 30],
+], dtype=np.float64)
+
+# Table III — 40 participants [processing GHz, transmission Mbps, memory GB].
+TABLE_III = np.array([
+    [1.6, 10.88, 8], [2.8, 4.1, 3], [1.1, 1.13, 6], [1.6, 11.45, 3],
+    [3.2, 8.9, 3], [2.2, 2, 4], [3.1, 8.7, 1], [1.8, 60, 3],
+    [2.7, 8.89, 3], [1.4, 34.5, 8], [1.6, 12.54, 6], [0.8, 1.2, 6],
+    [1.3, 28.41, 6], [1.3, 21.9, 3], [3.1, 25.99, 6], [3.2, 19.43, 4],
+    [1.0, 20.98, 3], [1.6, 30, 3], [1.0, 12, 2], [2.7, 10, 6],
+    [1.6, 40, 1], [1.1, 11.4, 6], [2.5, 25, 6], [2.2, 30, 4],
+    [1.6, 9.62, 6], [2.2, 23.27, 6], [1.5, 49.79, 6], [1.7, 37.65, 6],
+    [3.1, 15.71, 6], [2.6, 3, 6], [3.1, 18.04, 6], [2.5, 44.13, 6],
+    [2.3, 6.5, 6], [2.1, 60.21, 6], [2.1, 61.3, 8], [3.2, 19, 6],
+    [2.7, 32.05, 6], [2.9, 6.52, 6], [0.8, 38.8, 6], [2.1, 32, 6],
+], dtype=np.float64)
+
+LAMBDA_EQUAL = (1 / 3, 1 / 3, 1 / 3)
+LAMBDA_PAPER = (0.4, 0.4, 0.2)      # FastDeepIoT-derived weighting [33]
+
+
+def participants_from_matrix(V: np.ndarray, n_data=None) -> list[Participant]:
+    n_data = n_data if n_data is not None else [100] * len(V)
+    return [Participant(i, *V[i], n_data=int(n_data[i])) for i in range(len(V))]

@@ -1,0 +1,214 @@
+"""Fed-RAC orchestrator (Algorithm 1): cluster → compact → assign →
+train master by FedAvg → train slaves under master KD.
+
+Model-family-agnostic via ``FLModelFamily`` (the paper's CNN and the LM
+backbones both plug in); per-cluster client training runs through
+``core.client`` so on a pod the whole cluster is one vmap/pjit program.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aggregation, assignment as asg, clustering, compaction
+from repro.core import cost_model, rounds as rnd
+from repro.core.client import local_update
+from repro.core.resources import (LAMBDA_PAPER, Participant, resource_matrix,
+                                  unit_normalize)
+from repro.data.sampler import class_balanced_batches, sample_batches
+
+
+@dataclass
+class FLModelFamily:
+    """init(key, level) -> params; loss_and_logits(level, params, batch)."""
+    init: Callable
+    loss_and_logits: Callable
+    model_bytes: Callable          # level -> bytes
+    flops_per_sample: Callable     # level -> flops
+
+
+@dataclass
+class FLConfig:
+    alpha: float = 0.5
+    kd_T: float = 2.0
+    kd_alpha: float = 0.3
+    E: int = 2
+    local_batch: int = 16
+    steps_per_round: int = 4
+    lr: float = 0.05
+    lam: tuple = LAMBDA_PAPER
+    q_target: float = 0.05
+    delta: float | None = None
+    theta: float = 100.0
+    # MAR time budget; None → auto-calibrate so the master-cluster budget
+    # admits roughly the fastest ~40% of participants (the paper fixes MAR
+    # externally; auto mode keeps experiments scale-free).
+    mar: float | None = None
+    kappa: float = 0.7
+    compact_to: int | None = None
+    rounds: int = 20
+    seed: int = 0
+    class_balanced: bool = True
+    use_kd: bool = True
+    consts: rnd.ConvergenceConstants = field(default_factory=rnd.ConvergenceConstants)
+
+
+@dataclass
+class FedRACResult:
+    k_optimal: int
+    m: int
+    di_values: dict
+    labels: np.ndarray
+    assignment: asg.Assignment
+    history: dict            # level -> [acc per round]
+    final_acc: dict          # level -> acc
+    global_acc: float
+    rounds_used: dict
+
+
+class FedRAC:
+    def __init__(self, parts: list[Participant], client_data: list[dict],
+                 family: FLModelFamily, cfg: FLConfig, classes: int):
+        self.parts = parts
+        self.client_data = client_data        # per pid: {"x": ..., "y": ...}
+        self.family = family
+        self.cfg = cfg
+        self.classes = classes
+
+    # ------------------------------------------------------------ setup
+    def setup(self):
+        cfg = self.cfg
+        V = resource_matrix(self.parts)
+        res = clustering.optimal_clusters(V, cfg.lam, seed=cfg.seed)
+        labels = clustering.order_clusters_by_resources(res.normalized, res.labels)
+        self.k_optimal = res.k
+        self.di_values = res.di_values
+        if cfg.compact_to is not None and cfg.compact_to < res.k:
+            labels = compaction.compact(labels, res.normalized, cfg.compact_to)
+        self.labels = labels
+        self.m = len(np.unique(labels))
+        sizes = [(self.family.model_bytes(l), self.family.flops_per_sample(l))
+                 for l in range(self.m)]
+        mar = cfg.mar
+        if mar is None:
+            t_master = np.array([cost_model.round_time(
+                p, sizes[0][1], sizes[0][0], cfg.E) for p in self.parts])
+            mar = float(np.percentile(t_master, 40)) / (cfg.kappa ** (self.m - 1))
+        self.mar = mar
+        self.specs = asg.build_cluster_specs(
+            sizes, cfg.consts, E=cfg.E, q_target=cfg.q_target, delta=cfg.delta,
+            theta=cfg.theta, mar=mar, kappa=cfg.kappa,
+            batch_size=cfg.local_batch)
+        self.assignment = asg.assign(self.parts, self.specs, cfg.consts, cfg.lr)
+        return self
+
+    def update_resources(self, pid: int, *, s: float | None = None,
+                         r: float | None = None, a: float | None = None):
+        """§IV-A dynamic resources: update a participant's (s, r, a) and
+        re-run the Procedure-2 placement — the participant upgrades or
+        downgrades clusters in place.  Returns (old_level, new_level)."""
+        p = self.parts[pid]
+        if s is not None:
+            p.s = s
+        if r is not None:
+            p.r = r
+        if a is not None:
+            p.a = a
+        return asg.reassign(p, self.assignment, self.specs,
+                            self.cfg.consts, self.cfg.lr)
+
+    # ------------------------------------------------------------ training
+    def _client_batches(self, pid: int, rng_round: int, balanced: bool):
+        d = self.client_data[pid]
+        steps = self.cfg.steps_per_round
+        if balanced:
+            return class_balanced_batches(d["x"], d["y"], self.cfg.local_batch,
+                                          steps, self.classes,
+                                          seed=self.cfg.seed + 977 * pid + rng_round)
+        return sample_batches(d["x"], d["y"], self.cfg.local_batch, steps,
+                              seed=self.cfg.seed + 977 * pid + rng_round)
+
+    def _train_cluster(self, level: int, members: list[int], n_rounds: int,
+                       test, teacher=None, record_every: int = 1):
+        cfg = self.cfg
+        key = jax.random.PRNGKey(cfg.seed + level)
+        params = self.family.init(key, level)
+        loss_fn = jax.tree_util.Partial(self.family.loss_and_logits, level)
+        t_loss_fn = (jax.tree_util.Partial(self.family.loss_and_logits, 0)
+                     if teacher is not None else None)
+
+        @jax.jit
+        def teacher_logits(tp, batches):
+            return jax.vmap(lambda b: t_loss_fn(tp, b)[1])(batches)
+
+        upd = jax.jit(lambda p, b, tl: local_update(
+            loss_fn, p, b, cfg.lr, teacher_logits=tl,
+            kd_T=cfg.kd_T, kd_alpha=cfg.kd_alpha))
+        upd_plain = jax.jit(lambda p, b: local_update(loss_fn, p, b, cfg.lr))
+
+        if not members:
+            return params, []
+        history = []
+        weights = aggregation.normalized_weights(
+            [self.assignment.n_eff.get(pid, 1) for pid in members])
+        for r in range(n_rounds):
+            new_params = []
+            for pid in members:
+                batches = jax.tree.map(
+                    jnp.asarray,
+                    self._client_batches(pid, r, cfg.class_balanced and level == 0))
+                if teacher is not None and cfg.use_kd:
+                    tl = teacher_logits(teacher, batches)
+                    p_new, _ = upd(params, batches, tl)
+                else:
+                    p_new, _ = upd_plain(params, batches)
+                new_params.append(p_new)
+            stack = jax.tree.map(lambda *xs: jnp.stack(xs), *new_params)
+            params = aggregation.aggregate(stack, weights)
+            if (r + 1) % record_every == 0:
+                history.append(self.evaluate(level, params, test))
+        return params, history
+
+    def evaluate(self, level: int, params, test) -> float:
+        _, logits = self.family.loss_and_logits(level, params, test)
+        return float(jnp.mean((jnp.argmax(logits, -1) == test["y"])))
+
+    def train(self, test, rounds_per_cluster: dict | None = None) -> FedRACResult:
+        cfg = self.cfg
+        members = self.assignment.members
+        n_rounds = {l: (rounds_per_cluster or {}).get(l, cfg.rounds)
+                    for l in range(self.m)}
+        master_params, hist0 = self._train_cluster(0, members.get(0, []),
+                                                   n_rounds[0], test)
+        history = {0: hist0}
+        final = {0: hist0[-1] if hist0 else 0.0}
+        self.master_params = master_params
+        self.cluster_params = {0: master_params}
+        for level in range(1, self.m):
+            mem = members.get(level, [])
+            if not mem:
+                history[level] = []
+                final[level] = float("nan")
+                continue
+            p, h = self._train_cluster(level, mem, n_rounds[level], test,
+                                       teacher=master_params)
+            history[level] = h
+            final[level] = h[-1] if h else 0.0
+            self.cluster_params[level] = p
+        accs = [a for a in final.values() if a == a]
+        return FedRACResult(
+            k_optimal=self.k_optimal, m=self.m, di_values=self.di_values,
+            labels=self.labels, assignment=self.assignment, history=history,
+            final_acc=final, global_acc=float(np.mean(accs)),
+            rounds_used=n_rounds)
+
+
+def rounds_to_reach(history: list[float], target: float) -> int | None:
+    for i, a in enumerate(history):
+        if a >= target:
+            return i + 1
+    return None

@@ -1,0 +1,47 @@
+"""jit'd public wrapper for the fused KD loss.
+
+Accepts (B, S, V) or (N, V) logits; pads N to the row-block multiple and V to
+the vocab-block multiple with a finite large-negative value (-3e4: exp
+underflows to exactly 0, sums stay exact — see kernel.py docstring).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.distill.kernel import kd_loss_rows
+
+PAD = -3.0e4
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("T", "alpha", "block_n", "block_v",
+                                   "interpret"))
+def kd_loss(student_logits, labels, teacher_logits, *, T: float = 2.0,
+            alpha: float = 0.3, block_n: int = 128, block_v: int = 512,
+            interpret: bool | None = None):
+    """Mean KD loss (Hinton) over all rows; see core/distill.py for the jnp path."""
+    interpret = _interpret_default() if interpret is None else interpret
+    s = student_logits.reshape(-1, student_logits.shape[-1])
+    t = teacher_logits.reshape(-1, teacher_logits.shape[-1])
+    lbl = labels.reshape(-1).astype(jnp.int32)
+    N, V = s.shape
+    bn = min(block_n, max(8, N))
+    bv = min(block_v, V)
+    pad_n = (-N) % bn
+    pad_v = (-V) % bv
+    if pad_v:
+        s = jnp.pad(s, ((0, 0), (0, pad_v)), constant_values=PAD)
+        t = jnp.pad(t, ((0, 0), (0, pad_v)), constant_values=PAD)
+    if pad_n:
+        s = jnp.pad(s, ((0, pad_n), (0, 0)), constant_values=PAD)
+        t = jnp.pad(t, ((0, pad_n), (0, 0)), constant_values=PAD)
+        lbl = jnp.pad(lbl, (0, pad_n))
+    rows = kd_loss_rows(s, t, lbl, T=T, alpha=alpha, block_n=bn, block_v=bv,
+                        interpret=interpret)
+    return jnp.sum(rows[:N]) / N

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the fused KD loss kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def kd_loss_rows(student, teacher, labels, *, T: float = 2.0,
+                 alpha: float = 0.3):
+    s = student.astype(jnp.float32)
+    t = teacher.astype(jnp.float32)
+    sT, tT = s / T, t / T
+    t_lse = jax.nn.logsumexp(tT, axis=-1, keepdims=True)
+    s_lse = jax.nn.logsumexp(sT, axis=-1, keepdims=True)
+    p_t = jnp.exp(tT - t_lse)
+    kl = jnp.sum(p_t * ((tT - t_lse) - (sT - s_lse)), axis=-1)
+    lse1 = jax.nn.logsumexp(s, axis=-1)
+    picked = jnp.take_along_axis(s, labels[:, None], axis=-1)[:, 0]
+    ce = lse1 - picked
+    return alpha * ce + (1.0 - alpha) * (T ** 2) * kl

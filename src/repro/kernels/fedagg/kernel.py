@@ -1,0 +1,39 @@
+"""Weighted client-stack reduction kernel (the FedAvg server step).
+
+Input: client-stacked flat parameters (C, D) and normalized weights (C,);
+output the n_i-weighted average (D,).  The grid tiles D; each step loads the
+full (C, block_d) column panel into VMEM and contracts against the weight
+vector on the MXU.  This is the per-device inner loop of the shard_map psum
+aggregation (core/aggregation.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _agg_kernel(w_ref, x_ref, o_ref):
+    w = w_ref[...].astype(jnp.float32)             # (C,)
+    x = x_ref[...].astype(jnp.float32)             # (C, bd)
+    o_ref[...] = jax.lax.dot_general(
+        w[None], x, (((1,), (0,)), ((), ())))[0].astype(o_ref.dtype)
+
+
+def weighted_aggregate(stack, weights, *, block_d: int = 2048,
+                       interpret: bool = True):
+    """stack: (C, D); weights: (C,) → (D,)."""
+    C, D = stack.shape
+    block_d = min(block_d, D)
+    assert D % block_d == 0, (D, block_d)
+    return pl.pallas_call(
+        _agg_kernel,
+        grid=(D // block_d,),
+        in_specs=[
+            pl.BlockSpec((C,), lambda i: (0,)),
+            pl.BlockSpec((C, block_d), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((block_d,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((D,), stack.dtype),
+        interpret=interpret,
+    )(weights, stack)

@@ -1,0 +1,37 @@
+"""jit'd pytree wrapper for the fedagg kernel: ravel → kernel → unravel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fedagg.kernel import weighted_aggregate
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def aggregate_tree(params_stack, weights, *, block_d: int = 2048,
+                   interpret: bool | None = None):
+    """params_stack: pytree with leading client axis C → aggregated pytree."""
+    interpret = _interpret_default() if interpret is None else interpret
+    leaves, treedef = jax.tree_util.tree_flatten(params_stack)
+    C = leaves[0].shape[0]
+    flats = [l.reshape(C, -1) for l in leaves]
+    sizes = [f.shape[1] for f in flats]
+    cat = jnp.concatenate(flats, axis=1).astype(jnp.float32)
+    D = cat.shape[1]
+    bd = min(block_d, D)
+    pad = (-D) % bd
+    if pad:
+        cat = jnp.pad(cat, ((0, 0), (0, pad)))
+    out = weighted_aggregate(cat, weights.astype(jnp.float32), block_d=bd,
+                             interpret=interpret)[:D]
+    parts = []
+    pos = 0
+    for leaf, sz in zip(leaves, sizes):
+        parts.append(out[pos:pos + sz].reshape(leaf.shape[1:]).astype(leaf.dtype))
+        pos += sz
+    return jax.tree_util.tree_unflatten(treedef, parts)

@@ -1,0 +1,7 @@
+"""Pure-jnp oracle for the fedagg kernel."""
+import jax.numpy as jnp
+
+
+def weighted_aggregate(stack, weights):
+    return jnp.einsum("c,cd->d", weights.astype(jnp.float32),
+                      stack.astype(jnp.float32)).astype(stack.dtype)

@@ -1,0 +1,40 @@
+"""jit'd public wrapper: GQA-aware flash attention.
+
+Accepts model-layout tensors q:(B,S,H,hd), k/v:(B,T,KV,hd); expands grouped
+KV heads, flattens (B,H), and calls the Pallas kernel.  On CPU backends the
+kernel runs in interpret mode (Python execution of the kernel body); on TPU
+it lowers to Mosaic.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash.kernel import flash_attention_bh
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "softcap", "block_q",
+                                   "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    softcap: float = 0.0, block_q: int = 128,
+                    block_k: int = 128, interpret: bool | None = None):
+    interpret = _interpret_default() if interpret is None else interpret
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    if G > 1:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    qb = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    kb = k.transpose(0, 2, 1, 3).reshape(B * H, k.shape[1], hd)
+    vb = v.transpose(0, 2, 1, 3).reshape(B * H, v.shape[1], hd)
+    ob = flash_attention_bh(qb, kb, vb, causal=causal, window=window,
+                            softcap=softcap, block_q=block_q, block_k=block_k,
+                            interpret=interpret)
+    return ob.reshape(B, H, S, hd).transpose(0, 2, 1, 3)

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG = -2.0 ** 30
+
+
+def attention_bh(q, k, v, *, causal: bool = True, window: int = 0,
+                 softcap: float = 0.0, sm_scale: float | None = None):
+    """q: (BH,Sq,hd); k,v: (BH,Sk,hd). fp32 softmax, same masking semantics."""
+    hd = q.shape[-1]
+    sm_scale = hd ** -0.5 if sm_scale is None else sm_scale
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * sm_scale
+    if softcap > 0:
+        s = jnp.tanh(s / softcap) * softcap
+    Sq, Sk = q.shape[1], k.shape[1]
+    qi = jnp.arange(Sq)[:, None]
+    ki = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= ki <= qi
+    if window > 0:
+        mask &= (qi - ki) < window
+    s = jnp.where(mask[None], s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,554 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run: lower + compile every (arch × input-shape × mesh)
+against ShapeDtypeStruct inputs (no allocation), then extract
+memory_analysis / cost_analysis / collective traffic for §Roofline.
+
+MUST set XLA_FLAGS above BEFORE any jax import — jax locks the device count
+on first init.  Do not import this module from tests/benchmarks (they need
+to see 1 device); invoke as ``python -m repro.launch.dryrun``.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k [--multi-pod]
+  python -m repro.launch.dryrun --all [--out benchmarks/results/dryrun]
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import INPUT_SHAPES, get_config, list_archs
+from repro.configs.base import ModelConfig
+from repro.core.scaling import active_param_count, param_count
+from repro.launch import hlo_analysis, sharding, specs
+from repro.launch.mesh import make_production_mesh
+from repro.models import registry
+from repro.optim import optimizers
+
+
+def make_train_step(cfg: ModelConfig, lr: float = 1e-4):
+    opt = optimizers.adamw()
+
+    def train_step(params, opt_state, batch):
+        (loss, ce), grads = jax.value_and_grad(
+            lambda p: registry.loss_fn(cfg, p, batch), has_aux=True)(params)
+        grads = optimizers.clip_by_global_norm(grads, 1.0)
+        params, opt_state = opt.update(grads, opt_state, params, lr)
+        return params, opt_state, ce
+
+    return train_step, opt
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill(params, batch):
+        logits, _ = registry.forward(cfg, params, batch)
+        return logits[:, -1]
+    return prefill
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, cache, token, pos):
+        return registry.decode_step(cfg, params, cache, token, pos)
+    return serve_step
+
+
+def make_kd_train_step(cfg_t: ModelConfig, cfg_s: ModelConfig,
+                       lr: float = 1e-4, chunk: int = 0):
+    """Master-slave KD training step (the paper's technique on an LM):
+    teacher forward (frozen) + student update under the Hinton KD loss over
+    the full (padded-)vocab logits.  chunk>0 computes the loss in sequence
+    chunks from the final hiddens, never materializing both (B,S,V) logit
+    tensors at once (§Perf hillclimb #3)."""
+    from repro.core.distill import kd_loss
+    from repro.models import transformer
+    opt = optimizers.adamw()
+
+    def full_loss(sp, t_params, batch):
+        t_logits, _ = registry.forward(cfg_t, t_params, batch)
+        s_logits, aux = registry.forward(cfg_s, sp, batch)
+        lbl = batch["tokens"][:, 1:]
+        mask = transformer.vocab_mask(cfg_s)[None, None]
+        l = kd_loss(s_logits[:, :-1], lbl,
+                    jax.lax.stop_gradient(t_logits[:, :-1]),
+                    T=2.0, alpha=0.3, valid_mask=mask)
+        return l + cfg_s.router_aux_coef * aux, l
+
+    def chunked_loss(sp, t_params, batch):
+        h_t, _ = transformer.forward(cfg_t, t_params, batch["tokens"],
+                                     return_hidden=True)
+        h_s, aux = transformer.forward(cfg_s, sp, batch["tokens"],
+                                       return_hidden=True)
+        head_t = (t_params["embed"] if cfg_t.tie_embeddings
+                  else t_params["lm_head"])
+        head_s = sp["embed"] if cfg_s.tie_embeddings else sp["lm_head"]
+        B, S, _ = h_s.shape
+        n = (S - 1) // chunk
+        cut = n * chunk
+        resh = lambda t: jnp.moveaxis(
+            t[:, :cut].reshape(B, n, chunk, -1), 1, 0)
+        lbl = jnp.moveaxis(batch["tokens"][:, 1:cut + 1].reshape(B, n, chunk),
+                           1, 0)
+        mask = transformer.vocab_mask(cfg_s)[None, None]
+
+        def body(acc, xs):
+            ht_c, hs_c, lbl_c = xs
+            tl = jax.lax.stop_gradient(ht_c @ head_t.T.astype(ht_c.dtype))
+            sl = hs_c @ head_s.T.astype(hs_c.dtype)
+            l = kd_loss(sl, lbl_c, tl, T=2.0, alpha=0.3, valid_mask=mask)
+            return acc + l, None
+
+        total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32),
+                                (resh(h_t), resh(h_s), lbl))
+        l = total / n
+        return l + cfg_s.router_aux_coef * aux, l
+
+    def cached_loss(sp, t_logits, batch):
+        """Paper-faithful schedule (§IV-C): the trained master's logits are
+        computed ONCE and broadcast to every slave cluster — the teacher
+        forward amortizes over (m-1) slaves × R_f rounds, so the KD step
+        consumes logits as an INPUT instead of recomputing them."""
+        s_logits, aux = registry.forward(cfg_s, sp, batch)
+        lbl = batch["tokens"][:, 1:]
+        mask = transformer.vocab_mask(cfg_s)[None, None]
+        l = kd_loss(s_logits[:, :-1], lbl, t_logits[:, :-1],
+                    T=2.0, alpha=0.3, valid_mask=mask)
+        return l + cfg_s.router_aux_coef * aux, l
+
+    loss = chunked_loss if chunk else full_loss
+
+    def kd_step(t_params, s_params, opt_state, batch):
+        (tot, l), grads = jax.value_and_grad(loss, has_aux=True)(
+            s_params, t_params, batch)
+        grads = optimizers.clip_by_global_norm(grads, 1.0)
+        s_params, opt_state = opt.update(grads, opt_state, s_params, lr)
+        return s_params, opt_state, l
+
+    def kd_step_cached(t_logits, s_params, opt_state, batch):
+        (tot, l), grads = jax.value_and_grad(cached_loss, has_aux=True)(
+            s_params, t_logits, batch)
+        grads = optimizers.clip_by_global_norm(grads, 1.0)
+        s_params, opt_state = opt.update(grads, opt_state, s_params, lr)
+        return s_params, opt_state, l
+
+    return kd_step, kd_step_cached
+
+
+def make_fl_round_step(cfg: ModelConfig, lr: float = 0.05):
+    """One Fed-RAC communication round ON the pod: C client replicas of a
+    cluster model train locally (vmap over the client axis, sharded along
+    `data`), then the n_i-weighted FedAvg aggregation runs as an all-reduce
+    and the global model is re-broadcast.  This is the paper's §III-B
+    workflow as a single pjit program — the FL analogue of train_step."""
+    from repro.core.client import local_update
+
+    def round_step(stack, batches, weights):
+        upd = lambda p, b: local_update(
+            lambda pp, bb: registry.loss_fn(cfg, pp, bb), p, b, lr)
+        new_stack, losses = jax.vmap(upd)(stack, batches)
+        agg = jax.tree.map(
+            lambda x: jnp.tensordot(weights.astype(jnp.float32),
+                                    x.astype(jnp.float32),
+                                    axes=(0, 0)).astype(x.dtype), new_stack)
+        C = weights.shape[0]
+        stack = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (C,) + a.shape), agg)
+        return stack, jnp.mean(losses)
+
+    return round_step
+
+
+def fl_client_config(cfg: ModelConfig) -> ModelConfig:
+    """Edge-client-sized cluster model of the same family (~30M params)."""
+    kw = dict(name=cfg.name + "-flclient", n_layers=2 * cfg.period,
+              d_model=512, n_heads=8, n_kv_heads=min(8, cfg.n_kv_heads),
+              head_dim=64, vocab_size=min(cfg.vocab_size, 32768),
+              scan_unroll=True, remat=False)
+    if cfg.d_ff:
+        kw["d_ff"] = 2048
+    if cfg.n_experts:
+        kw.update(n_experts=8, experts_per_tok=min(2, cfg.experts_per_tok),
+                  moe_impl="dense")
+    if cfg.mrope_sections:
+        kw["mrope_sections"] = (8, 12, 12)
+    c = cfg.replace(**kw)
+    c.validate()
+    return c
+
+
+def lower_fl_round(cfg: ModelConfig, mesh, *, clients: int = 256,
+                   local_batch: int = 4, seq: int = 512, steps: int = 1):
+    fcfg = fl_client_config(cfg)
+    p1 = specs.params_shape(fcfg)
+    stack_shape = jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct((clients,) + l.shape, l.dtype), p1)
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    stack_spec = jax.tree.map(lambda _: P(dp), stack_shape)
+    batches = {"tokens": jax.ShapeDtypeStruct(
+        (clients, steps, local_batch, seq), jnp.int32)}
+    if fcfg.frontend:
+        batches["embeds"] = jax.ShapeDtypeStruct(
+            (clients, steps, local_batch, 8, fcfg.d_model),
+            jnp.dtype(fcfg.dtype))
+    b_spec = jax.tree.map(lambda _: P(dp), batches)
+    weights = jax.ShapeDtypeStruct((clients,), jnp.float32)
+    step = make_fl_round_step(fcfg)
+    jitted = jax.jit(step,
+                     in_shardings=sharding.to_named(mesh, (stack_spec, b_spec, P())),
+                     out_shardings=sharding.to_named(mesh, (stack_spec, P())),
+                     donate_argnums=(0,))
+    with mesh:
+        return jitted.lower(stack_shape, batches, weights), fcfg
+
+
+def lower_one(cfg: ModelConfig, shape_name: str, mesh, *, lr: float = 1e-4,
+              kd: bool = False, kd_chunk: int = 0):
+    """Returns (lowered, meta).  Raises on sharding/lowering bugs."""
+    shape = INPUT_SHAPES[shape_name]
+    p_shape = specs.params_shape(cfg)
+    p_spec = sharding.param_specs(cfg, p_shape, mesh)
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+    if kd:
+        from repro.core.scaling import compress_config
+        assert shape.kind == "train", "KD dry-run uses a train shape"
+        cfg_s = compress_config(cfg, 0.5, 1).replace(
+            remat=cfg.remat, scan_unroll=cfg.scan_unroll,
+            shard_mode=cfg.shard_mode)
+        s_shape = specs.params_shape(cfg_s)
+        s_spec = sharding.param_specs(cfg_s, s_shape, mesh)
+        opt_shape = jax.eval_shape(optimizers.adamw().init, s_shape)
+        o_spec = {"m": s_spec, "v": s_spec, "t": P()}
+        batch = specs.train_inputs(cfg, shape)
+        b_spec = sharding.batch_specs(cfg, batch, mesh)
+        step, step_cached = make_kd_train_step(cfg, cfg_s, lr, chunk=kd_chunk)
+        if kd_chunk == -1:                      # cached-teacher variant
+            dpb = b_spec["tokens"][0]
+            tl_shape = jax.ShapeDtypeStruct(
+                (shape.global_batch, shape.seq_len, cfg.padded_vocab),
+                jnp.dtype(cfg.dtype))
+            tl_spec = P(dpb, None, "model")
+            jitted = jax.jit(step_cached,
+                             in_shardings=sharding.to_named(
+                                 mesh, (tl_spec, s_spec, o_spec, b_spec)),
+                             out_shardings=sharding.to_named(
+                                 mesh, (s_spec, o_spec, P())),
+                             donate_argnums=(1, 2))
+            with mesh:
+                return (jitted.lower(tl_shape, s_shape, opt_shape, batch),
+                        {"kind": "kd_cached"})
+        jitted = jax.jit(step,
+                         in_shardings=sharding.to_named(
+                             mesh, (p_spec, s_spec, o_spec, b_spec)),
+                         out_shardings=sharding.to_named(
+                             mesh, (s_spec, o_spec, P())),
+                         donate_argnums=(1, 2))
+        with mesh:
+            return jitted.lower(p_shape, s_shape, opt_shape, batch), {"kind": "kd"}
+
+    if shape.kind == "train":
+        opt_shape = jax.eval_shape(optimizers.adamw().init, p_shape)
+        o_spec = {"m": p_spec, "v": p_spec, "t": P()}
+        batch = specs.train_inputs(cfg, shape)
+        b_spec = sharding.batch_specs(cfg, batch, mesh)
+        step, _ = make_train_step(cfg, lr)
+        jitted = jax.jit(step,
+                         in_shardings=sharding.to_named(mesh, (p_spec, o_spec, b_spec)),
+                         out_shardings=sharding.to_named(mesh, (p_spec, o_spec, P())),
+                         donate_argnums=(0, 1))
+        with mesh:
+            return jitted.lower(p_shape, opt_shape, batch), {"kind": "train"}
+
+    if shape.kind == "prefill":
+        batch = specs.train_inputs(cfg, shape)
+        b_spec = sharding.batch_specs(cfg, batch, mesh)
+        step = make_prefill_step(cfg)
+        out_spec = P(dp, "model") if cfg.padded_vocab % mesh.shape.get("model", 1) == 0 else P(dp, None)
+        if shape.global_batch % int(jnp.prod(jnp.array([mesh.shape[a] for a in dp]))) != 0:
+            out_spec = P(None, "model")
+        jitted = jax.jit(step,
+                         in_shardings=sharding.to_named(mesh, (p_spec, b_spec)),
+                         out_shardings=sharding.to_named(mesh, out_spec))
+        with mesh:
+            return jitted.lower(p_shape, batch), {"kind": "prefill"}
+
+    # decode
+    token, pos, cache_shape = specs.decode_inputs(cfg, shape)
+    shard_seq = shape.global_batch == 1
+    c_spec = sharding.cache_specs(cfg, cache_shape, mesh, shard_seq=shard_seq)
+    t_spec = sharding.batch_specs(cfg, {"t": token}, mesh)["t"]
+    step = make_serve_step(cfg)
+    logit_spec = P(None, None, "model") if cfg.padded_vocab % mesh.shape.get("model", 1) == 0 else P()
+    jitted = jax.jit(step,
+                     in_shardings=sharding.to_named(mesh, (p_spec, c_spec, t_spec, P())),
+                     out_shardings=sharding.to_named(mesh, (logit_spec, c_spec)),
+                     donate_argnums=(1,))
+    with mesh:
+        return jitted.lower(p_shape, cache_shape, token, pos), {"kind": "decode"}
+
+
+def _depth_cfg(cfg: ModelConfig, n_sb: int) -> ModelConfig:
+    if cfg.family == "encdec":
+        return cfg.replace(n_layers=n_sb, n_enc_layers=n_sb,
+                           name=f"{cfg.name}@d{n_sb}")
+    return cfg.replace(n_layers=n_sb * cfg.period, name=f"{cfg.name}@d{n_sb}")
+
+
+def _measure(cfg: ModelConfig, shape_name: str, mesh, **kw):
+    """(flops, bytes_accessed, collective_total, coll_detail, compiled)."""
+    lowered, _ = lower_one(cfg, shape_name, mesh, **kw)
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis() or {}
+    coll = hlo_analysis.collective_bytes(compiled.as_text())
+    return (float(cost.get("flops", 0.0)),
+            float(cost.get("bytes accessed", 0.0)),
+            float(coll["total"]), coll, compiled)
+
+
+def analyze(cfg: ModelConfig, shape_name: str, mesh, **lower_kw) -> dict:
+    """Compile at full depth (memory truth) + depths 1·period and 2·period.
+
+    XLA's cost_analysis does NOT multiply while-loop (scan) bodies by trip
+    count, so flops/bytes/collectives of the scanned stack are extrapolated:
+    corrected = f(1) + (n_sb-1)·(f(2)-f(1)).  Inner TIME recurrences
+    (mamba chunk scan, m/sLSTM step scans) are still undercounted inside the
+    body — the analytic cross-check (scaling.analytic_step_flops) covers
+    those; the roofline uses max(hlo_corrected, analytic).
+    """
+    chips = mesh.devices.size
+    shape = INPUT_SHAPES[shape_name]
+    n_sb = (cfg.n_layers if cfg.family == "encdec" else cfg.n_superblocks)
+
+    f_full, b_full, c_full, coll_full, compiled = _measure(
+        cfg, shape_name, mesh, **lower_kw)
+    # depth-1/2 UNROLLED programs make loop trip counts explicit in the HLO
+    # (at scan depth the cost analyzer sees the body once, whatever the depth).
+    u1 = _depth_cfg(cfg, 1).replace(scan_unroll=True)
+    u2 = _depth_cfg(cfg, 2).replace(scan_unroll=True)
+    f1, b1, c1, _, _ = _measure(u1, shape_name, mesh, **lower_kw)
+    f2, b2, c2, _, _ = _measure(u2, shape_name, mesh, **lower_kw)
+    # clamp: XLA sometimes CSEs the unrolled depth-2 program below depth-1
+    # (seen with FSDP all-gathers) — never extrapolate below the direct
+    # measurements.
+    extrap = lambda x1, x2, xf: max(x1 + (n_sb - 1) * (x2 - x1), x2, xf, 0.0)
+    flops, bytes_acc, coll_b = (extrap(f1, f2, f_full), extrap(b1, b2, b_full),
+                                extrap(c1, c2, c_full))
+    depth_meas = {"d1": [f1, b1, c1], "d2": [f2, b2, c2]}
+
+    analytic = scaling_analytic(cfg, shape, chips)
+    roof = hlo_analysis.Roofline(
+        flops_per_device=max(flops, analytic["flops_per_device"]),
+        bytes_per_device=bytes_acc,
+        collective_bytes_per_device=coll_b,
+        chips=chips, model_flops_total=analytic["model_flops_total"])
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "generated_code_size_in_bytes",
+                     "alias_size_in_bytes"):
+            if hasattr(ma, attr):
+                mem[attr] = int(getattr(ma, attr))
+    except Exception as e:                                   # CPU backend quirk
+        mem["error"] = str(e)
+    mem["params_total_bytes"] = param_count(cfg) * (2 if cfg.dtype == "bfloat16" else 4)
+    mem["params_bytes_per_chip"] = mem["params_total_bytes"] / chips
+    hbm = mem.get("temp_size_in_bytes", 0) + mem.get("argument_size_in_bytes", 0)
+    mem["hbm_per_chip_est"] = hbm
+    mem["fits_16g"] = bool(hbm < 16e9)
+    return {
+        "arch": cfg.name, "shape": shape_name, "chips": chips,
+        "mesh": "x".join(str(mesh.shape[a]) for a in mesh.axis_names),
+        "kind": shape.kind, "remat": cfg.remat, "moe_shard": cfg.moe_shard,
+        "hlo_raw": {"flops": f_full, "bytes": b_full, "collective": c_full},
+        "hlo_depth": depth_meas,
+        "hlo_corrected": {"flops": flops, "bytes": bytes_acc,
+                          "collective": coll_b},
+        "analytic": analytic,
+        "collectives": coll_full,
+        "memory": mem,
+        "roofline": roof.as_dict(),
+        "params": param_count(cfg),
+        "active_params": active_param_count(cfg),
+    }
+
+
+def scaling_analytic(cfg: ModelConfig, shape, chips: int) -> dict:
+    from repro.core.scaling import analytic_step_flops
+    total = analytic_step_flops(cfg, shape.kind, shape.global_batch,
+                                shape.seq_len, remat=cfg.remat)
+    if shape.kind == "train":
+        mf = 6.0 * active_param_count(cfg) * shape.global_batch * shape.seq_len
+    elif shape.kind == "prefill":
+        mf = 2.0 * active_param_count(cfg) * shape.global_batch * shape.seq_len
+    else:
+        mf = 2.0 * active_param_count(cfg) * shape.global_batch
+    return {"flops_total": total, "flops_per_device": total / chips,
+            "model_flops_total": mf}
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+            *, force: bool = False, variant: str = "", **cfg_overrides) -> dict:
+    mesh_tag = "pod2x16x16" if multi_pod else "pod16x16"
+    tag = f"{arch}_{shape_name}_{mesh_tag}" + (f"_{variant}" if variant else "")
+    path = os.path.join(out_dir, tag + ".json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+    cfg = get_config(arch)
+    # Production default: rematerialize superblocks in training (without it
+    # the 4k×256 train activations do not fit 16 GB HBM — see §Perf).
+    if INPUT_SHAPES[shape_name].kind == "train" and "remat" not in cfg_overrides:
+        cfg = cfg.replace(remat=True)
+    ok, why = specs.applicable(cfg, shape_name)
+    os.makedirs(out_dir, exist_ok=True)
+    if not ok:
+        res = {"arch": arch, "shape": shape_name, "mesh": mesh_tag,
+               "skipped": why}
+        with open(path, "w") as f:
+            json.dump(res, f, indent=1)
+        return res
+    lower_kw = {}
+    for k in ("kd", "kd_chunk"):
+        if k in cfg_overrides:
+            lower_kw[k] = cfg_overrides.pop(k)
+    if cfg_overrides:
+        cfg = cfg.replace(**cfg_overrides)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    try:
+        res = analyze(cfg, shape_name, mesh, **lower_kw)
+        res.update(wall_s=round(time.time() - t0, 1), variant=variant)
+    except Exception:
+        res = {"arch": arch, "shape": shape_name, "mesh": mesh_tag,
+               "error": traceback.format_exc()}
+    with open(path, "w") as f:
+        json.dump(res, f, indent=1)
+    return res
+
+
+def run_fl(arch: str, multi_pod: bool, out_dir: str, force: bool = False) -> dict:
+    """Dry-run one Fed-RAC FL round (client-parallel) on the production mesh."""
+    mesh_tag = "pod2x16x16" if multi_pod else "pod16x16"
+    path = os.path.join(out_dir, f"{arch}_fl-round_{mesh_tag}.json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+    os.makedirs(out_dir, exist_ok=True)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    try:
+        clients, B, S, steps = 256, 4, 512, 1
+        lowered, fcfg = lower_fl_round(get_config(arch), mesh, clients=clients,
+                                       local_batch=B, seq=S, steps=steps)
+        compiled = lowered.compile()
+        cost = compiled.cost_analysis() or {}
+        coll = hlo_analysis.collective_bytes(compiled.as_text())
+        chips = mesh.devices.size
+        n_p = param_count(fcfg)
+        analytic = 6.0 * n_p * clients * B * S * steps
+        roof = hlo_analysis.Roofline(
+            flops_per_device=max(float(cost.get("flops", 0.0)), analytic / chips),
+            bytes_per_device=float(cost.get("bytes accessed", 0.0)),
+            collective_bytes_per_device=float(coll["total"]),
+            chips=chips, model_flops_total=analytic)
+        res = {"arch": arch, "shape": "fl_round", "mesh": mesh_tag,
+               "kind": "fl_round", "client_params": n_p, "clients": clients,
+               "collectives": coll, "roofline": roof.as_dict(),
+               "wall_s": round(time.time() - t0, 1)}
+    except Exception:
+        res = {"arch": arch, "shape": "fl_round", "mesh": mesh_tag,
+               "error": traceback.format_exc()}
+    with open(path, "w") as f:
+        json.dump(res, f, indent=1)
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list_archs())
+    ap.add_argument("--shape", choices=list(INPUT_SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--variant", default="")
+    ap.add_argument("--moe-shard", choices=["tp", "ep"])
+    ap.add_argument("--moe-chunk", type=int, default=0)
+    ap.add_argument("--mlstm-chunk", action="store_true")
+    ap.add_argument("--attn-blocked", action="store_true")
+    ap.add_argument("--shard-mode", choices=["tp", "fsdp"])
+    ap.add_argument("--cache-shard", choices=["hd", "seq", "batch"])
+    ap.add_argument("--kd", action="store_true",
+                    help="lower the master-slave KD train step")
+    ap.add_argument("--fl", action="store_true",
+                    help="lower one client-parallel Fed-RAC FL round")
+    ap.add_argument("--kd-chunk", type=int, default=0)
+    ap.add_argument("--kd-cached", action="store_true",
+                    help="teacher logits as input (paper's broadcast schedule)")
+    ap.add_argument("--remat", action="store_true")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--out", default="benchmarks/results/dryrun")
+    args = ap.parse_args()
+
+    overrides = {}
+    if args.moe_shard:
+        overrides["moe_shard"] = args.moe_shard
+    if args.moe_chunk:
+        overrides["moe_chunk_groups"] = args.moe_chunk
+    if args.mlstm_chunk:
+        overrides["mlstm_impl"] = "chunk"
+    if args.attn_blocked:
+        overrides["attn_impl"] = "blocked"
+    if args.shard_mode:
+        overrides["shard_mode"] = args.shard_mode
+    if args.cache_shard:
+        overrides["cache_shard"] = args.cache_shard
+    if args.kd:
+        overrides["kd"] = True
+        if args.kd_cached:
+            overrides["kd_chunk"] = -1
+        elif args.kd_chunk:
+            overrides["kd_chunk"] = args.kd_chunk
+    if args.remat:
+        overrides["remat"] = True
+    if args.no_remat:
+        overrides["remat"] = False
+
+    if args.fl:
+        res = run_fl(args.arch, args.multi_pod, args.out, force=args.force)
+        status = "ERROR" if "error" in res else "OK"
+        dom = res.get("roofline", {}).get("dominant", "-")
+        print(f"{args.arch:26s} fl_round     "
+              f"{'2x16x16' if args.multi_pod else '16x16':8s} {status:6s} "
+              f"dom={dom}", flush=True)
+        if status == "ERROR":
+            print(res["error"].splitlines()[-1])
+        return
+
+    combos = []
+    if args.all:
+        for arch in list_archs():
+            for shape in INPUT_SHAPES:
+                for mp in (False, True):
+                    combos.append((arch, shape, mp))
+    else:
+        combos = [(args.arch, args.shape, args.multi_pod)]
+
+    for arch, shape, mp in combos:
+        t0 = time.time()
+        res = run_one(arch, shape, mp, args.out, force=args.force,
+                      variant=args.variant, **overrides)
+        status = ("SKIP" if "skipped" in res
+                  else "ERROR" if "error" in res else "OK")
+        dom = res.get("roofline", {}).get("dominant", "-")
+        print(f"{arch:26s} {shape:12s} {'2x16x16' if mp else '16x16':8s} "
+              f"{status:6s} dom={dom:10s} {time.time() - t0:6.1f}s", flush=True)
+        if status == "ERROR":
+            print(res["error"].splitlines()[-1], flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,107 @@
+"""HLO-text analysis: collective-operand bytes + roofline terms.
+
+cost_analysis() gives per-device FLOPs / bytes-accessed but NOT collective
+traffic; we parse the post-SPMD HLO for all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute result shapes and sum bytes.
+
+Hardware constants (TPU v5e targets, per chip):
+  197 TFLOP/s bf16  ·  819 GB/s HBM  ·  ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# e.g.  %all-reduce.5 = bf16[256,4096]{1,0} all-reduce(...)
+#       %ar = (f32[8,128]{1,0}, f32[8]{0}) all-reduce(...)
+_LINE_RE = re.compile(
+    r"=\s*(?P<rtype>\([^)]*\)|[a-z0-9]+\[[^\]]*\][^\s]*)\s+"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?P<suffix>-start|-done)?\(")
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+
+
+def _shape_bytes(tok: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(tok):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-collective-kind result-operand bytes (per device program)."""
+    out = {k: 0 for k in COLLECTIVES}
+    counts = {k: 0 for k in COLLECTIVES}
+    for m in _LINE_RE.finditer(hlo_text):
+        op = m.group("op")
+        # `-done` ops alias the `-start` buffer; count once (start only).
+        if m.group("suffix") == "-done":
+            continue
+        out[op] += _shape_bytes(m.group("rtype"))
+        counts[op] += 1
+    return {"bytes": out, "counts": counts, "total": sum(out.values())}
+
+
+@dataclass
+class Roofline:
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    chips: int
+    model_flops_total: float = 0.0       # 6·N_active·D (analytic)
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes_per_device / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        hw = self.flops_per_device * self.chips
+        return self.model_flops_total / hw if hw else 0.0
+
+    def as_dict(self) -> dict:
+        return {
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "collective_bytes_per_device": self.collective_bytes_per_device,
+            "chips": self.chips,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "model_flops_total": self.model_flops_total,
+            "useful_flops_ratio": self.useful_flops_ratio,
+        }

@@ -1,0 +1,23 @@
+"""Production meshes.  A FUNCTION (not a module constant) so importing this
+module never touches jax device state (the dry-run sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before any jax import;
+tests and benchmarks must keep seeing 1 device)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes(mesh) -> tuple:
+    """The batch-sharding axes: ('pod','data') on the multi-pod mesh."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def make_host_mesh(n_data: int = 1, n_model: int = 1):
+    """Small mesh over host devices (tests use 8 forced host devices)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

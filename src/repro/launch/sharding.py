@@ -1,0 +1,171 @@
+"""GSPMD PartitionSpec rules for every model family.
+
+Parameters are TP-sharded along `model` by leaf name (stacked superblock
+leading axes are handled by negative-dim rules); any dim not divisible by the
+mesh axis size falls back to replication (small tensors: routers, per-head
+norms, sLSTM recurrent blocks).  Batch shards along ('pod','data'); the
+long_500k (batch=1) decode shards the KV-cache SEQUENCE axis along `data`
+instead (flash-decode style — GSPMD inserts the partial-softmax collectives).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+# leaf-name -> dim to shard along `model` (negative = from the end).
+# `embed`/`lm_head` shard the vocab (dim 0, no superblock prefix).
+PARAM_DIM = {
+    "embed": 0, "lm_head": 0,
+    "wq": -1, "wk": -1, "wv": -1, "w_up": -1, "up": -1,
+    "up_g": -1, "up_v": -1, "in_proj": -1, "x_proj": -1, "wx": -1,
+    "conv_w": -1, "conv_b": -1, "D": -1, "dt_bias": -1, "skip": -1,
+    "dt_proj": -1, "w_gate": -1,
+    "wo": -2, "w_down": -2, "down": -2, "out_proj": -2, "A_log": -2,
+}
+# MoE expert tensors (ndim>=4 under stacked blocks / >=3 in encdec) can
+# alternatively shard the EXPERT axis (expert parallelism).
+MOE_LEAVES = {"w_gate", "w_up", "w_down"}
+
+CACHE_DIM = {"k": None, "v": None}   # handled specially (batch/seq axes)
+
+
+def _leaf_name(path) -> str:
+    for p in reversed(path):
+        if hasattr(p, "key"):
+            return str(p.key)
+    return ""
+
+
+def param_specs(cfg: ModelConfig, params_shape, mesh):
+    """params_shape: pytree of ShapeDtypeStruct (or arrays)."""
+    msize = mesh.shape.get("model", 1)
+
+    if cfg.shard_mode == "fsdp":
+        return _fsdp_param_specs(params_shape, mesh)
+
+    def spec(path, leaf):
+        name = _leaf_name(path)
+        nd = len(leaf.shape)
+        out = [None] * nd
+        is_moe = (name in MOE_LEAVES and cfg.n_experts > 0
+                  and nd >= 3 and leaf.shape[nd - 3] == cfg.n_experts)
+        if is_moe and cfg.moe_shard == "ep":
+            dim = nd - 3
+            if leaf.shape[dim] % msize == 0:
+                out[dim] = "model"
+                return P(*out)
+        if name in PARAM_DIM:
+            dim = PARAM_DIM[name]
+            dim = dim if dim >= 0 else nd + dim
+            if 0 <= dim < nd and leaf.shape[dim] % msize == 0:
+                out[dim] = "model"
+        return P(*out)
+
+    return jax.tree_util.tree_map_with_path(spec, params_shape)
+
+
+def _fsdp_param_specs(params_shape, mesh):
+    """ZeRO-3 style: every parameter fully sharded over ('data','model')
+    along its largest divisible dim; XLA all-gathers per use.  The model
+    axis carries extra data parallelism instead of TP — the right trade for
+    small-d_model archs whose TP activation all-reduces dwarf their compute
+    (§Perf hillclimb #1)."""
+    axes = ("data", "model")
+    total = int(np.prod([mesh.shape[a] for a in axes]))
+    dsize = mesh.shape.get("data", 1)
+
+    def spec(path, leaf):
+        nd = len(leaf.shape)
+        out = [None] * nd
+        # prefer the largest dim; fall back to 'data'-only, then replicate
+        order = sorted(range(nd), key=lambda i: -leaf.shape[i])
+        for i in order:
+            if leaf.shape[i] % total == 0:
+                out[i] = axes
+                return P(*out)
+        for i in order:
+            if leaf.shape[i] % dsize == 0:
+                out[i] = "data"
+                return P(*out)
+        return P(*out)
+
+    return jax.tree_util.tree_map_with_path(spec, params_shape)
+
+
+def batch_specs(cfg: ModelConfig, batch_shape, mesh):
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    if cfg.shard_mode == "fsdp":
+        dp = dp + ("model",)
+    sizes = [int(np.prod([mesh.shape[a] for a in dp[:k]]))
+             for k in range(len(dp), 0, -1)]
+
+    def spec(path, leaf):
+        b = leaf.shape[0]
+        lead = None
+        for k, size in zip(range(len(dp), 0, -1), sizes):
+            if b % size == 0:
+                lead = dp[:k]
+                break
+        return P(lead, *([None] * (len(leaf.shape) - 1)))
+
+    return jax.tree_util.tree_map_with_path(spec, batch_shape)
+
+
+def cache_specs(cfg: ModelConfig, cache_shape, mesh, *, shard_seq: bool):
+    """KV caches: batch along data axes (hd along model); if shard_seq
+    (batch=1 long-context decode) shard the sequence axis instead."""
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+    msize = mesh.shape.get("model", 1)
+
+    def spec(path, leaf):
+        name = _leaf_name(path)
+        nd = len(leaf.shape)
+        out = [None] * nd
+        # layouts (with leading superblock axis for decoder-only, or layer
+        # axis for encdec):  k/v: (L,B,S,KV,hd)  h: (L,B,di,st)
+        # conv: (L,B,k,di)  C: (L,B,H,hd,hd)  n/c/h/m: (L,B,H,hd) or (L,B,H)
+        if name in ("k", "v", "xk", "xv") and nd == 5:
+            if shard_seq:
+                seq_axes = dp + ("model",) if cfg.cache_shard == "seq" else dp
+                seq_total = dp_size * (msize if cfg.cache_shard == "seq" else 1)
+                out[2] = seq_axes if leaf.shape[2] % seq_total == 0 else dp
+                if cfg.cache_shard == "hd" and leaf.shape[4] % msize == 0:
+                    out[4] = "model"
+                return P(*out)
+            if leaf.shape[1] % dp_size == 0:
+                out[1] = dp
+            if cfg.cache_shard == "hd" and leaf.shape[4] % msize == 0:
+                out[4] = "model"
+            elif cfg.cache_shard == "seq" and leaf.shape[2] % msize == 0:
+                out[2] = "model"
+        elif name == "h" and nd == 4:        # mamba hidden (L,B,di,st)
+            if leaf.shape[1] % dp_size == 0 and not shard_seq:
+                out[1] = dp
+            if leaf.shape[2] % msize == 0:
+                out[2] = "model"
+        elif name == "conv" and nd == 4:
+            if leaf.shape[1] % dp_size == 0 and not shard_seq:
+                out[1] = dp
+            if leaf.shape[3] % msize == 0:
+                out[3] = "model"
+        elif name == "C" and nd == 5:        # mLSTM matrix memory
+            if leaf.shape[1] % dp_size == 0 and not shard_seq:
+                out[1] = dp
+            if leaf.shape[3] % msize == 0:
+                out[3] = "model"
+        elif nd >= 2:
+            if leaf.shape[1] % dp_size == 0 and not shard_seq:
+                out[1] = dp
+            if nd >= 4 and leaf.shape[-1] % msize == 0:
+                out[-1] = "model"
+        return P(*out)
+
+    return jax.tree_util.tree_map_with_path(spec, cache_shape)
+
+
+def to_named(mesh, specs):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs)

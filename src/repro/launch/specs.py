@@ -1,0 +1,64 @@
+"""ShapeDtypeStruct stand-ins for every model input — shardable, weak-type
+correct, ZERO device allocation.  The dry-run lowers against these.
+
+Per family:
+  * decoder-only train/prefill:  tokens (B, S) int32
+  * vlm:    embeds (B, front, d) bf16 + tokens (B, S-front)   [frontend stub]
+  * encdec: embeds (B, S, d) + tokens (B, max(S//8,128))      [frontend stub]
+  * decode: token (B,1) + pos scalar + cache (via eval_shape on init_cache)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig
+from repro.models import registry
+
+Sds = jax.ShapeDtypeStruct
+
+
+def train_inputs(cfg: ModelConfig, shape: InputShape) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.family == "vlm":
+        front = min(cfg.frontend_tokens, S // 4)
+        return {"embeds": Sds((B, front, cfg.d_model), dt),
+                "tokens": Sds((B, S - front), jnp.int32)}
+    if cfg.family == "encdec":
+        return {"embeds": Sds((B, S, cfg.d_model), dt),
+                "tokens": Sds((B, max(S // 8, 128)), jnp.int32)}
+    return {"tokens": Sds((B, S), jnp.int32)}
+
+
+def decode_inputs(cfg: ModelConfig, shape: InputShape):
+    """Returns (token, pos, cache_shape) — ONE new token against a seq_len cache."""
+    B, S = shape.global_batch, shape.seq_len
+    token = Sds((B, 1), jnp.int32)
+    pos = Sds((), jnp.int32)
+    cache = jax.eval_shape(lambda: registry.init_cache(cfg, B, S))
+    return token, pos, cache
+
+
+def params_shape(cfg: ModelConfig):
+    return jax.eval_shape(
+        lambda k: registry.init_params(cfg, k), jax.random.PRNGKey(0))
+
+
+def input_specs(cfg: ModelConfig, shape_name: str):
+    shape = INPUT_SHAPES[shape_name]
+    if shape.kind in ("train", "prefill"):
+        return train_inputs(cfg, shape)
+    return decode_inputs(cfg, shape)
+
+
+def applicable(cfg: ModelConfig, shape_name: str) -> tuple[bool, str]:
+    """long_500k only for sub-quadratic archs (DESIGN.md §4)."""
+    if shape_name != "long_500k":
+        return True, ""
+    sub_quadratic = (cfg.family in ("hybrid", "ssm")
+                     or (cfg.sliding_window > 0))
+    if not sub_quadratic:
+        return False, ("pure full-attention arch: 500k-token decode requires "
+                       "sub-quadratic attention (skip per assignment brief)")
+    return True, ""

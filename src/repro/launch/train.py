@@ -1,0 +1,96 @@
+"""pjit training driver.
+
+On real hardware this runs the production mesh; on this CPU container the
+same code path runs a 1×1 mesh with reduced (``--smoke``) configs — the
+end-to-end example (examples/fedrac_lm_train.py) drives it.
+
+  PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --smoke \
+      --steps 100 --batch 8 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt import checkpoint
+from repro.configs import INPUT_SHAPES, get_config, list_archs
+from repro.data.synthetic import lm_batches, make_lm_corpus
+from repro.launch import sharding
+from repro.launch.mesh import make_host_mesh
+from repro.models import registry
+from repro.optim import optimizers, schedules
+
+
+def build_step(cfg, opt, sched, grad_clip=1.0):
+    def train_step(params, opt_state, batch, step):
+        (loss, ce), grads = jax.value_and_grad(
+            lambda p: registry.loss_fn(cfg, p, batch), has_aux=True)(params)
+        grads = optimizers.clip_by_global_norm(grads, grad_clip)
+        params, opt_state = opt.update(grads, opt_state, params, sched(step))
+        return params, opt_state, ce
+    return train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list_archs(), default="olmo-1b")
+    ap.add_argument("--smoke", action="store_true", help="reduced config")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--schedule", default="wsd",
+                    choices=["constant", "cosine", "wsd"])
+    ap.add_argument("--optimizer", default="adamw",
+                    choices=["sgd", "momentum", "adamw"])
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    mesh = make_host_mesh(1, 1)
+    key = jax.random.PRNGKey(args.seed)
+    params = registry.init_params(cfg, key)
+    opt = optimizers.get(args.optimizer)
+    opt_state = opt.init(params)
+    sched = schedules.get(args.schedule, args.lr, args.steps,
+                          warmup=max(1, args.steps // 10))
+    step_fn = jax.jit(build_step(cfg, opt, sched), donate_argnums=(0, 1))
+
+    corpus = make_lm_corpus(cfg.vocab_size, 200_000, seed=args.seed)
+    n_params = registry.param_count(params)
+    print(f"arch={cfg.name} params={n_params/1e6:.1f}M "
+          f"vocab={cfg.vocab_size} mesh={dict(mesh.shape)}", flush=True)
+
+    t0 = time.time()
+    losses = []
+    for step in range(args.steps):
+        toks = lm_batches(corpus, args.batch, args.seq, 1,
+                          seed=args.seed + step)[0]
+        batch = {"tokens": jnp.asarray(toks)}
+        if cfg.frontend:
+            batch["embeds"] = jnp.zeros((args.batch, 8, cfg.d_model), cfg.dtype)
+        params, opt_state, ce = step_fn(params, opt_state, batch,
+                                        jnp.asarray(step))
+        losses.append(float(ce))
+        if (step + 1) % args.log_every == 0:
+            rate = args.batch * args.seq * args.log_every / (time.time() - t0)
+            print(f"step {step+1:5d}  ce={np.mean(losses[-args.log_every:]):.4f}"
+                  f"  tok/s={rate:,.0f}", flush=True)
+            t0 = time.time()
+    if args.ckpt_dir:
+        path = checkpoint.save_step(args.ckpt_dir, args.steps,
+                                    {"params": params})
+        print("saved", path)
+    print(f"final ce: first10={np.mean(losses[:10]):.4f} "
+          f"last10={np.mean(losses[-10:]):.4f}")
+    return losses
+
+
+if __name__ == "__main__":
+    main()

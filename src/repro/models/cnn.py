@@ -1,0 +1,68 @@
+"""The paper's experimental model: C(128)-C(64)-C(128)-C(256)-C(512)-D(classes).
+
+§V-A of Fed-RAC.  Width-scalable by the cluster compression factor α — the
+paper compresses only the conv layers ("dropout of 0.5, i.e. M2 = 0.5(M1)"),
+so ``filters(level)`` scales every conv width by α^level and leaves the dense
+head at ``classes``.  Used by the FL experiments/benchmarks (Tables IV-VII).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+BASE_FILTERS = (128, 64, 128, 256, 512)
+DN = ("NHWC", "HWIO", "NHWC")
+
+
+def filters(alpha: float = 1.0, level: int = 0, base_width: float = 1.0):
+    """base_width scales the whole family (CPU-budget experiments use 0.25);
+    alpha**level is the paper's per-cluster compression."""
+    s = base_width * alpha ** level
+    return tuple(max(4, int(round(f * s))) for f in BASE_FILTERS)
+
+
+def init_params(key, *, in_channels: int = 1, classes: int = 10,
+                alpha: float = 1.0, level: int = 0, base_width: float = 1.0,
+                dtype=jnp.float32):
+    fs = filters(alpha, level, base_width)
+    params = {"convs": []}
+    cin = in_channels
+    for i, f in enumerate(fs):
+        k = jax.random.fold_in(key, i)
+        w = jax.random.normal(k, (3, 3, cin, f)) * math.sqrt(2.0 / (9 * cin))
+        params["convs"].append({"w": w.astype(dtype), "b": jnp.zeros((f,), dtype)})
+        cin = f
+    kd = jax.random.fold_in(key, 99)
+    params["dense"] = {
+        "w": (jax.random.normal(kd, (cin, classes)) * cin ** -0.5).astype(dtype),
+        "b": jnp.zeros((classes,), dtype)}
+    return params
+
+
+def forward(params, x):
+    """x: (B,H,W,C) -> logits (B,classes)."""
+    for i, p in enumerate(params["convs"]):
+        x = jax.lax.conv_general_dilated(x, p["w"], (1, 1), "SAME",
+                                         dimension_numbers=DN) + p["b"]
+        x = jax.nn.relu(x)
+        if i % 2 == 1 and min(x.shape[1], x.shape[2]) >= 2:   # pool every other
+            x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                      (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    x = jnp.mean(x, axis=(1, 2))                              # global avg pool
+    return x @ params["dense"]["w"] + params["dense"]["b"]
+
+
+def loss_fn(params, batch):
+    logits = forward(params, batch["x"])
+    labels = batch["y"]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    loss = jnp.mean(lse - picked)
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return loss, acc
+
+
+def param_count(params) -> int:
+    return sum(p.size for p in jax.tree.leaves(params))

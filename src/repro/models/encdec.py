@@ -1,0 +1,142 @@
+"""Encoder-decoder backbone (seamless-m4t-medium's text/unit transformer).
+
+The audio frontend (mel + conformer feature extractor) is STUBBED per the
+assignment brief: ``input_specs`` feeds precomputed frame embeddings
+``(B, S_src, d)``.  The encoder is bidirectional; the decoder is causal with
+cross-attention.  Decode carries a self-attention KV cache plus the static
+cross-attention K/V built once from the encoder output.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models.layers import (apply_mlp, apply_norm, embed_init, init_mlp,
+                                 init_norm, softcap)
+
+
+def _init_enc_block(key, cfg: ModelConfig, dtype):
+    k1, k2 = jax.random.split(key)
+    return {"norm1": init_norm(cfg, cfg.d_model, dtype),
+            "attn": attn.init_attn(k1, cfg, dtype),
+            "norm2": init_norm(cfg, cfg.d_model, dtype),
+            "ffn": init_mlp(k2, cfg.d_model, cfg.d_ff, dtype)}
+
+
+def _init_dec_block(key, cfg: ModelConfig, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"norm1": init_norm(cfg, cfg.d_model, dtype),
+            "self_attn": attn.init_attn(k1, cfg, dtype),
+            "norm_x": init_norm(cfg, cfg.d_model, dtype),
+            "cross": attn.init_cross_attn(k2, cfg, dtype),
+            "norm2": init_norm(cfg, cfg.d_model, dtype),
+            "ffn": init_mlp(k3, cfg.d_model, cfg.d_ff, dtype)}
+
+
+def _stack(blocks):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *blocks)
+
+
+def init_params(cfg: ModelConfig, key):
+    dtype = jnp.dtype(cfg.dtype)
+    ke, kd, kv = jax.random.split(key, 3)
+    enc = [_init_enc_block(jax.random.fold_in(ke, i), cfg, dtype)
+           for i in range(cfg.n_enc_layers)]
+    dec = [_init_dec_block(jax.random.fold_in(kd, i), cfg, dtype)
+           for i in range(cfg.n_layers)]
+    return {
+        "embed": embed_init(kv, cfg.padded_vocab, cfg.d_model, dtype),
+        "enc_blocks": _stack(enc),
+        "dec_blocks": _stack(dec),
+        "enc_norm": init_norm(cfg, cfg.d_model, dtype),
+        "dec_norm": init_norm(cfg, cfg.d_model, dtype),
+    }
+
+
+def encode(cfg: ModelConfig, params, embeds):
+    B, S, _ = embeds.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    def body(h, p):
+        x = apply_norm(cfg, p["norm1"], h)
+        h = h + attn.attn_forward(p["attn"], cfg, x, positions, causal=False)
+        x = apply_norm(cfg, p["norm2"], h)
+        return h + apply_mlp(p["ffn"], x), None
+
+    h = embeds.astype(jnp.dtype(cfg.dtype))
+    h, _ = jax.lax.scan(body, h, params["enc_blocks"],
+                        unroll=cfg.n_enc_layers if cfg.scan_unroll else 1)
+    return apply_norm(cfg, params["enc_norm"], h)
+
+
+def _dec_body(cfg: ModelConfig, h, p, positions, kv):
+    k, v = kv
+    x = apply_norm(cfg, p["norm1"], h)
+    h = h + attn.attn_forward(p["self_attn"], cfg, x, positions)
+    x = apply_norm(cfg, p["norm_x"], h)
+    h = h + attn.cross_attn_forward(p["cross"], cfg, x, k, v)
+    x = apply_norm(cfg, p["norm2"], h)
+    return h + apply_mlp(p["ffn"], x)
+
+
+def forward(cfg: ModelConfig, params, tokens, *, embeds, positions=None):
+    """tokens: (B,S_tgt) decoder input; embeds: (B,S_src,d) frontend stub."""
+    enc_out = encode(cfg, params, embeds)
+    B, S = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    h = params["embed"][tokens] * cfg.embed_scale
+
+    def body(h, p):
+        kv = attn.cross_kv(p["cross"], cfg, enc_out)
+        return _dec_body(cfg, h, p, positions, kv), None
+
+    h, _ = jax.lax.scan(body, h, params["dec_blocks"],
+                        unroll=cfg.n_layers if cfg.scan_unroll else 1)
+    h = apply_norm(cfg, params["dec_norm"], h)
+    logits = (h @ params["embed"].T.astype(h.dtype)) * cfg.logit_scale
+    return softcap(logits, cfg.final_softcap), jnp.zeros((), jnp.float32)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, src_len: int):
+    dtype = jnp.dtype(cfg.dtype)
+    L = cfg.n_layers
+    kvshape = (L, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    xshape = (L, batch, src_len, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(kvshape, dtype), "v": jnp.zeros(kvshape, dtype),
+            "xk": jnp.zeros(xshape, dtype), "xv": jnp.zeros(xshape, dtype)}
+
+
+def build_cross_cache(cfg: ModelConfig, params, cache, embeds):
+    """Run the encoder once and fill the static cross K/V (prefill side)."""
+    enc_out = encode(cfg, params, embeds)
+
+    def body(_, p):
+        return None, attn.cross_kv(p["cross"], cfg, enc_out)
+
+    _, (xk, xv) = jax.lax.scan(body, None, params["dec_blocks"])
+    return dict(cache, xk=xk.astype(cache["xk"].dtype), xv=xv.astype(cache["xv"].dtype))
+
+
+def decode_step(cfg: ModelConfig, params, cache, token, pos):
+    h = params["embed"][token] * cfg.embed_scale
+
+    def body(h, xs):
+        p, k_l, v_l, xk_l, xv_l = xs
+        x = apply_norm(cfg, p["norm1"], h)
+        r, newc = attn.attn_decode(p["self_attn"], cfg, {"k": k_l, "v": v_l}, x, pos)
+        h = h + r
+        x = apply_norm(cfg, p["norm_x"], h)
+        h = h + attn.cross_attn_forward(p["cross"], cfg, x, xk_l, xv_l)
+        x = apply_norm(cfg, p["norm2"], h)
+        h = h + apply_mlp(p["ffn"], x)
+        return h, (newc["k"], newc["v"])
+
+    h, (nk, nv) = jax.lax.scan(
+        body, h, (params["dec_blocks"], cache["k"], cache["v"], cache["xk"], cache["xv"]),
+        unroll=cfg.n_layers if cfg.scan_unroll else 1)
+    h = apply_norm(cfg, params["dec_norm"], h)
+    logits = (h @ params["embed"].T.astype(h.dtype)) * cfg.logit_scale
+    return softcap(logits, cfg.final_softcap), dict(cache, k=nk, v=nv)

@@ -1,0 +1,122 @@
+"""Selective SSM (Mamba-1) block: chunked associative-scan prefill, O(1) decode.
+
+TPU adaptation (vs the CUDA selective-scan kernel): the recurrence
+``h_t = exp(dt_t A) h_{t-1} + (dt_t B_t) x_t`` is a first-order linear
+recurrence, so prefill/train uses ``jax.lax.associative_scan`` inside
+fixed-size chunks (VMEM-friendly working set, MXU-shaped einsums) with the
+inter-chunk carry threaded through ``jax.lax.scan``.  Decode keeps the
+``(B, d_inner, state)`` hidden plus a (conv_k-1)-deep conv buffer in the cache.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+
+CHUNK = 128
+
+
+def init_mamba(key, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 6)
+    d, di, st, dtr, ck = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank, cfg.ssm_conv
+    # S4D-real initialization for A
+    a_init = jnp.broadcast_to(jnp.arange(1, st + 1, dtype=jnp.float32), (di, st))
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * di, dtype),
+        "conv_w": (jax.random.normal(ks[1], (ck, di)) * (ck ** -0.5)).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": dense_init(ks[2], di, dtr + 2 * st, dtype),
+        "dt_proj": dense_init(ks[3], dtr, di, dtype),
+        "dt_bias": jnp.full((di,), -2.0, dtype),   # softplus^-1(~0.12)
+        "A_log": jnp.log(a_init).astype(dtype),
+        "D": jnp.ones((di,), dtype),
+        "out_proj": dense_init(ks[4], di, d, dtype),
+    }
+
+
+def _ssm_inputs(p, cfg: ModelConfig, xc):
+    """xc: post-conv activations (B,S,di) -> dt (B,S,di), Bm/Cm (B,S,st)."""
+    st, dtr = cfg.ssm_state, cfg.dt_rank
+    proj = xc @ p["x_proj"]
+    dt, Bm, Cm = jnp.split(proj, [dtr, dtr + st], axis=-1)
+    dt = jax.nn.softplus(dt @ p["dt_proj"] + p["dt_bias"])
+    return dt, Bm, Cm
+
+
+def _causal_conv(x, w, b):
+    K, S = w.shape[0], x.shape[1]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    y = sum(pad[:, i:i + S] * w[i] for i in range(K))
+    return jax.nn.silu(y + b)
+
+
+def mamba_forward(p, cfg: ModelConfig, x):
+    """x: (B,S,d) -> (B,S,d). Full-sequence (train/prefill)."""
+    B, S, _ = x.shape
+    di, st = cfg.d_inner, cfg.ssm_state
+    xz = x @ p["in_proj"]
+    xm, z = jnp.split(xz, 2, axis=-1)
+    xc = _causal_conv(xm, p["conv_w"], p["conv_b"])
+    dt, Bm, Cm = _ssm_inputs(p, cfg, xc)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                  # (di,st)
+
+    chunk = min(CHUNK, S)
+    assert S % chunk == 0
+    nc = S // chunk
+
+    def chunk_body(h, inputs):
+        xc_c, dt_c, B_c, C_c = inputs                             # (B,L,...)
+        dtf = dt_c.astype(jnp.float32)
+        a = jnp.exp(dtf[..., None] * A)                           # (B,L,di,st)
+        b = (dtf * xc_c.astype(jnp.float32))[..., None] * B_c.astype(jnp.float32)[:, :, None, :]
+        def comb(l, r):
+            al, bl = l
+            ar, br = r
+            return ar * al, ar * bl + br
+        aa, bb = jax.lax.associative_scan(comb, (a, b), axis=1)
+        h_all = aa * h[:, None] + bb                              # (B,L,di,st)
+        y = jnp.einsum("blds,bls->bld", h_all, C_c.astype(jnp.float32))
+        return h_all[:, -1], y
+
+    h0 = jnp.zeros((B, di, st), jnp.float32)
+    resh = lambda t: t.reshape(B, nc, chunk, *t.shape[2:]).swapaxes(0, 1)
+    _, ys = jax.lax.scan(chunk_body, h0, (resh(xc), resh(dt), resh(Bm), resh(Cm)))
+    y = ys.swapaxes(0, 1).reshape(B, S, di)
+    y = y.astype(x.dtype) + xc * p["D"]
+    y = y * jax.nn.silu(z)
+    return y @ p["out_proj"]
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype):
+    return {
+        "h": jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner), dtype),
+    }
+
+
+def mamba_decode(p, cfg: ModelConfig, cache, x, pos):
+    """x: (B,1,d). Returns (y, cache)."""
+    del pos
+    B = x.shape[0]
+    xz = x[:, 0] @ p["in_proj"]
+    xm, z = jnp.split(xz, 2, axis=-1)                             # (B,di)
+    w = p["conv_w"]
+    K = w.shape[0]
+    buf = cache["conv"]                                           # (B,K-1,di)
+    conv = sum(buf[:, i] * w[i] for i in range(K - 1)) + xm * w[K - 1]
+    xc = jax.nn.silu(conv + p["conv_b"])
+    new_buf = jnp.concatenate([buf[:, 1:], xm[:, None].astype(buf.dtype)], axis=1)
+    dt, Bm, Cm = _ssm_inputs(p, cfg, xc[:, None])
+    dt, Bm, Cm = dt[:, 0], Bm[:, 0], Cm[:, 0]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dtf = dt.astype(jnp.float32)
+    a = jnp.exp(dtf[..., None] * A)                               # (B,di,st)
+    b = (dtf * xc.astype(jnp.float32))[..., None] * Bm.astype(jnp.float32)[:, None, :]
+    h = a * cache["h"] + b
+    y = jnp.einsum("bds,bs->bd", h, Cm.astype(jnp.float32)).astype(x.dtype)
+    y = y + xc * p["D"]
+    y = y * jax.nn.silu(z)
+    y = (y @ p["out_proj"])[:, None]
+    return y, {"h": h, "conv": new_buf}

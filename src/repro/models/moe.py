@@ -1,0 +1,119 @@
+"""Mixture-of-Experts FFN: top-k router + two dispatch strategies.
+
+* ``dense``    — every expert runs on every token, outputs masked by the
+  combine matrix.  Exact top-k semantics (no token dropping); compute scales
+  with E, so it is used for reduced smoke configs and as the correctness
+  oracle for the capacity path.
+* ``capacity`` — GShard/Switch-style grouped dispatch with per-expert capacity
+  C = ceil(gs*K/E * capacity_factor).  Compute scales with K (active experts),
+  which is what the 235B-A22B roofline must reflect.  Token order within a
+  group decides dropping, as in GShard.
+
+Both are einsum-only (no ragged ops) so GSPMD can shard the expert axis
+(``cfg.moe_shard == "ep"``) or the expert hidden dim (``"tp"``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+
+
+def init_moe(key, cfg: ModelConfig, dtype):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    E, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+    scale = d ** -0.5
+    return {
+        "router": dense_init(k1, d, E, dtype, scale=0.02),
+        "w_gate": (jax.random.normal(k2, (E, d, f)) * scale).astype(dtype),
+        "w_up": (jax.random.normal(k3, (E, d, f)) * scale).astype(dtype),
+        "w_down": (jax.random.normal(k4, (E, f, d)) * (f ** -0.5)).astype(dtype),
+    }
+
+
+def _route(p, cfg: ModelConfig, x):
+    logits = (x @ p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, cfg.experts_per_tok)
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)
+    return probs, top_w, top_i
+
+
+def _aux_loss(cfg: ModelConfig, probs, top_i):
+    E = cfg.n_experts
+    routed = jnp.sum(jax.nn.one_hot(top_i, E, dtype=jnp.float32), axis=-2)
+    frac = jnp.mean(routed, axis=tuple(range(routed.ndim - 1)))      # (E,)
+    prob_mean = jnp.mean(probs, axis=tuple(range(probs.ndim - 1)))
+    return E * jnp.sum(frac / cfg.experts_per_tok * prob_mean)
+
+
+def _apply_dense(p, cfg: ModelConfig, x):
+    E = cfg.n_experts
+    probs, top_w, top_i = _route(p, cfg, x)
+    combine = jnp.sum(
+        top_w[..., None] * jax.nn.one_hot(top_i, E, dtype=jnp.float32), axis=-2
+    ).astype(x.dtype)                                                # (B,S,E)
+    g = jnp.einsum("bsd,edf->besf", x, p["w_gate"])
+    u = jnp.einsum("bsd,edf->besf", x, p["w_up"])
+    h = jax.nn.silu(g) * u
+    y = jnp.einsum("besf,efd->besd", h, p["w_down"])
+    y = jnp.einsum("besd,bse->bsd", y, combine)
+    return y, _aux_loss(cfg, probs, top_i)
+
+
+def _apply_capacity(p, cfg: ModelConfig, x):
+    B, S, d = x.shape
+    E, K = cfg.n_experts, cfg.experts_per_tok
+    gs = min(cfg.moe_group, B * S)
+    N = B * S
+    assert N % gs == 0, (N, gs)
+    G = N // gs
+    xt = x.reshape(G, gs, d)
+    cap = max(4, int(-(-gs * K * cfg.moe_capacity // E)))
+    cg = cfg.moe_chunk_groups
+    if cg and G > cg and G % cg == 0:
+        # scan over group-chunks: only one chunk's dispatch one-hots live
+        def chunk_body(aux, xc):
+            y, a = _capacity_groups(p, cfg, xc, cap)
+            return aux + a, y
+        aux, ys = jax.lax.scan(chunk_body, jnp.zeros((), jnp.float32),
+                               xt.reshape(G // cg, cg, gs, d))
+        return ys.reshape(B, S, d), aux / (G // cg)
+    y, aux = _capacity_groups(p, cfg, xt, cap)
+    return y.reshape(B, S, d), aux
+
+
+def _capacity_groups(p, cfg: ModelConfig, xt, cap):
+    """xt: (G, gs, d) → (y (G,gs,d), aux)."""
+    G, gs, d = xt.shape
+    E, K = cfg.n_experts, cfg.experts_per_tok
+    probs, top_w, top_i = _route(p, cfg, xt)                         # (G,gs,E/K)
+    # token-major queue position per expert
+    oh = jax.nn.one_hot(top_i, E, dtype=jnp.int32)                   # (G,gs,K,E)
+    flat = oh.reshape(G, gs * K, E)
+    pos_in_e = jnp.cumsum(flat, axis=1) - flat                       # (G,gsK,E)
+    pos = jnp.sum(pos_in_e * flat, axis=-1)                          # (G,gsK)
+    keep = (pos < cap).astype(jnp.float32)
+    slot = jax.nn.one_hot(pos, cap, dtype=jnp.float32) * keep[..., None]
+    # dispatch: (G, gsK, E, cap) -> fold k back into gs
+    disp = flat.astype(jnp.float32)[..., None] * slot[..., None, :]  # (G,gsK,E,cap)
+    disp = disp.reshape(G, gs, K, E, cap)
+    combine = disp * top_w[..., None, None]                          # weighted
+    disp_t = jnp.sum(disp, axis=2).astype(xt.dtype)                  # (G,gs,E,cap)
+    comb_t = jnp.sum(combine, axis=2).astype(xt.dtype)
+    ein = jnp.einsum("gsec,gsd->gecd", disp_t, xt)                   # (G,E,cap,d)
+    g = jnp.einsum("gecd,edf->gecf", ein, p["w_gate"])
+    u = jnp.einsum("gecd,edf->gecf", ein, p["w_up"])
+    h = jax.nn.silu(g) * u
+    y_slots = jnp.einsum("gecf,efd->gecd", h, p["w_down"])
+    y = jnp.einsum("gsec,gecd->gsd", comb_t, y_slots)
+    return y, _aux_loss(cfg, probs, top_i)
+
+
+def apply_moe(p, cfg: ModelConfig, x):
+    """x: (B,S,d) -> (y, load_balance_aux_loss)."""
+    if cfg.moe_impl == "capacity":
+        return _apply_capacity(p, cfg, x)
+    return _apply_dense(p, cfg, x)

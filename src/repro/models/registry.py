@@ -1,0 +1,60 @@
+"""Uniform model API over the families: init / loss / forward / cache / decode.
+
+``batch`` layout by family:
+  * decoder-only (dense/moe/hybrid/ssm):  {"tokens": (B,S) int32}
+  * vlm:     {"tokens": (B,S_txt)}, {"embeds": (B,S_front,d)}  (frontend stub)
+  * encdec:  {"tokens": (B,S_tgt)}, {"embeds": (B,S_src,d)}    (frontend stub)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec, transformer
+
+
+def is_encdec(cfg: ModelConfig) -> bool:
+    return cfg.family == "encdec"
+
+
+def init_params(cfg: ModelConfig, key):
+    return (encdec if is_encdec(cfg) else transformer).init_params(cfg, key)
+
+
+def forward(cfg: ModelConfig, params, batch):
+    if is_encdec(cfg):
+        return encdec.forward(cfg, params, batch["tokens"], embeds=batch["embeds"])
+    return transformer.forward(cfg, params, batch.get("tokens"),
+                               embeds=batch.get("embeds"))
+
+
+def loss_fn(cfg: ModelConfig, params, batch):
+    """Returns (total_loss, ce) — next-token CE (+ MoE aux)."""
+    if is_encdec(cfg):
+        logits, _ = encdec.forward(cfg, params, batch["tokens"], embeds=batch["embeds"])
+        lg = logits[:, :-1].astype(jnp.float32)
+        lbl = batch["tokens"][:, 1:]
+        lg = jnp.where(transformer.vocab_mask(cfg)[None, None], lg,
+                       -2.0 ** 30)
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        picked = jnp.take_along_axis(lg, lbl[..., None], axis=-1)[..., 0]
+        ce = jnp.mean(lse - picked)
+        return ce, ce
+    return transformer.next_token_loss(cfg, params, batch["tokens"],
+                                       embeds=batch.get("embeds"))
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, src_len: int = 0):
+    if is_encdec(cfg):
+        return encdec.init_cache(cfg, batch, max_len, src_len or max_len // 8)
+    return transformer.init_cache(cfg, batch, max_len)
+
+
+def decode_step(cfg: ModelConfig, params, cache, token, pos):
+    return (encdec if is_encdec(cfg) else transformer).decode_step(
+        cfg, params, cache, token, pos)
+
+
+def param_count(params) -> int:
+    return int(sum(p.size for p in jax.tree.leaves(params)))

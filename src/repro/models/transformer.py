@@ -1,0 +1,220 @@
+"""Decoder-only LM over heterogeneous superblocks (dense/MoE/Mamba/xLSTM/VLM).
+
+Parameters for each position-in-superblock are stacked across superblocks so
+the whole depth runs under a single ``jax.lax.scan`` — program size is O(1) in
+depth, which keeps the 94-layer dry-runs compilable, and the stacked leading
+axis is what the Fed-RAC client-vmap and GSPMD sharding rules see.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import mamba, xlstm_blocks as xb
+from repro.models.layers import (apply_mlp, apply_norm, embed_init, init_mlp,
+                                 init_norm, softcap)
+from repro.models.moe import apply_moe, init_moe
+
+
+def _init_mixer(key, cfg: ModelConfig, kind: str, dtype):
+    if kind in ("attn", "attn_local"):
+        return attn.init_attn(key, cfg, dtype)
+    if kind == "mamba":
+        return mamba.init_mamba(key, cfg, dtype)
+    if kind == "mlstm":
+        return xb.init_mlstm(key, cfg, dtype)
+    if kind == "slstm":
+        return xb.init_slstm(key, cfg, dtype)
+    raise ValueError(kind)
+
+
+def _init_block(key, cfg: ModelConfig, pos: int, dtype):
+    kind = cfg.block_pattern[pos]
+    ffn = cfg.ffn_kind(pos)
+    k1, k2 = jax.random.split(key)
+    p = {"norm1": init_norm(cfg, cfg.d_model, dtype),
+         "mixer": _init_mixer(k1, cfg, kind, dtype)}
+    if ffn == "dense":
+        p["norm2"] = init_norm(cfg, cfg.d_model, dtype)
+        p["ffn"] = init_mlp(k2, cfg.d_model, cfg.d_ff, dtype)
+    elif ffn == "moe":
+        p["norm2"] = init_norm(cfg, cfg.d_model, dtype)
+        p["ffn"] = init_moe(k2, cfg, dtype)
+    return p
+
+
+def init_params(cfg: ModelConfig, key):
+    cfg.validate()
+    dtype = jnp.dtype(cfg.dtype)
+    k_embed, k_blocks, k_head = jax.random.split(key, 3)
+    params = {"embed": embed_init(k_embed, cfg.padded_vocab, cfg.d_model, dtype)}
+    blocks = {}
+    for j in range(cfg.period):
+        keys = jax.random.split(jax.random.fold_in(k_blocks, j), cfg.n_superblocks)
+        per_sb = [_init_block(keys[s], cfg, j, dtype) for s in range(cfg.n_superblocks)]
+        blocks[f"p{j}"] = jax.tree.map(lambda *xs: jnp.stack(xs), *per_sb)
+    params["blocks"] = blocks
+    params["final_norm"] = init_norm(cfg, cfg.d_model, dtype)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = embed_init(k_head, cfg.padded_vocab, cfg.d_model, dtype)
+    return params
+
+
+def _apply_block(cfg: ModelConfig, pos: int, p, h, positions):
+    kind = cfg.block_pattern[pos]
+    x = apply_norm(cfg, p["norm1"], h)
+    if kind == "attn":
+        r = attn.attn_forward(p["mixer"], cfg, x, positions)
+    elif kind == "attn_local":
+        r = attn.attn_forward(p["mixer"], cfg, x, positions, local=True)
+    elif kind == "mamba":
+        r = mamba.mamba_forward(p["mixer"], cfg, x)
+    elif kind == "mlstm":
+        r = xb.mlstm_forward(p["mixer"], cfg, x)
+    elif kind == "slstm":
+        r = xb.slstm_forward(p["mixer"], cfg, x)
+    else:
+        raise ValueError(kind)
+    h = h + r * cfg.residual_scale
+    aux = jnp.zeros((), jnp.float32)
+    if "ffn" in p:
+        x = apply_norm(cfg, p["norm2"], h)
+        if cfg.ffn_kind(pos) == "moe":
+            r, aux = apply_moe(p["ffn"], cfg, x)
+        else:
+            r = apply_mlp(p["ffn"], x)
+        h = h + r * cfg.residual_scale
+    return h, aux
+
+
+def embed_tokens(cfg: ModelConfig, params, tokens):
+    return params["embed"][tokens] * cfg.embed_scale
+
+
+def forward(cfg: ModelConfig, params, tokens=None, *, embeds=None,
+            positions=None, return_hidden: bool = False):
+    """Full-sequence forward (train / prefill).
+
+    tokens: (B, S_txt) int32 or None; embeds: (B, S_front, d) modality-frontend
+    embeddings prepended to the token embeddings (VLM/audio stub).
+    Returns (logits (B,S,V_pad), moe_aux).
+    """
+    parts = []
+    if embeds is not None:
+        parts.append(embeds.astype(jnp.dtype(cfg.dtype)))
+    if tokens is not None:
+        parts.append(embed_tokens(cfg, params, tokens))
+    h = jnp.concatenate(parts, axis=1) if len(parts) > 1 else parts[0]
+    B, S, _ = h.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    def sb_body(h, sbp):
+        aux = jnp.zeros((), jnp.float32)
+        for j in range(cfg.period):
+            h, a = _apply_block(cfg, j, sbp[f"p{j}"], h, positions)
+            aux = aux + a
+        return h, aux
+
+    if cfg.remat:
+        sb_body = jax.checkpoint(sb_body)
+    h, auxs = jax.lax.scan(sb_body, h, params["blocks"],
+                            unroll=cfg.n_superblocks if cfg.scan_unroll else 1)
+    h = apply_norm(cfg, params["final_norm"], h)
+    if return_hidden:
+        return h, jnp.sum(auxs)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = (h @ head.T.astype(h.dtype)) * cfg.logit_scale
+    logits = softcap(logits, cfg.final_softcap)
+    return logits, jnp.sum(auxs)
+
+
+# ------------------------------------------------------------------ decode
+def _init_block_cache(cfg: ModelConfig, pos: int, batch: int, max_len: int, dtype):
+    kind = cfg.block_pattern[pos]
+    if kind in ("attn", "attn_local"):
+        return attn.init_attn_cache(cfg, batch, max_len, dtype)
+    if kind == "mamba":
+        return mamba.init_mamba_cache(cfg, batch, dtype)
+    if kind == "mlstm":
+        return xb.init_mlstm_cache(cfg, batch, dtype)
+    if kind == "slstm":
+        return xb.init_slstm_cache(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    dtype = jnp.dtype(cfg.dtype)
+    cache = {}
+    for j in range(cfg.period):
+        one = _init_block_cache(cfg, j, batch, max_len, dtype)
+        cache[f"p{j}"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (cfg.n_superblocks,) + x.shape).copy(), one)
+    return cache
+
+
+def _decode_block(cfg: ModelConfig, pos_j: int, p, cache_j, h, pos):
+    kind = cfg.block_pattern[pos_j]
+    x = apply_norm(cfg, p["norm1"], h)
+    if kind == "attn":
+        r, newc = attn.attn_decode(p["mixer"], cfg, cache_j, x, pos)
+    elif kind == "attn_local":
+        r, newc = attn.attn_decode(p["mixer"], cfg, cache_j, x, pos, local=True)
+    elif kind == "mamba":
+        r, newc = mamba.mamba_decode(p["mixer"], cfg, cache_j, x, pos)
+    elif kind == "mlstm":
+        r, newc = xb.mlstm_decode(p["mixer"], cfg, cache_j, x, pos)
+    elif kind == "slstm":
+        r, newc = xb.slstm_decode(p["mixer"], cfg, cache_j, x, pos)
+    else:
+        raise ValueError(kind)
+    h = h + r * cfg.residual_scale
+    if "ffn" in p:
+        x = apply_norm(cfg, p["norm2"], h)
+        if cfg.ffn_kind(pos_j) == "moe":
+            r, _ = apply_moe(p["ffn"], cfg, x)
+        else:
+            r = apply_mlp(p["ffn"], x)
+        h = h + r * cfg.residual_scale
+    return h, newc
+
+
+def decode_step(cfg: ModelConfig, params, cache, token, pos):
+    """token: (B,1) int32; pos: scalar int32.  Returns (logits (B,1,V), cache)."""
+    h = embed_tokens(cfg, params, token)
+
+    def sb_body(h, xs):
+        sbp, sbc = xs
+        newc = {}
+        for j in range(cfg.period):
+            h, newc[f"p{j}"] = _decode_block(cfg, j, sbp[f"p{j}"], sbc[f"p{j}"], h, pos)
+        return h, newc
+
+    h, new_cache = jax.lax.scan(sb_body, h, (params["blocks"], cache),
+                                unroll=cfg.n_superblocks if cfg.scan_unroll else 1)
+    h = apply_norm(cfg, params["final_norm"], h)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = (h @ head.T.astype(h.dtype)) * cfg.logit_scale
+    logits = softcap(logits, cfg.final_softcap)
+    return logits, new_cache
+
+
+# ------------------------------------------------------------------ loss
+def vocab_mask(cfg: ModelConfig):
+    return jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+
+
+def next_token_loss(cfg: ModelConfig, params, tokens, *, embeds=None):
+    """Causal LM loss over the token portion (frontend positions excluded)."""
+    logits, aux = forward(cfg, params, tokens, embeds=embeds)
+    n_front = 0 if embeds is None else embeds.shape[1]
+    logits = logits[:, n_front:, :]
+    lg = logits[:, :-1].astype(jnp.float32)
+    lbl = tokens[:, 1:]
+    lg = jnp.where(vocab_mask(cfg)[None, None], lg, attn.NEG_INF)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    picked = jnp.take_along_axis(lg, lbl[..., None], axis=-1)[..., 0]
+    ce = jnp.mean(lse - picked)
+    return ce + cfg.router_aux_coef * aux, ce

@@ -1,0 +1,277 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory) [arXiv:2405.04517].
+
+Both cells are exponential-gated with the max-stabilizer ``m_t``.  The mLSTM
+matrix memory ``C_t = f_t C_{t-1} + i_t v_t k_t^T`` and the sLSTM recurrence
+run as ``jax.lax.scan`` over time (single HLO while-loop — depth-independent
+program size).  A chunkwise-parallel mLSTM is a §Perf candidate recorded in
+EXPERIMENTS.md (recurrent-scan → chunk-parallel is the canonical TPU
+adaptation of this family).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+
+
+# ------------------------------------------------------------------ mLSTM
+def init_mlstm(key, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 8)
+    d = cfg.d_model
+    di = cfg.mlstm_expand * d
+    H = cfg.n_heads
+    return {
+        "up": dense_init(ks[0], d, 2 * di, dtype),
+        "conv_w": (jax.random.normal(ks[1], (4, di)) * 0.5).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "wq": dense_init(ks[2], di, di, dtype),
+        "wk": dense_init(ks[3], di, di, dtype),
+        "wv": dense_init(ks[4], di, di, dtype),
+        "w_if": dense_init(ks[5], di, 2 * H, dtype, scale=0.02),
+        "b_if": jnp.concatenate([jnp.zeros((H,)), jnp.full((H,), 3.0)]).astype(dtype),
+        "skip": jnp.ones((di,), dtype),
+        "down": dense_init(ks[6], di, d, dtype),
+    }
+
+
+def _mlstm_cell(carry, qkvif):
+    """One timestep.  carry: (C,n,m); q,k,v: (B,H,hd); i,f: (B,H)."""
+    C, n, m = carry
+    q, k, v, it, ft = qkvif
+    logf = jax.nn.log_sigmoid(ft)                       # (B,H)
+    m_new = jnp.maximum(logf + m, it)
+    i_p = jnp.exp(it - m_new)
+    f_p = jnp.exp(logf + m - m_new)
+    C = f_p[..., None, None] * C + i_p[..., None, None] * (v[..., :, None] * k[..., None, :])
+    n = f_p[..., None] * n + i_p[..., None] * k
+    denom = jnp.maximum(jnp.abs(jnp.sum(n * q, axis=-1)), jnp.exp(-m_new)) + 1e-6
+    h = jnp.einsum("bhvk,bhk->bhv", C, q) / denom[..., None]
+    return (C, n, m_new), h
+
+
+def _mlstm_qkvif(p, cfg: ModelConfig, xm):
+    """xm: (B,S,di) pre-conv input half. Returns per-step tensors."""
+    B, S, di = xm.shape
+    H = cfg.n_heads
+    hd = di // H
+    K = p["conv_w"].shape[0]
+    pad = jnp.pad(xm, ((0, 0), (K - 1, 0), (0, 0)))
+    xc = sum(pad[:, i:i + S] * p["conv_w"][i] for i in range(K))
+    xc = jax.nn.silu(xc + p["conv_b"])
+    q = (xc @ p["wq"]).reshape(B, S, H, hd)
+    k = (xc @ p["wk"]).reshape(B, S, H, hd) * (hd ** -0.5)
+    v = (xm @ p["wv"]).reshape(B, S, H, hd)
+    gate = (xm @ p["w_if"]).astype(jnp.float32) + p["b_if"].astype(jnp.float32)
+    it, ft = gate[..., :H], gate[..., H:]
+    return q, k, v, it, ft, xc
+
+
+def _mlstm_seq(cfg: ModelConfig, q, k, v, it, ft, B, S, H, hd):
+    f32 = jnp.float32
+    carry = (jnp.zeros((B, H, hd, hd), f32), jnp.zeros((B, H, hd), f32),
+             jnp.full((B, H), -1e30, f32))
+    sw = lambda t: jnp.moveaxis(t, 1, 0)
+    _, hs = jax.lax.scan(
+        _mlstm_cell, carry,
+        (sw(q.astype(f32)), sw(k.astype(f32)), sw(v.astype(f32)), sw(it), sw(ft)))
+    return jnp.moveaxis(hs, 0, 1)                            # (B,S,H,hd)
+
+
+def _mlstm_chunked(cfg: ModelConfig, q, k, v, it, ft, B, S, H, hd,
+                   chunk: int = 64):
+    """Chunkwise-parallel mLSTM — exact same math as the sequential cell,
+    but the recurrence only crosses CHUNK boundaries; within a chunk the
+    contributions are an (L,L) masked matrix product (MXU-shaped).  This is
+    the TPU-native adaptation of the paper-family's CUDA recurrence
+    (DESIGN.md §2; §Perf beyond-paper entry).
+
+    Per chunk with F_j = Σ_{r≤j} logσ(f_r):
+      intra:  D_{jk} = F_j - F_k + i_k          (k ≤ j)
+      inter:  g_j    = F_j + m_prev             (decayed carry)
+      m_j    = max(max_k D_{jk}, g_j)
+      num_j  = e^{g_j-m_j}(q_j C_prev) + Σ_k e^{D_{jk}-m_j}(q_j·k_k) v_k
+      den_j  = e^{g_j-m_j}(q_j·n_prev) + Σ_k e^{D_{jk}-m_j}(q_j·k_k)
+      h_j    = num_j / max(|den_j|, e^{-m_j})
+    Carry update uses the same statistics at j = L.
+    """
+    f32 = jnp.float32
+    L = min(chunk, S)
+    assert S % L == 0, (S, L)
+    nc = S // L
+    resh = lambda t: jnp.moveaxis(
+        t.reshape(B, nc, L, *t.shape[2:]), 1, 0).astype(f32)
+    qs, ks, vs = resh(q), resh(k), resh(v)                   # (nc,B,L,H,hd)
+    its, fts = resh(it), resh(ft)                            # (nc,B,L,H)
+
+    def chunk_body(carry, xs):
+        C, n, m = carry                                      # (B,H,hd,hd) ...
+        qc, kc, vc, ic, fc = xs
+        lf = jax.nn.log_sigmoid(fc)                          # (B,L,H)
+        F = jnp.cumsum(lf, axis=1)                           # F_j
+        D = (F[:, :, None] - F[:, None, :]                   # (B,L,L,H)
+             + ic[:, None, :, :])
+        mask = jnp.tril(jnp.ones((L, L), bool))[None, :, :, None]
+        D = jnp.where(mask, D, -jnp.inf)
+        g = F + m[:, None]                                   # (B,L,H)
+        m_j = jnp.maximum(jnp.max(D, axis=2), g)             # (B,L,H)
+        w = jnp.exp(D - m_j[:, :, None])                     # (B,L,L,H)
+        qk = jnp.einsum("blhd,bkhd->blkh", qc, kc)           # (B,L,L,H)
+        num_intra = jnp.einsum("blkh,blkh,bkhd->blhd", w, qk, vc)
+        den_intra = jnp.einsum("blkh,blkh->blh", w, qk)
+        dec = jnp.exp(g - m_j)                               # (B,L,H)
+        num_inter = jnp.einsum("blh,bhvk,blhk->blhv", dec, C, qc)
+        den_inter = dec * jnp.einsum("bhk,blhk->blh", n, qc)
+        num = num_intra + num_inter
+        den = den_intra + den_inter
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_j))[..., None]
+        # carry update at j = L
+        FL = F[:, -1]                                        # (B,H)
+        m_new = jnp.maximum(FL + m, jnp.max(FL[:, None] - F + ic, axis=1))
+        wL = jnp.exp(FL[:, None] - F + ic - m_new[:, None])  # (B,L,H)
+        C_new = (jnp.exp(FL + m - m_new)[..., None, None] * C
+                 + jnp.einsum("blh,blhv,blhk->bhvk", wL, vc, kc))
+        n_new = (jnp.exp(FL + m - m_new)[..., None] * n
+                 + jnp.einsum("blh,blhk->bhk", wL, kc))
+        return (C_new, n_new, m_new), h
+
+    carry = (jnp.zeros((B, H, hd, hd), f32), jnp.zeros((B, H, hd), f32),
+             jnp.full((B, H), -1e30, f32))
+    _, hs = jax.lax.scan(chunk_body, carry, (qs, ks, vs, its, fts))
+    return jnp.moveaxis(hs, 0, 1).reshape(B, S, H, hd)
+
+
+def mlstm_forward(p, cfg: ModelConfig, x):
+    B, S, d = x.shape
+    di = cfg.mlstm_expand * d
+    H = cfg.n_heads
+    hd = di // H
+    xz = x @ p["up"]
+    xm, z = jnp.split(xz, 2, axis=-1)
+    q, k, v, it, ft, xc = _mlstm_qkvif(p, cfg, xm)
+    if cfg.mlstm_impl == "chunk" and S > 1:
+        hs = _mlstm_chunked(cfg, q, k, v, it, ft, B, S, H, hd)
+    else:
+        hs = _mlstm_seq(cfg, q, k, v, it, ft, B, S, H, hd)
+    h = hs.reshape(B, S, di).astype(x.dtype)
+    h = h + p["skip"] * xc
+    h = h * jax.nn.silu(z)
+    return h @ p["down"]
+
+
+def init_mlstm_cache(cfg: ModelConfig, batch: int, dtype):
+    di = cfg.mlstm_expand * cfg.d_model
+    H = cfg.n_heads
+    hd = di // H
+    f32 = jnp.float32
+    return {
+        "C": jnp.zeros((batch, H, hd, hd), f32),
+        "n": jnp.zeros((batch, H, hd), f32),
+        "m": jnp.full((batch, H), -1e30, f32),
+        "conv": jnp.zeros((batch, 3, di), dtype),
+    }
+
+
+def mlstm_decode(p, cfg: ModelConfig, cache, x, pos):
+    del pos
+    B, _, d = x.shape
+    di = cfg.mlstm_expand * d
+    H = cfg.n_heads
+    hd = di // H
+    xz = x[:, 0] @ p["up"]
+    xm, z = jnp.split(xz, 2, axis=-1)
+    w = p["conv_w"]
+    K = w.shape[0]
+    buf = cache["conv"]
+    conv = sum(buf[:, i] * w[i] for i in range(K - 1)) + xm * w[K - 1]
+    xc = jax.nn.silu(conv + p["conv_b"])
+    new_buf = jnp.concatenate([buf[:, 1:], xm[:, None].astype(buf.dtype)], axis=1)
+    f32 = jnp.float32
+    q = (xc @ p["wq"]).reshape(B, H, hd).astype(f32)
+    k = ((xc @ p["wk"]) * (hd ** -0.5)).reshape(B, H, hd).astype(f32)
+    v = (xm @ p["wv"]).reshape(B, H, hd).astype(f32)
+    gate = (xm @ p["w_if"]).astype(f32) + p["b_if"].astype(f32)
+    it, ft = gate[..., :H], gate[..., H:]
+    (C, n, m), h = _mlstm_cell((cache["C"], cache["n"], cache["m"]), (q, k, v, it, ft))
+    h = h.reshape(B, di).astype(x.dtype)
+    h = h + p["skip"] * xc
+    h = h * jax.nn.silu(z)
+    return (h @ p["down"])[:, None], {"C": C, "n": n, "m": m, "conv": new_buf}
+
+
+# ------------------------------------------------------------------ sLSTM
+def init_slstm(key, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 6)
+    d = cfg.d_model
+    H = cfg.n_heads
+    hd = d // H
+    pf = -(-int(cfg.slstm_proj * d) // 128) * 128    # MXU/mesh aligned
+    return {
+        "wx": dense_init(ks[0], d, 4 * d, dtype),
+        # recurrent weights, block-diagonal per head: (H, hd, 4*hd)
+        "r": (jax.random.normal(ks[1], (H, hd, 4 * hd)) * (hd ** -0.5)).astype(dtype),
+        "b": jnp.zeros((4 * d,), dtype),
+        "up_g": dense_init(ks[2], d, pf, dtype),
+        "up_v": dense_init(ks[3], d, pf, dtype),
+        "down": dense_init(ks[4], pf, d, dtype),
+    }
+
+
+def _slstm_cell(p, cfg: ModelConfig, carry, xg):
+    """carry: (c,n,h,m) each (B,H,hd) / m:(B,H,hd). xg: (B,4d) pre-activations."""
+    c, n, h, m = carry
+    B = xg.shape[0]
+    H = cfg.n_heads
+    hd = cfg.d_model // H
+    rec = jnp.einsum("bhd,hdk->bhk", h, p["r"].astype(jnp.float32))  # (B,H,4hd)
+    g = xg.reshape(B, H, 4 * hd).astype(jnp.float32) + rec
+    zt, it, ft, ot = jnp.split(g, 4, axis=-1)                        # (B,H,hd)
+    z = jnp.tanh(zt)
+    o = jax.nn.sigmoid(ot)
+    logf = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(logf + m, it)
+    i_p = jnp.exp(it - m_new)
+    f_p = jnp.exp(logf + m - m_new)
+    c = f_p * c + i_p * z
+    n = f_p * n + i_p
+    h_new = o * c / jnp.maximum(n, 1e-6)
+    return (c, n, h_new, m_new)
+
+
+def slstm_forward(p, cfg: ModelConfig, x):
+    B, S, d = x.shape
+    H = cfg.n_heads
+    hd = d // H
+    xg = x @ p["wx"] + p["b"]
+    f32 = jnp.float32
+    carry = (jnp.zeros((B, H, hd), f32), jnp.zeros((B, H, hd), f32),
+             jnp.zeros((B, H, hd), f32), jnp.full((B, H, hd), -1e30, f32))
+
+    def step(carry, xg_t):
+        new = _slstm_cell(p, cfg, carry, xg_t)
+        return new, new[2]
+
+    _, hs = jax.lax.scan(step, carry, jnp.moveaxis(xg, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, d).astype(x.dtype)
+    # post-up/down projection (GeGLU, factor slstm_proj)
+    return (jax.nn.gelu(h @ p["up_g"]) * (h @ p["up_v"])) @ p["down"]
+
+
+def init_slstm_cache(cfg: ModelConfig, batch: int, dtype):
+    H = cfg.n_heads
+    hd = cfg.d_model // H
+    f32 = jnp.float32
+    z = lambda: jnp.zeros((batch, H, hd), f32)
+    return {"c": z(), "n": z(), "h": z(), "m": jnp.full((batch, H, hd), -1e30, f32)}
+
+
+def slstm_decode(p, cfg: ModelConfig, cache, x, pos):
+    del pos
+    B, _, d = x.shape
+    xg = x[:, 0] @ p["wx"] + p["b"]
+    carry = (cache["c"], cache["n"], cache["h"], cache["m"])
+    c, n, h, m = _slstm_cell(p, cfg, carry, xg)
+    hh = h.reshape(B, d).astype(x.dtype)
+    y = (jax.nn.gelu(hh @ p["up_g"]) * (hh @ p["up_v"])) @ p["down"]
+    return y[:, None], {"c": c, "n": n, "h": h, "m": m}

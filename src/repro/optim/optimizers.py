@@ -1,0 +1,88 @@
+"""Optimizers as (init, update) pairs over parameter pytrees.
+
+``update(grads, state, params, lr)`` -> (new_params, new_state).  AdamW is
+the dry-run/train-step optimizer (moments in fp32, ZeRO-1-shardable); SGD /
+momentum serve the FL clients (the paper trains clients with SGD).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    if max_norm <= 0:
+        return grads
+    g = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (g + 1e-9))
+    return jax.tree.map(lambda x: x * scale.astype(x.dtype), grads)
+
+
+def sgd() -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params, lr):
+        new = jax.tree.map(lambda w, g: w - lr * g.astype(w.dtype), params, grads)
+        return new, state
+
+    return Optimizer(init, update)
+
+
+def momentum(beta: float = 0.9) -> Optimizer:
+    def init(params):
+        return jax.tree.map(lambda w: jnp.zeros_like(w, jnp.float32), params)
+
+    def update(grads, state, params, lr):
+        new_m = jax.tree.map(lambda m, g: beta * m + g.astype(jnp.float32),
+                             state, grads)
+        new_p = jax.tree.map(lambda w, m: w - (lr * m).astype(w.dtype),
+                             params, new_m)
+        return new_p, new_m
+
+    return Optimizer(init, update)
+
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.01) -> Optimizer:
+    def init(params):
+        return {
+            "m": jax.tree.map(lambda w: jnp.zeros(w.shape, jnp.float32), params),
+            "v": jax.tree.map(lambda w: jnp.zeros(w.shape, jnp.float32), params),
+            "t": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, lr):
+        t = state["t"] + 1
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2)
+                         * jnp.square(g.astype(jnp.float32)), state["v"], grads)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+        def upd(w, m_, v_):
+            step = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            return w - (lr * (step + weight_decay * w.astype(jnp.float32))).astype(w.dtype)
+
+        return (jax.tree.map(upd, params, m, v),
+                {"m": m, "v": v, "t": t})
+
+    return Optimizer(init, update)
+
+
+def get(name: str, **kw) -> Optimizer:
+    return {"sgd": sgd, "momentum": momentum, "adamw": adamw}[name](**kw)

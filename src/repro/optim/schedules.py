@@ -1,0 +1,48 @@
+"""Learning-rate schedules: constant, cosine, and MiniCPM's WSD
+(Warmup-Stable-Decay) [arXiv:2404.06395 §4]."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine(lr: float, total_steps: int, warmup: int = 0, min_frac: float = 0.1):
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        w = jnp.clip(step / jnp.maximum(warmup, 1), 0, 1)
+        prog = jnp.clip((step - warmup) / jnp.maximum(total_steps - warmup, 1), 0, 1)
+        cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return lr * jnp.where(step < warmup, w, cos)
+    return f
+
+
+def wsd(lr: float, total_steps: int, warmup_frac: float = 0.1,
+        decay_frac: float = 0.1, min_frac: float = 0.1):
+    """Warmup → Stable (flat lr) → exponential Decay over the last
+    decay_frac of training."""
+    warmup = max(1, int(total_steps * warmup_frac))
+    decay_start = int(total_steps * (1 - decay_frac))
+
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        w = jnp.clip(step / warmup, 0, 1)
+        d_prog = jnp.clip((step - decay_start)
+                          / jnp.maximum(total_steps - decay_start, 1), 0, 1)
+        decay = min_frac ** d_prog              # exponential anneal to min_frac
+        val = jnp.where(step < warmup, w,
+                        jnp.where(step < decay_start, 1.0, decay))
+        return lr * val
+    return f
+
+
+def get(name: str, lr: float, total_steps: int, warmup: int = 0):
+    if name == "constant":
+        return constant(lr)
+    if name == "cosine":
+        return cosine(lr, total_steps, warmup)
+    if name == "wsd":
+        return wsd(lr, total_steps, warmup_frac=warmup / max(total_steps, 1) or 0.1)
+    raise ValueError(name)

@@ -1,0 +1,33 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests must see ONE device
+(the 512-device forcing belongs exclusively to launch/dryrun.py)."""
+import jax
+import numpy as np
+import pytest
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="session")
+def tiny_fl_setup():
+    """Small federated dataset + participants shared across FL tests."""
+    from repro.core.resources import TABLE_III, participants_from_matrix
+    from repro.data.partition import dirichlet_partition
+    from repro.data.synthetic import make_classification, train_test_split
+
+    ds = make_classification("synth-mnist", 1200, seed=0)
+    train, test = train_test_split(ds)
+    idx = dirichlet_partition(train.y, 20, alpha=1.0, seed=0)
+    parts = participants_from_matrix(TABLE_III[:20],
+                                     n_data=[len(p) for p in idx])
+    client_data = [{"x": train.x[p], "y": train.y[p]} for p in idx]
+    return parts, client_data, train, test

@@ -1,0 +1,62 @@
+"""Procedure 2 participant assignment invariants."""
+import numpy as np
+
+from repro.core import assignment as asg
+from repro.core import compaction, rounds as rnd
+from repro.core.resources import TABLE_III, participants_from_matrix, unit_normalize
+
+
+def _specs(m=4, mar=1.0):
+    c = rnd.ConvergenceConstants()
+    sizes = [(4e5 * 0.5 ** l, 2e6 * 0.5 ** l) for l in range(m)]
+    return asg.build_cluster_specs(sizes, c, E=2, mar=mar), c
+
+
+def test_every_participant_assigned():
+    parts = participants_from_matrix(TABLE_III, n_data=[60] * 40)
+    specs, c = _specs()
+    out = asg.assign(parts, specs, c)
+    assigned = [p for mem in out.members.values() for p in mem]
+    assert sorted(assigned) == list(range(40))
+
+
+def test_fast_participants_reach_higher_clusters():
+    parts = participants_from_matrix(TABLE_III, n_data=[60] * 40)
+    specs, c = _specs()
+    out = asg.assign(parts, specs, c)
+    # mean transmission rate of master cluster >= of the lowest cluster
+    rates = {l: np.mean([parts[p].r for p in mem]) if mem else np.nan
+             for l, mem in out.members.items()}
+    lvls = [l for l in sorted(rates) if rates[l] == rates[l]]
+    if len(lvls) >= 2:
+        assert rates[lvls[0]] > rates[lvls[-1]]
+
+
+def test_tight_mar_forces_demotions():
+    parts = participants_from_matrix(TABLE_III, n_data=[60] * 40)
+    loose, c = _specs(mar=100.0)
+    tight, _ = _specs(mar=0.3)
+    out_loose = asg.assign(parts, loose, c)
+    out_tight = asg.assign(parts, tight, c)
+    assert out_tight.demotions >= out_loose.demotions
+    assert len(out_tight.members[0]) <= len(out_loose.members[0])
+
+
+def test_n_eff_never_exceeds_data():
+    parts = participants_from_matrix(TABLE_III, n_data=list(range(20, 60)))
+    specs, c = _specs(mar=0.5)
+    out = asg.assign(parts, specs, c)
+    for p in parts:
+        assert out.n_eff[p.pid] <= p.n_data
+        assert out.tau[p.pid] >= 1
+
+
+def test_compaction_reduces_cluster_count_and_keeps_order():
+    V = unit_normalize(TABLE_III)
+    labels = np.random.default_rng(0).integers(0, 6, 40)
+    # ensure all 6 appear
+    labels[:6] = np.arange(6)
+    out = compaction.compact(labels, V, 4)
+    assert len(np.unique(out)) == 4
+    assert set(out) == {0, 1, 2, 3}
+    assert len(out) == 40

@@ -1,0 +1,124 @@
+"""Resource-aware clustering: paper-exact anchors + hypothesis properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import clustering as C
+from repro.core import resources as R
+
+
+# ------------------------------------------------------------- paper anchors
+def test_table_i_normalization_matches_paper():
+    """Table I row p2 = [50,15,30] → normalized [0,1,1]; p5 → [1,0,0]."""
+    Vb = R.unit_normalize(R.TABLE_I)
+    np.testing.assert_allclose(Vb[1], [0.0, 1.0, 1.0])
+    np.testing.assert_allclose(Vb[4], [1.0, 0.0, 0.0])
+    np.testing.assert_allclose(Vb[0], [0.5, 0.375, 0.5])
+
+
+def test_example2_table_i_gives_k3():
+    """Example 2: 10 participants, λ=1/3 → optimal k = 3 (k_max=⌊√10⌋=3)."""
+    res = C.optimal_clusters(R.TABLE_I, R.LAMBDA_EQUAL, seed=0)
+    assert res.k == 3
+
+
+def test_table_iv_outcomes_with_paper_kmeans():
+    """Table IV (single-run k-means, seed 3): unnormalized → k=4 (transmission
+    dominates); normalized λ=(0.4,0.4,0.2) → k=5."""
+    a = C.optimal_clusters(R.TABLE_III, R.LAMBDA_EQUAL, normalize=False,
+                           seed=3, restarts=1)
+    b = C.optimal_clusters(R.TABLE_III, R.LAMBDA_PAPER, normalize=True,
+                           seed=3, restarts=1)
+    assert a.k == 4
+    assert b.k == 5
+
+
+def test_multirestart_kmeans_finds_higher_di():
+    weak = C.optimal_clusters(R.TABLE_III, R.LAMBDA_PAPER, seed=3, restarts=1)
+    strong = C.optimal_clusters(R.TABLE_III, R.LAMBDA_PAPER, seed=3, restarts=8)
+    assert max(strong.di_values.values()) >= max(weak.di_values.values()) - 1e-9
+
+
+def test_dbscan_di_decreases_with_k_table_ii():
+    """Paper Table II: DBSCAN's DI falls with k (k=2 looks 'optimal')."""
+    Vb = R.unit_normalize(R.TABLE_III)
+    X = Vb * np.sqrt(np.asarray(R.LAMBDA_PAPER))
+    S = R.similarity_matrix(Vb, R.LAMBDA_PAPER)
+    dis = {}
+    for k in (2, 4, 6):
+        lab = C.dbscan_at_k(X, k)
+        if lab is not None:
+            dis[k] = C.dunn_index(S, lab)
+    assert len(dis) >= 2
+    ks = sorted(dis)
+    assert dis[ks[0]] >= dis[ks[-1]]
+
+
+def test_cluster_ordering_by_resources():
+    res = C.optimal_clusters(R.TABLE_III, R.LAMBDA_PAPER, seed=3)
+    lab = C.order_clusters_by_resources(res.normalized, res.labels)
+    means = [res.normalized[lab == f].sum(axis=1).mean()
+             for f in range(len(np.unique(lab)))]
+    assert all(means[i] >= means[i + 1] - 1e-9 for i in range(len(means) - 1))
+
+
+# ------------------------------------------------------------- properties
+@given(st.integers(0, 10_000))
+@settings(max_examples=20, deadline=None)
+def test_normalization_bounds(seed):
+    rng = np.random.default_rng(seed)
+    V = rng.uniform(0.1, 100, (12, 3))
+    Vb = R.unit_normalize(V)
+    assert Vb.min() >= 0.0 and Vb.max() <= 1.0 + 1e-12
+    assert np.any(np.isclose(Vb.max(axis=0), 1.0))
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=20, deadline=None)
+def test_similarity_is_metric_like(seed):
+    rng = np.random.default_rng(seed)
+    Vb = rng.uniform(0, 1, (10, 3))
+    lam = rng.dirichlet([1, 1, 1])
+    S = R.similarity_matrix(Vb, lam)
+    assert np.allclose(S, S.T)
+    assert np.allclose(np.diag(S), 0)
+    assert (S >= 0).all()
+    # triangle inequality (weighted Euclidean IS a metric)
+    for _ in range(10):
+        i, j, k = rng.integers(0, 10, 3)
+        assert S[i, j] <= S[i, k] + S[k, j] + 1e-9
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=10, deadline=None)
+def test_dunn_index_positive_and_merge_insensitive(seed):
+    rng = np.random.default_rng(seed)
+    # two well-separated blobs → k=2 should score high DI
+    a = rng.normal(0.1, 0.02, (8, 3))
+    b = rng.normal(0.9, 0.02, (8, 3))
+    V = np.clip(np.concatenate([a, b]), 0, 1)
+    S = R.similarity_matrix(V, (1 / 3, 1 / 3, 1 / 3))
+    labels = np.array([0] * 8 + [1] * 8)
+    di = C.dunn_index(S, labels)
+    assert di > 1.0       # separation ≫ diameter
+    # random split scores worse
+    rand = rng.permutation(labels)
+    assert C.dunn_index(S, rand) <= di
+
+
+def test_kmeans_recovers_separated_clusters():
+    rng = np.random.default_rng(1)
+    centers = np.array([[0.1, 0.1, 0.1], [0.9, 0.9, 0.9], [0.1, 0.9, 0.5]])
+    X = np.concatenate([c + rng.normal(0, 0.03, (15, 3)) for c in centers])
+    lab, _ = C.kmeans(X, 3, seed=0)
+    # every ground-truth group maps to exactly one cluster id
+    for g in range(3):
+        assert len(np.unique(lab[g * 15:(g + 1) * 15])) == 1
+    assert len(np.unique(lab)) == 3
+
+
+def test_optics_at_k_returns_k_clusters():
+    Vb = R.unit_normalize(R.TABLE_III)
+    for k in (2, 3, 4):
+        lab = C.optics_at_k(Vb, k)
+        assert len(np.unique(lab)) == k

@@ -1,0 +1,92 @@
+"""KD loss (§IV-C): math properties + Pallas kernel vs jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import distill
+from repro.kernels.distill import ops as dops
+from repro.kernels.distill import ref as dref
+
+
+def test_kl_zero_when_teacher_equals_student(key):
+    t = jax.random.normal(key, (8, 50))
+    kl = distill.kl_teacher_student(t, t, T=2.0)
+    np.testing.assert_allclose(np.asarray(kl), 0.0, atol=1e-5)
+
+
+def test_kl_positive(key):
+    t = jax.random.normal(key, (8, 50))
+    s = jax.random.normal(jax.random.fold_in(key, 1), (8, 50))
+    assert (np.asarray(distill.kl_teacher_student(t, s, T=2.0)) > 0).all()
+
+
+def test_kd_loss_reduces_to_ce_at_alpha_1(key):
+    s = jax.random.normal(key, (8, 50))
+    t = jax.random.normal(jax.random.fold_in(key, 1), (8, 50))
+    y = jax.random.randint(key, (8,), 0, 50)
+    kd = distill.kd_loss(s, y, t, T=2.0, alpha=1.0)
+    ce = jnp.mean(distill.ce_loss(s, y))
+    np.testing.assert_allclose(float(kd), float(ce), rtol=1e-6)
+
+
+def test_vocab_mask_excludes_padding(key):
+    s = jax.random.normal(key, (4, 32))
+    t = jax.random.normal(jax.random.fold_in(key, 1), (4, 32))
+    y = jax.random.randint(key, (4,), 0, 24)
+    mask = jnp.arange(32) < 24
+    # huge logits in the padded region must not change the masked loss
+    s_bad = s.at[:, 24:].set(100.0)
+    a = distill.kd_loss(s, y, t, valid_mask=mask)
+    b = distill.kd_loss(s_bad, y, t, valid_mask=mask)
+    np.testing.assert_allclose(float(a), float(b), rtol=1e-5)
+
+
+@pytest.mark.parametrize("N,V,T,alpha", [
+    (8, 512, 1.0, 0.5), (16, 1000, 2.0, 0.3), (4, 2048, 4.0, 0.0),
+    (128, 512, 2.0, 0.3), (8, 7000, 3.0, 0.7),
+])
+def test_kernel_matches_ref_sweep(key, N, V, T, alpha):
+    s = jax.random.normal(key, (N, V)) * 3
+    t = jax.random.normal(jax.random.fold_in(key, 7), (N, V)) * 3
+    y = jax.random.randint(key, (N,), 0, V)
+    got = float(dops.kd_loss(s, y, t, T=T, alpha=alpha))
+    want = float(jnp.mean(dref.kd_loss_rows(s, t, y, T=T, alpha=alpha)))
+    assert abs(got - want) < 1e-3 * max(1.0, abs(want))
+
+
+def test_kernel_bf16_inputs(key):
+    s = (jax.random.normal(key, (16, 512)) * 3).astype(jnp.bfloat16)
+    t = (jax.random.normal(jax.random.fold_in(key, 7), (16, 512)) * 3).astype(jnp.bfloat16)
+    y = jax.random.randint(key, (16,), 0, 512)
+    got = float(dops.kd_loss(s, y, t))
+    want = float(jnp.mean(dref.kd_loss_rows(s, t, y)))
+    assert abs(got - want) < 5e-2 * max(1.0, abs(want))
+
+
+def test_kernel_matches_core_jnp_path(key):
+    """core.distill.kd_loss(use_kernel=True) ≡ jnp path on padded vocab."""
+    s = jax.random.normal(key, (2, 6, 300)) * 2      # (B,S,V) logits
+    t = jax.random.normal(jax.random.fold_in(key, 1), (2, 6, 300)) * 2
+    y = jax.random.randint(key, (2, 6), 0, 300)
+    a = float(distill.kd_loss(s, y, t, T=2.0, alpha=0.3))
+    b = float(distill.kd_loss(s, y, t, T=2.0, alpha=0.3, use_kernel=True))
+    assert abs(a - b) < 2e-3 * max(1.0, abs(a))
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=10, deadline=None)
+def test_kernel_property_random(seed):
+    k = jax.random.PRNGKey(seed)
+    N = int(jax.random.randint(k, (), 2, 40))
+    V = int(jax.random.randint(jax.random.fold_in(k, 1), (), 50, 3000))
+    T = float(jax.random.uniform(jax.random.fold_in(k, 2), (), minval=0.5,
+                                 maxval=6.0))
+    s = jax.random.normal(jax.random.fold_in(k, 3), (N, V)) * 4
+    t = jax.random.normal(jax.random.fold_in(k, 4), (N, V)) * 4
+    y = jax.random.randint(jax.random.fold_in(k, 5), (N,), 0, V)
+    got = float(dops.kd_loss(s, y, t, T=T, alpha=0.3))
+    want = float(jnp.mean(dref.kd_loss_rows(s, t, y, T=T, alpha=0.3)))
+    assert np.isfinite(got)
+    assert abs(got - want) < 2e-3 * max(1.0, abs(want))

@@ -1,0 +1,125 @@
+"""Mesh/sharding integration on 8 forced host devices (subprocess-isolated so
+the main test process keeps its single device).  Mirrors launch/dryrun.py at
+smoke scale: lower+compile train & decode under the sharding rules, and check
+the shard_map FedAvg aggregation equals the single-device tree aggregation."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(script: str):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["JAX_PLATFORMS"] = "cpu"
+    return subprocess.run([sys.executable, "-c", textwrap.dedent(script)],
+                          capture_output=True, text=True, timeout=500, env=env)
+
+
+@pytest.mark.slow
+def test_sharded_train_and_decode_compile():
+    r = _run("""
+        import jax, jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P
+        from repro.configs import get_config
+        from repro.launch import sharding, specs
+        from repro.launch.dryrun import make_train_step, make_serve_step
+        from repro.launch.mesh import make_host_mesh
+        from repro.models import registry
+        from repro.optim import optimizers
+        from repro.configs.base import InputShape
+
+        assert len(jax.devices()) == 8
+        mesh = make_host_mesh(2, 4)
+        cfg = get_config("jamba-v0.1-52b", smoke=True).replace(
+            d_model=256, n_heads=4, n_kv_heads=2, head_dim=64)
+        shape = InputShape("t", 64, 8, "train")
+        p_shape = specs.params_shape(cfg)
+        p_spec = sharding.param_specs(cfg, p_shape, mesh)
+        opt_shape = jax.eval_shape(optimizers.adamw().init, p_shape)
+        o_spec = {"m": p_spec, "v": p_spec, "t": P()}
+        batch = specs.train_inputs(cfg, shape)
+        b_spec = sharding.batch_specs(cfg, batch, mesh)
+        step, _ = make_train_step(cfg)
+        jitted = jax.jit(step,
+            in_shardings=sharding.to_named(mesh, (p_spec, o_spec, b_spec)),
+            out_shardings=sharding.to_named(mesh, (p_spec, o_spec, P())))
+        with mesh:
+            c = jitted.lower(p_shape, opt_shape, batch).compile()
+        assert c.cost_analysis() is not None
+        print("TRAIN_OK")
+
+        dshape = InputShape("d", 64, 8, "decode")
+        token, pos, cache_shape = specs.decode_inputs(cfg, dshape)
+        c_spec = sharding.cache_specs(cfg, cache_shape, mesh, shard_seq=False)
+        serve = make_serve_step(cfg)
+        jit2 = jax.jit(serve,
+            in_shardings=sharding.to_named(mesh, (p_spec, c_spec, P(("data",), None), P())),
+            out_shardings=sharding.to_named(mesh, (P(), c_spec)))
+        with mesh:
+            c2 = jit2.lower(p_shape, cache_shape, token, pos).compile()
+        print("DECODE_OK")
+    """)
+    assert "TRAIN_OK" in r.stdout and "DECODE_OK" in r.stdout, (
+        r.stdout + "\n" + r.stderr[-3000:])
+
+
+@pytest.mark.slow
+def test_shard_map_aggregation_multidevice():
+    r = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import aggregation as agg
+        from repro.launch.mesh import make_host_mesh
+
+        assert len(jax.devices()) == 8
+        mesh = make_host_mesh(8, 1)
+        key = jax.random.PRNGKey(0)
+        stack = {"w": jax.random.normal(key, (16, 33)),
+                 "b": jax.random.normal(key, (16, 5, 3))}
+        w = agg.normalized_weights(np.arange(1, 17))
+        a = agg.aggregate(stack, w)
+        b = agg.aggregate_sharded(mesh, stack, w)
+        for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                       rtol=1e-5, atol=1e-6)
+        print("AGG_OK")
+    """)
+    assert "AGG_OK" in r.stdout, r.stdout + "\n" + r.stderr[-3000:]
+
+
+@pytest.mark.slow
+def test_long_context_seq_sharding_compiles():
+    """batch=1 decode with the KV-cache sequence axis sharded (long_500k
+    pattern) must lower+compile with GSPMD-inserted collectives."""
+    r = _run("""
+        import jax
+        from jax.sharding import PartitionSpec as P
+        from repro.configs import get_config
+        from repro.configs.base import InputShape
+        from repro.launch import sharding, specs
+        from repro.launch.dryrun import make_serve_step
+        from repro.launch.mesh import make_host_mesh
+
+        mesh = make_host_mesh(2, 4)
+        cfg = get_config("gemma2-9b", smoke=True).replace(
+            d_model=256, n_heads=4, n_kv_heads=2, head_dim=64,
+            sliding_window=64)
+        dshape = InputShape("l", 512, 1, "decode")
+        token, pos, cache_shape = specs.decode_inputs(cfg, dshape)
+        p_shape = specs.params_shape(cfg)
+        p_spec = sharding.param_specs(cfg, p_shape, mesh)
+        c_spec = sharding.cache_specs(cfg, cache_shape, mesh, shard_seq=True)
+        jit2 = jax.jit(make_serve_step(cfg),
+            in_shardings=sharding.to_named(mesh, (p_spec, c_spec, P(), P())),
+            out_shardings=sharding.to_named(mesh, (P(), c_spec)))
+        with mesh:
+            c = jit2.lower(p_shape, cache_shape, token, pos).compile()
+        hlo = c.as_text()
+        print("LONG_OK")
+    """)
+    assert "LONG_OK" in r.stdout, r.stdout + "\n" + r.stderr[-3000:]

@@ -1,0 +1,68 @@
+"""§IV-A dynamic resources: participants upgrade/downgrade clusters when
+their (s, r, a) change mid-deployment."""
+import numpy as np
+
+from repro.core import assignment as asg
+from repro.core import rounds as rnd
+from repro.core.resources import TABLE_III, participants_from_matrix
+
+
+def _setup(mar=1.0):
+    parts = participants_from_matrix(TABLE_III, n_data=[60] * 40)
+    c = rnd.ConvergenceConstants()
+    sizes = [(4e5 * 0.5 ** l, 2e6 * 0.5 ** l) for l in range(4)]
+    specs = asg.build_cluster_specs(sizes, c, E=2, mar=mar)
+    out = asg.assign(parts, specs, c)
+    return parts, specs, c, out
+
+
+def _level_of(out, pid):
+    return next(l for l, m in out.members.items() if pid in m)
+
+
+def test_degraded_participant_downgrades():
+    parts, specs, c, out = _setup()
+    # pick someone in the master cluster and choke their link
+    pid = out.members[0][0]
+    lvl0 = _level_of(out, pid)
+    p = parts[pid]
+    p.r = 0.5                                     # Mbps — straggler now
+    old, new = asg.reassign(p, out, specs, c)
+    assert old == lvl0
+    assert new > old                              # downgraded
+    assert pid in out.members[new] and pid not in out.members[old]
+
+
+def test_boosted_participant_upgrades():
+    parts, specs, c, out = _setup()
+    low = max(l for l, m in out.members.items() if m)
+    if not out.members[low]:
+        return
+    pid = out.members[low][0]
+    p = parts[pid]
+    p.s, p.r, p.a = 3.2, 80.0, 8.0                # best-in-fleet resources
+    old, new = asg.reassign(p, out, specs, c)
+    assert old == low
+    assert new <= old                             # upgraded (or equal)
+    assert new == 0                               # in fact reaches the master
+
+
+def test_reassign_preserves_total_membership():
+    parts, specs, c, out = _setup()
+    for pid in (0, 7, 21):
+        parts[pid].r = max(0.5, parts[pid].r / 10)
+        asg.reassign(parts[pid], out, specs, c)
+    assigned = sorted(p for mem in out.members.values() for p in mem)
+    assert assigned == list(range(40))            # nobody lost or duplicated
+
+
+def test_server_update_resources(tiny_fl_setup):
+    from repro.core import server as srv
+    from repro.core.families import cnn_family
+    parts, client_data, train, test = tiny_fl_setup
+    fam = cnn_family(classes=10, in_channels=1, base_width=0.125)
+    cfg = srv.FLConfig(rounds=1, steps_per_round=1, compact_to=3, seed=3)
+    eng = srv.FedRAC(parts, client_data, fam, cfg, classes=10).setup()
+    pid = eng.assignment.members[0][0]
+    old, new = eng.update_resources(pid, r=0.2)
+    assert old == 0 and new > 0

@@ -1,0 +1,128 @@
+"""End-to-end Fed-RAC system behaviour + baselines (integration tests)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import baselines as bl
+from repro.core import server as srv
+from repro.core.families import cnn_family
+from repro.models import cnn
+
+FAM = cnn_family(classes=10, in_channels=1, base_width=0.125)
+CFG = dict(rounds=6, steps_per_round=4, lr=0.08, seed=3, local_batch=16)
+
+
+def _testb(test):
+    return {"x": jnp.asarray(test.x), "y": jnp.asarray(test.y)}
+
+
+@pytest.fixture(scope="module")
+def fedrac_result(tiny_fl_setup):
+    parts, client_data, train, test = tiny_fl_setup
+    cfg = srv.FLConfig(compact_to=3, **CFG)
+    eng = srv.FedRAC(parts, client_data, FAM, cfg, classes=10).setup()
+    res = eng.train(_testb(test))
+    return eng, res
+
+
+def test_fedrac_learns(fedrac_result):
+    eng, res = fedrac_result
+    assert res.global_acc > 0.22          # 10 classes, random = 0.10
+    assert res.final_acc[0] > 0.30        # master cluster trains properly
+
+
+def test_fedrac_all_participants_used(fedrac_result):
+    eng, res = fedrac_result
+    assigned = [p for mem in res.assignment.members.values() for p in mem]
+    assert sorted(assigned) == list(range(20))   # no straggler discarded
+
+
+def test_fedrac_clusters_ordered(fedrac_result):
+    eng, res = fedrac_result
+    assert res.m == 3
+    assert res.k_optimal >= 2
+    assert max(res.di_values.values()) > 0
+
+
+def test_master_slave_kd_helps_small_model(tiny_fl_setup):
+    """Fig. 3 mechanism, isolated: with a WELL-TRAINED master as teacher, a
+    level-2 slave model distilled on limited data beats the same model
+    trained on the same data with plain CE.  (The full-engine comparison is
+    noisy at CPU scale: a half-trained teacher can transiently hurt.)"""
+    from repro.core.client import local_update
+    from repro.data.sampler import sample_batches
+    parts, client_data, train, test = tiny_fl_setup
+    key = jax.random.PRNGKey(0)
+    testb = _testb(test)
+
+    # teacher: master model trained centrally to decent accuracy
+    teacher = FAM.init(key, 0)
+    loss0 = jax.tree_util.Partial(FAM.loss_and_logits, 0)
+    batches = jax.tree.map(jnp.asarray, sample_batches(
+        train.x, train.y, 32, 60, seed=0))
+    teacher, _ = jax.jit(lambda p, b: local_update(loss0, p, b, 0.08))(
+        teacher, batches)
+    t_acc = float(jnp.mean(jnp.argmax(FAM.loss_and_logits(0, teacher, testb)[1],
+                                      -1) == testb["y"]))
+    assert t_acc > 0.5
+
+    # student: level-2 slave on LIMITED data, KD vs plain CE
+    small = jax.tree.map(jnp.asarray, sample_batches(
+        train.x[:200], train.y[:200], 16, 24, seed=1))
+    loss2 = jax.tree_util.Partial(FAM.loss_and_logits, 2)
+    t_logits = jax.vmap(lambda b: loss0(teacher, b)[1])(small)
+    s0 = FAM.init(jax.random.fold_in(key, 5), 2)
+    kd_student, _ = jax.jit(lambda p, b, t: local_update(
+        loss2, p, b, 0.08, teacher_logits=t, kd_T=2.0, kd_alpha=0.5))(
+        s0, small, t_logits)
+    ce_student, _ = jax.jit(lambda p, b: local_update(loss2, p, b, 0.08))(
+        s0, small)
+    acc = {}
+    for name, p in (("kd", kd_student), ("ce", ce_student)):
+        acc[name] = float(jnp.mean(jnp.argmax(
+            FAM.loss_and_logits(2, p, testb)[1], -1) == testb["y"]))
+    assert acc["kd"] >= acc["ce"] - 0.02      # KD at least matches, usually beats
+
+
+def _loss_fn(params, batch):
+    logits = cnn.forward(params, batch["x"])
+    lse = jax.nn.logsumexp(logits, -1)
+    picked = jnp.take_along_axis(logits, batch["y"][:, None], -1)[:, 0]
+    return jnp.mean(lse - picked), logits
+
+
+def test_baselines_run_and_learn(tiny_fl_setup):
+    parts, client_data, train, test = tiny_fl_setup
+    testb = _testb(test)
+    cfg = bl.BaselineConfig(rounds=4, steps_per_round=3, lr=0.08, seed=0)
+    init = cnn.init_params(jax.random.PRNGKey(0), base_width=0.125 * 0.25)
+    _, h_avg = bl.fedavg(_loss_fn, init, parts, client_data, testb, cfg)
+    _, h_prox = bl.fedprox(_loss_fn, init, parts, client_data, testb, cfg)
+    _, h_oort = bl.oort(_loss_fn, init, parts, client_data, testb, cfg,
+                        flops_per_sample=1e6, model_bytes=2e5)
+    for h in (h_avg, h_prox, h_oort):
+        assert len(h) == 4 and h[-1] > 0.15
+
+
+def test_heterofl_runs(tiny_fl_setup):
+    parts, client_data, train, test = tiny_fl_setup
+    levels = {p.pid: p.pid % 3 for p in parts}
+    cfg = bl.BaselineConfig(rounds=6, steps_per_round=3, lr=0.08, seed=0,
+                            alpha=0.5)
+    _, hist = bl.heterofl(parts, client_data, levels, _testb(test), cfg,
+                          in_channels=1, classes=10, levels=3)
+    # HeteroFL's sliced aggregation is noisy early; it must clearly exceed
+    # the 0.10 random baseline within 6 rounds
+    assert len(hist) == 6 and max(hist) > 0.15
+
+
+def test_oort_selects_fewer_clients(tiny_fl_setup):
+    parts, client_data, train, test = tiny_fl_setup
+    cfg = bl.BaselineConfig(rounds=1, steps_per_round=2, lr=0.05,
+                            oort_frac=0.3, seed=0)
+    init = cnn.init_params(jax.random.PRNGKey(0), base_width=0.125 * 0.25)
+    # selection function is internal; behavioural check: runs fine + history
+    _, h = bl.oort(_loss_fn, init, parts, client_data, _testb(test), cfg,
+                   flops_per_sample=1e6, model_bytes=2e5)
+    assert len(h) == 1

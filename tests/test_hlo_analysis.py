@@ -1,0 +1,50 @@
+"""HLO collective parser + roofline term unit tests."""
+from repro.launch import hlo_analysis as H
+
+
+HLO = """
+  %ag = bf16[256,4096]{1,0} all-gather(%x), replica_groups=...
+  %ar.1 = f32[1024]{0} all-reduce(%y), to_apply=%sum
+  %t = (f32[8,128]{1,0}, f32[8]{0}) all-reduce-start(%a, %b)
+  %td = (f32[8,128]{1,0}, f32[8]{0}) all-reduce-done(%t)
+  %rs = bf16[64,64]{1,0} reduce-scatter(%z), dimensions={0}
+  %cp = bf16[2,2]{1,0} collective-permute(%w), source_target_pairs=...
+  %a2a = f32[16,16]{1,0} all-to-all(%v), dimensions={1}
+  %dot = f32[128,128]{1,0} dot(%p, %q)
+"""
+
+
+def test_collective_bytes_parsing():
+    out = H.collective_bytes(HLO)
+    b = out["bytes"]
+    assert b["all-gather"] == 256 * 4096 * 2
+    # plain all-reduce + the -start tuple (done is skipped)
+    assert b["all-reduce"] == 1024 * 4 + (8 * 128 * 4 + 8 * 4)
+    assert b["reduce-scatter"] == 64 * 64 * 2
+    assert b["collective-permute"] == 2 * 2 * 2
+    assert b["all-to-all"] == 16 * 16 * 4
+    assert out["counts"]["all-reduce"] == 2
+    assert out["total"] == sum(b.values())
+
+
+def test_dot_not_counted():
+    out = H.collective_bytes("%dot = f32[128,128]{1,0} dot(%p, %q)")
+    assert out["total"] == 0
+
+
+def test_roofline_terms_and_dominance():
+    r = H.Roofline(flops_per_device=197e12, bytes_per_device=819e9,
+                   collective_bytes_per_device=0.0, chips=4,
+                   model_flops_total=4 * 197e12 / 2)
+    assert abs(r.compute_s - 1.0) < 1e-9
+    assert abs(r.memory_s - 1.0) < 1e-9
+    assert r.collective_s == 0.0
+    assert r.useful_flops_ratio == 0.5
+    r2 = H.Roofline(1.0, 1.0, 50e9 * 10, chips=1)
+    assert r2.dominant == "collective"
+    assert abs(r2.collective_s - 10.0) < 1e-9
+
+
+def test_tuple_shape_bytes():
+    assert H._shape_bytes("(f32[4,4]{1,0}, bf16[2]{0})") == 64 + 4
+    assert H._shape_bytes("pred[128]") == 128

@@ -1,0 +1,76 @@
+"""Eq. 6/7/8 — paper Example 3 exact + bound behaviour properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import rounds as rnd
+
+
+def test_example3_exact():
+    """μ=0.7, L=1.5, B=1, E||w1-w*||=0.08, E_f=20, q_o=0.05 → β=20, R_f=6."""
+    c = rnd.example3_constants()
+    assert rnd.beta(20, c) == 20          # max(8·1.5/0.7=17.14, 20)
+    assert rnd.communication_rounds(0.05, 20, c, B=1.0) == 6
+
+
+def test_rounds_decrease_with_looser_precision():
+    c = rnd.example3_constants()
+    rs = [rnd.communication_rounds(q, 20, c, B=1.0)
+          for q in (0.01, 0.05, 0.2)]
+    assert rs[0] >= rs[1] >= rs[2]
+
+
+def test_rounds_decrease_with_more_local_epochs():
+    c = rnd.example3_constants()
+    # more local work per round → fewer rounds (for fixed B)
+    assert (rnd.communication_rounds(0.05, 40, c, B=1.0)
+            <= rnd.communication_rounds(0.05, 5, c, B=1.0))
+
+
+def test_precision_bound_consistent_with_eq7():
+    """Rounds from Eq. 7 must achieve precision ≤ q_target under Eq. 6
+    (same B) — the inversion is self-consistent."""
+    c = rnd.ConvergenceConstants()
+    eps = np.full(8, 1 / 8)
+    E = 5
+    B = rnd.b_constant(eps, E, c)
+    R = rnd.communication_rounds(0.05, E, c, B=B)
+    q = rnd.precision_bound(eps, E, R, c, B=B)
+    assert q <= 0.05 + 1e-9
+
+
+@given(st.integers(2, 12), st.integers(0, 1000))
+@settings(max_examples=20, deadline=None)
+def test_precision_improves_with_rounds(F, seed):
+    rng = np.random.default_rng(seed)
+    c = rnd.ConvergenceConstants()
+    n = rng.integers(10, 100, F).astype(float)
+    eps = n / n.sum()
+    qs = [rnd.precision_bound(eps, 5, R, c) for R in (2, 8, 32)]
+    assert qs[0] >= qs[1] >= qs[2]
+
+
+def test_single_participant_has_zero_error():
+    """Procedure 2 Case 1: err ≡ 0 for a lone participant."""
+    c = rnd.ConvergenceConstants()
+    assert rnd.optimization_error([1.0], [10], 0.01, 10, c) == 0.0
+
+
+@given(st.integers(0, 1000))
+@settings(max_examples=20, deadline=None)
+def test_error_grows_with_tau_heterogeneity(seed):
+    """Eq. 8: more heterogeneous τ_j (same mean) → larger bound."""
+    c = rnd.ConvergenceConstants()
+    eps = np.full(4, 0.25)
+    homo = rnd.optimization_error(eps, [10, 10, 10, 10], 0.01, 20, c)
+    hetero = rnd.optimization_error(eps, [1, 5, 15, 19], 0.01, 20, c)
+    assert hetero > homo
+
+
+def test_error_decreases_with_rounds():
+    c = rnd.ConvergenceConstants()
+    eps = np.full(4, 0.25)
+    taus = [2, 4, 8, 16]
+    e1 = rnd.optimization_error(eps, taus, 0.01, 5, c)
+    e2 = rnd.optimization_error(eps, taus, 0.01, 50, c)
+    assert e2 < e1

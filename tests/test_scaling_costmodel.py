@@ -1,0 +1,93 @@
+"""α-compression family, analytic param counts, and the MAR cost model."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_archs
+from repro.core import cost_model, scaling
+from repro.core.resources import Participant
+from repro.models import registry
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_analytic_param_count_matches_init(arch, key):
+    cfg = get_config(arch, smoke=True)
+    params = registry.init_params(cfg, key)
+    real = registry.param_count(params)
+    approx = scaling.param_count(cfg)
+    assert abs(real - approx) / real < 0.03, (arch, real, approx)
+
+
+def test_compress_family_monotone():
+    cfg = get_config("qwen3-8b")
+    fam = scaling.model_family(cfg, 0.5, 4)
+    sizes = [scaling.param_count(c) for c in fam]
+    assert all(a > b for a, b in zip(sizes, sizes[1:]))
+    assert fam[0] is cfg                      # master uncompressed (M1 = M)
+    for c in fam[1:]:
+        assert c.d_ff % 128 == 0              # MXU/mesh alignment preserved
+        assert c.d_model == cfg.d_model       # KD logit space unchanged
+        assert c.vocab_size == cfg.vocab_size
+
+
+def test_compress_moe_reduces_experts():
+    cfg = get_config("qwen3-moe-235b-a22b")
+    c2 = scaling.compress_config(cfg, 0.5, 2)
+    assert c2.n_experts == 32
+    assert c2.n_experts >= c2.experts_per_tok
+
+
+def test_active_params_moe_smaller_than_total():
+    cfg = get_config("qwen3-moe-235b-a22b")
+    assert scaling.active_param_count(cfg) < 0.25 * scaling.param_count(cfg)
+    # brief: ~235B total / ~22B active
+    assert 1.8e11 < scaling.param_count(cfg) < 2.6e11
+    assert 1.5e10 < scaling.active_param_count(cfg) < 3.0e10
+
+
+def test_param_counts_match_brief_sizes():
+    """Sanity vs the assigned model-card sizes (loose bands; vocab padding
+    and tied embeddings shift totals slightly)."""
+    bands = {
+        "olmo-1b": (0.9e9, 1.6e9),
+        "qwen3-8b": (7e9, 9.5e9),
+        "gemma2-9b": (8e9, 11e9),
+        "jamba-v0.1-52b": (4.3e10, 6.0e10),
+        "minicpm-2b": (2.2e9, 3.3e9),
+        "qwen2-vl-2b": (1.2e9, 2.3e9),
+        "xlstm-350m": (2.8e8, 5.5e8),
+    }
+    for arch, (lo, hi) in bands.items():
+        n = scaling.param_count(get_config(arch))
+        assert lo <= n <= hi, (arch, n)
+
+
+def test_cost_model_round_time_components():
+    p = Participant(0, s=2.0, r=10.0, a=4, n_data=100)
+    t_total = cost_model.round_time(p, 1e7, 4e6, E=2)
+    assert t_total == pytest.approx(
+        cost_model.train_time(p, 1e7, 2) + cost_model.comm_time(p, 4e6))
+    # slower link → strictly more time
+    slow = Participant(1, s=2.0, r=1.0, a=4, n_data=100)
+    assert cost_model.round_time(slow, 1e7, 4e6, 2) > t_total
+
+
+def test_mar_parallel_beats_sequential():
+    """Eq. 9 vs Eq. 10: master-then-parallel-slaves < fully sequential."""
+    for m in (2, 3, 5):
+        for kappa in (0.3, 0.5, 0.8):
+            par = cost_model.mar_parallel(100.0, kappa, m)
+            seq = cost_model.mar_sequential(100.0, kappa, m)
+            assert par <= seq + 1e-9
+    # m=1: both equal the single cluster time
+    assert cost_model.mar_parallel(50.0, 0.5, 1) == pytest.approx(50.0)
+    assert cost_model.mar_sequential(50.0, 0.5, 1) == pytest.approx(50.0)
+
+
+def test_analytic_step_flops_orders():
+    cfg = get_config("olmo-1b")
+    tr = scaling.analytic_step_flops(cfg, "train", 256, 4096)
+    pf = scaling.analytic_step_flops(cfg, "prefill", 256, 4096)
+    dc = scaling.analytic_step_flops(cfg, "decode", 256, 4096)
+    assert tr > pf > dc
+    assert tr == pytest.approx(3 * pf, rel=1e-6)

@@ -16,6 +16,11 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+try:                                    # jax >= 0.5 top-level export
+    _shard_map = jax.shard_map
+except AttributeError:                  # jax 0.4.x experimental location
+    from jax.experimental.shard_map import shard_map as _shard_map
+
 
 def aggregate(params_stack, weights):
     """params_stack: pytree with leading client dim C; weights: (C,) summing to 1."""
@@ -39,7 +44,7 @@ def aggregate_sharded(mesh, params_stack, weights, axis: str = "data"):
         return jax.tree.map(lambda x: jax.lax.psum(x, axis), local)
 
     specs_in = jax.tree.map(lambda _: P(axis), params_stack)
-    fn = jax.shard_map(
+    fn = _shard_map(
         local_agg, mesh=mesh,
         in_specs=(specs_in, P(axis)),
         out_specs=jax.tree.map(lambda _: P(), params_stack))

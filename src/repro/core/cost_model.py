@@ -31,9 +31,19 @@ def comm_time(p: Participant, model_bytes: float) -> float:
 
 
 def round_time(p: Participant, flops_per_sample: float, model_bytes: float,
-               E: int, n_i: int | None = None) -> float:
-    """T_i = T_i^a E + T_i^c."""
-    return train_time(p, flops_per_sample, E, n_i) + comm_time(p, model_bytes)
+               E: int, n_i: int | None = None,
+               compute_slowdown: float = 1.0) -> float:
+    """T_i = T_i^a E + T_i^c.  ``compute_slowdown`` multiplies T_i^a for
+    transient device conditions (repro.sim straggler spikes)."""
+    return (train_time(p, flops_per_sample, E, n_i) * compute_slowdown
+            + comm_time(p, model_bytes))
+
+
+def round_bytes(model_bytes: float, *, download: bool = True,
+                upload: bool = True) -> float:
+    """Per-participant traffic in one round: WPM down + WPM up (§III-B).
+    A deadline-dropped participant still burned its download."""
+    return model_bytes * (float(download) + float(upload))
 
 
 def total_time_sync(times: np.ndarray, rounds: int) -> float:

@@ -16,7 +16,7 @@ import numpy as np
 
 from repro.core import aggregation, assignment as asg, clustering, compaction
 from repro.core import cost_model, rounds as rnd
-from repro.core.client import local_update
+from repro.core.client import local_update, make_cluster_update
 from repro.core.resources import (LAMBDA_PAPER, Participant, resource_matrix,
                                   unit_normalize)
 from repro.data.sampler import class_balanced_batches, sample_batches
@@ -54,6 +54,11 @@ class FLConfig:
     seed: int = 0
     class_balanced: bool = True
     use_kd: bool = True
+    # batched cluster execution: one make_cluster_update vmap call per round
+    # (all members advance together; heterogeneous τ_i / stragglers enter as
+    # step masks).  False falls back to the per-pid Python loop — kept for
+    # equivalence testing and benchmarks/bench_sim.py.
+    vmap_clusters: bool = True
     consts: rnd.ConvergenceConstants = field(default_factory=rnd.ConvergenceConstants)
 
 
@@ -78,6 +83,7 @@ class FedRAC:
         self.family = family
         self.cfg = cfg
         self.classes = classes
+        self._programs = {}          # (level, use_kd) -> jitted round programs
 
     # ------------------------------------------------------------ setup
     def setup(self):
@@ -132,26 +138,114 @@ class FedRAC:
         return sample_batches(d["x"], d["y"], self.cfg.local_batch, steps,
                               seed=self.cfg.seed + 977 * pid + rng_round)
 
+    def _stacked_batches(self, members: list[int], rng_round: int, level: int):
+        """Per-member batches stacked to (C, steps, batch, ...) pytrees.
+        Stacks on host so each leaf is one contiguous device transfer."""
+        balanced = self.cfg.class_balanced and level == 0
+        per = [self._client_batches(pid, rng_round, balanced)
+               for pid in members]
+        return jax.tree.map(lambda *xs: jnp.asarray(np.stack(xs)), *per)
+
+    def _cluster_programs(self, level: int, use_kd: bool):
+        """Cached whole-round program for one cluster: broadcast shared params
+        over the member axis, run every member's τ local steps under one vmap
+        (teacher logits computed in-program for slave clusters), and fuse the
+        FedAvg aggregation — a single jitted XLA program per round.
+        Keyed on the captured hyperparameters so in-place FLConfig mutation
+        (lr sweeps on one engine) invalidates the cache."""
+        cfg = self.cfg
+        key = (level, use_kd, cfg.lr, cfg.kd_T, cfg.kd_alpha)
+        if key not in self._programs:
+            loss_fn = jax.tree_util.Partial(self.family.loss_and_logits, level)
+            kw = dict(kd_T=cfg.kd_T, kd_alpha=cfg.kd_alpha) if use_kd else {}
+            update = make_cluster_update(loss_fn, cfg.lr, **kw)
+            t_loss_fn = jax.tree_util.Partial(self.family.loss_and_logits, 0)
+
+            def round_fn(params, batches, step_masks, weights, teacher):
+                C = step_masks.shape[0]
+                p_stack = jax.tree.map(
+                    lambda x: jnp.broadcast_to(x[None], (C,) + x.shape),
+                    params)
+                teachers = None
+                if use_kd:
+                    teachers = jax.vmap(                       # members axis
+                        jax.vmap(lambda b: t_loss_fn(teacher, b)[1])
+                    )(batches)                                 # steps axis
+                new_stack, losses = update(p_stack, batches, step_masks,
+                                           teachers)
+                return aggregation.aggregate(new_stack, weights), losses
+
+            self._programs[key] = jax.jit(round_fn)
+        return self._programs[key]
+
+    def cluster_round(self, level: int, members: list[int], params, r: int, *,
+                      teacher=None, step_masks=None, weights=None):
+        """One synchronous communication round for a cluster, batched: every
+        member's τ local steps run under a single vmapped update, then FedAvg.
+
+        ``step_masks`` (C, steps) zeroes out SGD steps per member — the hook
+        for heterogeneous τ_i and for the simulator's straggler/dropout masks
+        (a fully-zero row leaves that member at the incoming params).
+        ``weights`` are raw non-negative aggregation weights per member
+        (default: n_eff); they are renormalized over the members that actually
+        contribute.  All-zero weights (every member dropped) leave ``params``
+        unchanged — partial aggregation.  Returns (new_params, member_losses).
+        """
+        cfg = self.cfg
+        C = len(members)
+        if weights is None:
+            weights = [self.assignment.n_eff.get(pid, 1) for pid in members]
+        w = np.asarray(weights, np.float32)
+        total = float(w.sum())
+        if total <= 0.0:               # everyone dropped: partial agg no-op
+            return params, jnp.zeros((C,), jnp.float32)
+        batches = self._stacked_batches(members, r, level)
+        steps = jax.tree.leaves(batches)[0].shape[1]
+        if step_masks is None:
+            step_masks = jnp.ones((C, steps), jnp.float32)
+        use_kd = teacher is not None and cfg.use_kd
+        round_fn = self._cluster_programs(level, use_kd)
+        return round_fn(params, batches, step_masks, jnp.asarray(w / total),
+                        teacher)
+
     def _train_cluster(self, level: int, members: list[int], n_rounds: int,
                        test, teacher=None, record_every: int = 1):
         cfg = self.cfg
         key = jax.random.PRNGKey(cfg.seed + level)
         params = self.family.init(key, level)
-        loss_fn = jax.tree_util.Partial(self.family.loss_and_logits, level)
-        t_loss_fn = (jax.tree_util.Partial(self.family.loss_and_logits, 0)
-                     if teacher is not None else None)
-
-        @jax.jit
-        def teacher_logits(tp, batches):
-            return jax.vmap(lambda b: t_loss_fn(tp, b)[1])(batches)
-
-        upd = jax.jit(lambda p, b, tl: local_update(
-            loss_fn, p, b, cfg.lr, teacher_logits=tl,
-            kd_T=cfg.kd_T, kd_alpha=cfg.kd_alpha))
-        upd_plain = jax.jit(lambda p, b: local_update(loss_fn, p, b, cfg.lr))
-
         if not members:
             return params, []
+        if not cfg.vmap_clusters:
+            return self._train_cluster_loop(level, members, n_rounds, test,
+                                            params, teacher, record_every)
+        history = []
+        weights = [self.assignment.n_eff.get(pid, 1) for pid in members]
+        for r in range(n_rounds):
+            params, _ = self.cluster_round(level, members, params, r,
+                                           teacher=teacher, weights=weights)
+            if (r + 1) % record_every == 0:
+                history.append(self.evaluate(level, params, test))
+        return params, history
+
+    def _train_cluster_loop(self, level: int, members: list[int],
+                            n_rounds: int, test, params, teacher=None,
+                            record_every: int = 1):
+        """Reference per-pid loop (pre-vmap path); kept for the equivalence
+        test and benchmarks/bench_sim.py."""
+        cfg = self.cfg
+        loop_key = ("loop", level, cfg.lr, cfg.kd_T, cfg.kd_alpha)
+        if loop_key not in self._programs:
+            loss_fn = jax.tree_util.Partial(self.family.loss_and_logits, level)
+            t_loss_fn = jax.tree_util.Partial(self.family.loss_and_logits, 0)
+            self._programs[loop_key] = (
+                jax.jit(lambda tp, batches: jax.vmap(
+                    lambda b: t_loss_fn(tp, b)[1])(batches)),
+                jax.jit(lambda p, b, tl: local_update(
+                    loss_fn, p, b, cfg.lr, teacher_logits=tl,
+                    kd_T=cfg.kd_T, kd_alpha=cfg.kd_alpha)),
+                jax.jit(lambda p, b: local_update(loss_fn, p, b, cfg.lr)))
+        teacher_logits, upd, upd_plain = self._programs[loop_key]
+
         history = []
         weights = aggregation.normalized_weights(
             [self.assignment.n_eff.get(pid, 1) for pid in members])

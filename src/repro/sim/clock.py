@@ -1,0 +1,45 @@
+"""Deterministic discrete-event clock.
+
+Event timestamps are in *round units* (the FL server only observes device
+state at round synchronization barriers, so an event stamped t=3.4 becomes
+visible at the start of round 4); the wall-clock in seconds is accumulated
+separately from the cost model's per-round durations.  Ties are broken by
+insertion order (a monotonically increasing sequence number), which makes
+replay under a fixed seed exactly reproducible.
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass
+
+
+class EventQueue:
+    """Min-heap of (time, seq, event) with deterministic FIFO tie-breaking."""
+
+    def __init__(self):
+        self._heap: list = []
+        self._seq = 0
+
+    def push(self, time: float, event) -> None:
+        heapq.heappush(self._heap, (float(time), self._seq, event))
+        self._seq += 1
+
+    def pop_due(self, now: float) -> list:
+        """Pop every (time, event) with time <= now, in (time, seq) order."""
+        due = []
+        while self._heap and self._heap[0][0] <= now:
+            t, _, ev = heapq.heappop(self._heap)
+            due.append((t, ev))
+        return due
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+
+@dataclass
+class SimClock:
+    """Accumulated simulated wall-clock seconds."""
+    now: float = 0.0
+
+    def advance(self, dt: float) -> None:
+        self.now += float(dt)

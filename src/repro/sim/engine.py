@@ -1,0 +1,244 @@
+"""Deadline-aware round engine: drives a ``FedRAC`` instance round-by-round
+under an event trace, enforcing each cluster's MAR time budget.
+
+Per round the engine (1) fires all due events — dropouts, arrivals, resource
+drift through the Procedure-2 ``update_resources`` path (participants migrate
+clusters in place), straggler spikes; (2) prices every member's round via the
+cost model (Eq. 2, with transient slowdowns); (3) applies the MAR policy:
+
+* ``drop``  — members with T_i > MAR are excluded this round (zero step-mask
+  row, zero aggregation weight; partial aggregation renormalizes the rest);
+* ``mask``  — they train only the ⌊S·(MAR − T_c)/T_a⌋ local steps whose
+  (slowdown-adjusted) train time still fits the deadline after the fixed
+  communication cost, down-weighted by the granted fraction (comm time
+  alone blowing the budget degrades to a download-only drop);
+* ``wait``  — nobody is cut; the round runs straggler-bound (Eq. 2), the
+  violation is only recorded.
+
+Masks and weights feed ``FedRAC.cluster_round`` — one batched vmap update per
+cluster per round — so the simulator exercises exactly the fast path.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cost_model
+from repro.core.server import FedRAC
+from repro.sim.clock import EventQueue, SimClock
+from repro.sim.events import (Arrival, Departure, ResourceDrift, SpikeEnd,
+                              StragglerSpike)
+from repro.sim.report import ClusterRoundStats, RoundRecord, SimReport
+from repro.sim.traces import Trace
+
+
+@dataclass
+class SimConfig:
+    rounds: int = 10
+    mar_policy: str = "drop"          # drop | mask | wait
+    schedule: str = "parallel"        # Eq. 9 parallel | Eq. 10 sequential
+    eval_every: int = 0               # 0 → evaluate only after the last round
+    min_speed: float = 0.05           # drift clamps (GHz / Mbps / GB floors)
+    min_rate: float = 0.1
+    min_mem: float = 0.25
+
+
+class HeterogeneitySim:
+    """Couples a set-up ``FedRAC`` with a ``Trace`` and runs the event loop."""
+
+    def __init__(self, fedrac: FedRAC, trace: Trace, cfg: SimConfig):
+        if cfg.mar_policy not in ("drop", "mask", "wait"):
+            raise ValueError(f"unknown mar_policy {cfg.mar_policy!r}")
+        if cfg.schedule not in ("parallel", "sequential"):
+            raise ValueError(f"unknown schedule {cfg.schedule!r}")
+        self.fl = fedrac
+        self.trace = trace
+        self.cfg = cfg
+        self.clock = SimClock()
+        self.queue = EventQueue()
+        for t, ev in trace.events:
+            self.queue.push(t, ev)
+        self.online = {p.pid for p in fedrac.parts} - set(trace.initially_offline)
+        self._spikes: dict[int, tuple[float, int]] = {}  # pid -> (factor, token)
+        self._spike_seq = 0
+        self._rejoin_token: dict[int, int] = {}          # pid -> departure gen
+        self._gone: set[int] = set()                     # permanent dropouts
+
+    # ------------------------------------------------------------ events
+    def _apply_events(self, r: int) -> list[str]:
+        applied = []
+        # Arrivals first at equal timestamps: a scheduled rejoin and a fresh
+        # trace Departure landing on the same round must net to "rejoined,
+        # then dropped again" — otherwise the Departure (popped first, pid
+        # still offline) would be silently discarded and churn understated.
+        due = sorted(self.queue.pop_due(float(r)),
+                     key=lambda te: (te[0], not isinstance(te[1], Arrival)))
+        for t, ev in due:
+            if isinstance(ev, Departure):
+                # applies even while transiently offline: a fresh Departure
+                # supersedes any pending rejoin (bumping the token below
+                # invalidates it), so permanent dropouts landing inside a
+                # rejoin window are not lost.  Later trace noise for a
+                # permanently-departed pid is ignored — only an explicit
+                # trace-authored Arrival re-registers the device.
+                if ev.pid in self._gone:
+                    continue
+                if ev.rejoin_after is None:
+                    self._gone.add(ev.pid)
+                self.online.discard(ev.pid)
+                tok = self._rejoin_token.get(ev.pid, 0) + 1
+                self._rejoin_token[ev.pid] = tok
+                if ev.rejoin_after is not None:
+                    self.queue.push(t + ev.rejoin_after,
+                                    Arrival(ev.pid, token=tok))
+                applied.append(
+                    f"drop(p{ev.pid}"
+                    + ("" if ev.rejoin_after is not None else ", perm")
+                    + ")")
+            elif isinstance(ev, Arrival):
+                stale = (ev.token is not None
+                         and ev.token != self._rejoin_token.get(ev.pid, 0))
+                if not stale and ev.pid not in self.online:
+                    self._gone.discard(ev.pid)   # trace arrival re-registers
+                    self.online.add(ev.pid)
+                    applied.append(f"join(p{ev.pid})")
+            elif isinstance(ev, StragglerSpike):
+                self._spike_seq += 1
+                self._spikes[ev.pid] = (ev.factor, self._spike_seq)
+                self.queue.push(t + ev.duration,
+                                SpikeEnd(ev.pid, token=self._spike_seq))
+                applied.append(f"spike(p{ev.pid} ×{ev.factor:.1f})")
+            elif isinstance(ev, SpikeEnd):
+                if self._spikes.get(ev.pid, (0.0, -1))[1] == ev.token:
+                    del self._spikes[ev.pid]
+            elif isinstance(ev, ResourceDrift):
+                p = self.fl.parts[ev.pid]
+                old, new = self.fl.update_resources(
+                    ev.pid,
+                    s=max(self.cfg.min_speed, p.s * ev.s_mult),
+                    r=max(self.cfg.min_rate, p.r * ev.r_mult),
+                    a=max(self.cfg.min_mem, p.a * ev.a_mult))
+                tag = (f"C{old + 1}→C{new + 1}" if old != new
+                       else f"C{new + 1}")
+                applied.append(f"drift(p{ev.pid} {tag})")
+            else:
+                raise TypeError(f"unhandled event {ev!r}")
+        return applied
+
+    # ------------------------------------------------------------ pricing
+    def _price_round(self, level: int, members: list[int]):
+        """Per-member Eq. 2 round time under current slowdowns."""
+        spec = self.fl.specs[level]
+        times = {}
+        for pid in members:
+            p = self.fl.parts[pid]
+            times[pid] = cost_model.round_time(
+                p, spec.flops_per_sample, spec.model_bytes, spec.E,
+                n_i=self.fl.assignment.n_eff.get(pid, p.n_data),
+                compute_slowdown=self._spikes.get(pid, (1.0, 0))[0])
+        return spec, times
+
+    def _mar_decisions(self, level: int, members: list[int]):
+        """Returns (stats, step_masks, weights, cluster_time)."""
+        cfg, fl = self.cfg, self.fl
+        S = fl.cfg.steps_per_round
+        spec, times = self._price_round(level, members)
+        stats = ClusterRoundStats(level=level, time=0.0)
+        masks = np.zeros((len(members), S), np.float32)
+        weights = np.zeros(len(members), np.float32)
+        contrib_times = []
+        for i, pid in enumerate(members):
+            if pid not in self.online:
+                stats.offline.append(pid)
+                continue
+            n_eff = fl.assignment.n_eff.get(pid, 1)
+            t = times[pid]
+            if t > spec.mar:
+                stats.violations.append(pid)
+                if cfg.mar_policy == "drop":
+                    stats.dropped.append(pid)
+                    stats.bytes += cost_model.round_bytes(
+                        spec.model_bytes, upload=False)
+                    continue
+                if cfg.mar_policy == "mask":
+                    # only the train part scales with steps; comm is fixed,
+                    # so grant ⌊S·(MAR − T_c)/T_a⌋ steps (0 if comm alone
+                    # blows the deadline → download-only drop)
+                    t_comm = cost_model.comm_time(fl.parts[pid],
+                                                  spec.model_bytes)
+                    t_train = t - t_comm
+                    granted = (int(S * (spec.mar - t_comm) / t_train)
+                               if spec.mar > t_comm and t_train > 0 else 0)
+                    if granted == 0:
+                        stats.dropped.append(pid)
+                        stats.bytes += cost_model.round_bytes(
+                            spec.model_bytes, upload=False)
+                        continue
+                    masks[i, :granted] = 1.0
+                    weights[i] = n_eff * granted / S
+                    stats.masked[pid] = granted
+                    stats.active.append(pid)
+                    stats.bytes += cost_model.round_bytes(spec.model_bytes)
+                    contrib_times.append(t_train * granted / S + t_comm)
+                    continue
+                # wait: tolerated, falls through to a full contribution
+            masks[i] = 1.0
+            weights[i] = n_eff
+            stats.active.append(pid)
+            stats.bytes += cost_model.round_bytes(spec.model_bytes)
+            contrib_times.append(t)
+        stats.time = max(contrib_times, default=0.0)
+        return stats, masks, weights, stats.time
+
+    # ------------------------------------------------------------ round loop
+    def run(self, test) -> SimReport:
+        fl, cfg = self.fl, self.cfg
+        report = SimReport(scenario=self.trace.name,
+                           mar_policy=cfg.mar_policy, schedule=cfg.schedule)
+        params = {lvl: fl.family.init(jax.random.PRNGKey(fl.cfg.seed + lvl),
+                                      lvl)
+                  for lvl in range(fl.m)}
+        for r in range(cfg.rounds):
+            ev_log = self._apply_events(r)
+            master_before = params[0]
+            clusters, times = [], []
+            for lvl in range(fl.m):
+                members = list(fl.assignment.members.get(lvl, []))
+                if not members:
+                    clusters.append(ClusterRoundStats(level=lvl, time=0.0))
+                    times.append(0.0)
+                    continue
+                stats, masks, weights, t_cluster = self._mar_decisions(
+                    lvl, members)
+                if float(weights.sum()) > 0.0:
+                    teacher = None
+                    if lvl > 0:
+                        teacher = (master_before if cfg.schedule == "parallel"
+                                   else params[0])
+                    params[lvl], losses = fl.cluster_round(
+                        lvl, members, params[lvl], r, teacher=teacher,
+                        step_masks=jnp.asarray(masks), weights=weights)
+                    contributing = weights > 0
+                    stats.mean_loss = float(
+                        np.mean(np.asarray(losses)[contributing]))
+                if cfg.eval_every and (r + 1) % cfg.eval_every == 0:
+                    stats.acc = fl.evaluate(lvl, params[lvl], test)
+                clusters.append(stats)
+                times.append(t_cluster)
+            duration = (max(times, default=0.0) if cfg.schedule == "parallel"
+                        else sum(times))
+            report.add(RoundRecord(round=r, t_start=self.clock.now,
+                                   duration=duration, clusters=clusters,
+                                   events=ev_log))
+            self.clock.advance(duration)
+        for lvl in range(fl.m):
+            if not fl.assignment.members.get(lvl):
+                continue
+            last = report.rows[-1].clusters[lvl].acc if report.rows else None
+            report.final_acc[lvl] = (last if last is not None else
+                                     fl.evaluate(lvl, params[lvl], test))
+        self.params = params
+        return report

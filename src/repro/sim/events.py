@@ -1,0 +1,55 @@
+"""Participant lifecycle events consumed by the simulation engine.
+
+All events are frozen dataclasses keyed by participant id; the engine
+dispatches on type.  Timestamps live in the queue, not the event, so the
+same event object can be rescheduled (e.g. an auto-rejoin ``Arrival``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class Event:
+    pid: int
+
+
+@dataclass(frozen=True)
+class Arrival(Event):
+    """Participant comes online.  Trace-authored arrivals (late joiners)
+    carry ``token=None`` and always apply; engine-scheduled rejoins carry the
+    departure generation that queued them, so a newer ``Departure`` landing
+    inside the rejoin window supersedes the stale rejoin."""
+    token: int | None = None
+
+
+@dataclass(frozen=True)
+class Departure(Event):
+    """Participant goes offline.  ``rejoin_after`` (round units) schedules an
+    automatic ``Arrival``; ``None`` means a permanent dropout."""
+    rejoin_after: float | None = None
+
+
+@dataclass(frozen=True)
+class ResourceDrift(Event):
+    """§IV-A dynamic resources: multiplicative change to (s, r, a).  The
+    engine mutates the participant and re-runs Procedure-2 placement, so the
+    participant may migrate clusters."""
+    s_mult: float = 1.0
+    r_mult: float = 1.0
+    a_mult: float = 1.0
+
+
+@dataclass(frozen=True)
+class StragglerSpike(Event):
+    """Transient slowdown: compute time is multiplied by ``factor`` for
+    ``duration`` rounds (thermal throttling, co-located load, ...)."""
+    factor: float = 4.0
+    duration: float = 1.0
+
+
+@dataclass(frozen=True)
+class SpikeEnd(Event):
+    """Internal: clears the straggler spike identified by ``token`` (scheduled
+    by the engine; a stale SpikeEnd must not clear a newer spike)."""
+    token: int = 0

@@ -1,0 +1,125 @@
+"""Per-round telemetry for the heterogeneity simulator.
+
+One ``RoundRecord`` per communication round, holding per-cluster
+``ClusterRoundStats``; ``SimReport`` aggregates the timeline, renders it as
+text (the CLI/example output) and summarizes totals.
+"""
+from __future__ import annotations
+
+from dataclasses import asdict, dataclass, field
+
+
+@dataclass
+class ClusterRoundStats:
+    level: int
+    time: float                    # cluster round duration (s)
+    active: list = field(default_factory=list)     # pids that contributed
+    dropped: list = field(default_factory=list)    # MAR-dropped this round
+    offline: list = field(default_factory=list)    # not online this round
+    masked: dict = field(default_factory=dict)     # pid -> steps granted (<S)
+    violations: list = field(default_factory=list)  # pids with T_i > MAR
+    bytes: float = 0.0
+    mean_loss: float = float("nan")
+    acc: float | None = None
+
+
+@dataclass
+class RoundRecord:
+    round: int
+    t_start: float
+    duration: float                # schedule-combined round time (s)
+    clusters: list = field(default_factory=list)   # [ClusterRoundStats]
+    events: list = field(default_factory=list)     # human-readable strings
+
+    @property
+    def t_end(self) -> float:
+        return self.t_start + self.duration
+
+    @property
+    def dropped(self) -> list:
+        return [p for c in self.clusters for p in c.dropped]
+
+    @property
+    def violations(self) -> list:
+        return [p for c in self.clusters for p in c.violations]
+
+    @property
+    def bytes(self) -> float:
+        return sum(c.bytes for c in self.clusters)
+
+
+@dataclass
+class SimReport:
+    scenario: str
+    mar_policy: str
+    schedule: str
+    rows: list = field(default_factory=list)       # [RoundRecord]
+    final_acc: dict = field(default_factory=dict)  # level -> accuracy
+
+    def add(self, row: RoundRecord) -> None:
+        self.rows.append(row)
+
+    # ------------------------------------------------------------ summaries
+    def summary(self) -> dict:
+        n_parts = {p for r in self.rows for c in r.clusters
+                   for p in (c.active + c.dropped + c.offline)}
+        total_slots = sum(len(c.active) + len(c.dropped) + len(c.offline)
+                          for r in self.rows for c in r.clusters)
+        active_slots = sum(len(c.active) for r in self.rows for c in r.clusters)
+        return {
+            "scenario": self.scenario,
+            "mar_policy": self.mar_policy,
+            "schedule": self.schedule,
+            "rounds": len(self.rows),
+            "wall_clock_s": round(sum(r.duration for r in self.rows), 3),
+            "total_bytes": float(sum(r.bytes for r in self.rows)),
+            "participants": len(n_parts),
+            "participation_rate": round(active_slots / total_slots, 4)
+                                  if total_slots else 0.0,
+            "mar_violations": sum(len(r.violations) for r in self.rows),
+            "dropped_total": sum(len(r.dropped) for r in self.rows),
+            "final_acc": {k: round(v, 4) for k, v in self.final_acc.items()},
+        }
+
+    def timeline(self) -> str:
+        lines = [f"# scenario={self.scenario} policy={self.mar_policy} "
+                 f"schedule={self.schedule}"]
+        for r in self.rows:
+            cl = []
+            for c in r.clusters:
+                bits = f"C{c.level + 1} {len(c.active)}a"
+                if c.dropped:
+                    bits += f" {len(c.dropped)}drop"
+                if c.masked:
+                    bits += f" {len(c.masked)}mask"
+                if c.offline:
+                    bits += f" {len(c.offline)}off"
+                if c.violations:
+                    bits += f" viol={c.violations}"
+                if c.acc is not None:
+                    bits += f" acc={c.acc:.3f}"
+                cl.append(bits)
+            ev = ("  events: " + "; ".join(r.events)) if r.events else ""
+            lines.append(
+                f"r{r.round:03d}  t={r.t_start:8.1f}s  Δ={r.duration:7.2f}s  "
+                f"{self._fmt_bytes(r.bytes):>9}  | " + " | ".join(cl) + ev)
+        s = self.summary()
+        lines.append(
+            f"TOTAL wall-clock={s['wall_clock_s']:.1f}s  "
+            f"bytes={self._fmt_bytes(s['total_bytes'])}  "
+            f"participation={s['participation_rate']:.0%}  "
+            f"mar_violations={s['mar_violations']}  "
+            f"dropped={s['dropped_total']}  final_acc={s['final_acc']}")
+        return "\n".join(lines)
+
+    def to_dict(self) -> dict:
+        return {"summary": self.summary(),
+                "rows": [asdict(r) for r in self.rows]}
+
+    @staticmethod
+    def _fmt_bytes(b: float) -> str:
+        for unit in ("B", "KB", "MB", "GB"):
+            if abs(b) < 1024.0:
+                return f"{b:.1f}{unit}"
+            b /= 1024.0
+        return f"{b:.1f}TB"

@@ -1,0 +1,141 @@
+"""Seeded device-profile and event-trace generation.
+
+Profiles resample the paper's Table III (processing GHz, Mbps, GB) with
+multiplicative jitter so any participant count keeps the paper's marginal
+resource distribution.  Event traces are pre-scheduled at trace-build time
+from a single ``numpy`` generator — two traces built with the same arguments
+are identical, which the determinism tests pin down.
+
+Event timestamps are in round units (see ``sim.clock``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.resources import TABLE_III
+from repro.sim.events import (Arrival, Departure, Event, ResourceDrift,
+                              StragglerSpike)
+
+
+@dataclass
+class Trace:
+    name: str
+    events: list = field(default_factory=list)       # [(time, Event)]
+    initially_offline: frozenset = frozenset()       # pids joining late
+
+
+def sample_profiles(n: int, seed: int = 0, jitter: float = 0.15) -> np.ndarray:
+    """(n, 3) resource matrix resampled from Table III with ±jitter."""
+    rng = np.random.default_rng(seed)
+    rows = TABLE_III[rng.integers(0, len(TABLE_III), n)]
+    return rows * rng.uniform(1.0 - jitter, 1.0 + jitter, rows.shape)
+
+
+# ------------------------------------------------------------ event makers
+def dropout_events(n: int, rounds: int, rate: float, seed: int = 0,
+                   rejoin_after: float = 2.0,
+                   permanent_frac: float = 0.1) -> list:
+    """Per-participant per-round Bernoulli(rate) dropouts; most rejoin after
+    ``rejoin_after`` rounds, a ``permanent_frac`` share never come back."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for r in range(rounds):
+        for pid in range(n):
+            if rng.random() < rate:
+                perm = rng.random() < permanent_frac
+                out.append((float(r), Departure(
+                    pid, rejoin_after=None if perm else rejoin_after)))
+    return out
+
+
+def drift_events(n: int, rounds: int, rate: float, seed: int = 0,
+                 scale: float = 0.35) -> list:
+    """Multiplicative log-normal random-walk steps on (s, r); memory drifts
+    an order of magnitude slower (apps release RAM rarely)."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for r in range(rounds):
+        for pid in range(n):
+            if rng.random() < rate:
+                out.append((float(r), ResourceDrift(
+                    pid,
+                    s_mult=float(np.exp(rng.normal(0.0, scale))),
+                    r_mult=float(np.exp(rng.normal(0.0, scale))),
+                    a_mult=float(np.exp(rng.normal(0.0, scale * 0.1))))))
+    return out
+
+
+def straggler_events(n: int, rounds: int, rate: float, seed: int = 0,
+                     factor_range=(2.0, 8.0), duration: float = 1.0) -> list:
+    rng = np.random.default_rng(seed)
+    out = []
+    for r in range(rounds):
+        for pid in range(n):
+            if rng.random() < rate:
+                out.append((float(r), StragglerSpike(
+                    pid, factor=float(rng.uniform(*factor_range)),
+                    duration=duration)))
+    return out
+
+
+def late_arrivals(n: int, rounds: int, frac: float, seed: int = 0) -> tuple:
+    """A ``frac`` share of participants join uniformly over the first half of
+    the horizon.  Returns (initially_offline, events)."""
+    rng = np.random.default_rng(seed)
+    late = rng.permutation(n)[: int(round(n * frac))]
+    evs = [(float(rng.integers(1, max(2, rounds // 2 + 1))), Arrival(int(pid)))
+           for pid in late]
+    return frozenset(int(p) for p in late), evs
+
+
+# ------------------------------------------------------------ scenarios
+def _stable(n, rounds, seed, **kw):
+    return Trace("stable")
+
+
+def _dropout(n, rounds, seed, *, dropout_rate=0.15, rejoin_after=2.0, **kw):
+    return Trace("dropout", dropout_events(n, rounds, dropout_rate, seed,
+                                           rejoin_after=rejoin_after))
+
+
+def _drift(n, rounds, seed, *, drift_rate=0.1, drift_scale=0.35, **kw):
+    return Trace("drift", drift_events(n, rounds, drift_rate, seed,
+                                       scale=drift_scale))
+
+
+def _straggler(n, rounds, seed, *, spike_rate=0.15, spike_duration=1.0, **kw):
+    return Trace("straggler", straggler_events(n, rounds, spike_rate, seed,
+                                               duration=spike_duration))
+
+
+def _flash_crowd(n, rounds, seed, *, late_frac=0.4, **kw):
+    off, evs = late_arrivals(n, rounds, late_frac, seed)
+    return Trace("flash-crowd", evs, initially_offline=off)
+
+
+def _mixed(n, rounds, seed, *, dropout_rate=0.08, drift_rate=0.05,
+           spike_rate=0.08, **kw):
+    evs = (dropout_events(n, rounds, dropout_rate, seed)
+           + drift_events(n, rounds, drift_rate, seed + 1)
+           + straggler_events(n, rounds, spike_rate, seed + 2))
+    return Trace("mixed", evs)
+
+
+SCENARIOS = {
+    "stable": _stable,
+    "dropout": _dropout,
+    "drift": _drift,
+    "straggler": _straggler,
+    "flash-crowd": _flash_crowd,
+    "mixed": _mixed,
+}
+
+
+def make_trace(scenario: str, n: int, rounds: int, seed: int = 0,
+               **knobs) -> Trace:
+    if scenario not in SCENARIOS:
+        raise ValueError(f"unknown scenario {scenario!r}; "
+                         f"choose from {sorted(SCENARIOS)}")
+    return SCENARIOS[scenario](n, rounds, seed, **knobs)

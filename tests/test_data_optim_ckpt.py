@@ -4,7 +4,7 @@ import os
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.ckpt import checkpoint
 from repro.data import partition, sampler

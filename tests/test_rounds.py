@@ -1,7 +1,7 @@
 """Eq. 6/7/8 — paper Example 3 exact + bound behaviour properties."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import rounds as rnd
 

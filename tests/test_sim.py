@@ -1,0 +1,224 @@
+"""repro.sim: deterministic event ordering, MAR drop/mask semantics, and
+vmapped-vs-looped cluster-training equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cost_model
+from repro.core import server as srv
+from repro.core.families import cnn_family
+from repro.core.resources import Participant, participants_from_matrix
+from repro.data.partition import dirichlet_partition
+from repro.data.synthetic import make_classification, train_test_split
+from repro.sim import (Arrival, Departure, EventQueue, HeterogeneitySim,
+                       SimConfig, StragglerSpike, make_trace, sample_profiles)
+
+FAM = cnn_family(classes=10, in_channels=1, base_width=0.125)
+
+
+def _setup(parts_V=None, n=8, samples=500, seed=0, n_data=None, **cfg_kw):
+    ds = make_classification("synth-mnist", samples, seed=seed)
+    train, test = train_test_split(ds)
+    idx = dirichlet_partition(train.y, n, alpha=2.0, seed=seed)
+    V = parts_V if parts_V is not None else sample_profiles(n, seed=seed)
+    parts = participants_from_matrix(
+        V, n_data=n_data if n_data is not None else [len(p) for p in idx])
+    cd = [{"x": train.x[p], "y": train.y[p]} for p in idx]
+    cfg = srv.FLConfig(steps_per_round=3, lr=0.08, seed=seed,
+                       local_batch=8, **cfg_kw)
+    eng = srv.FedRAC(parts, cd, FAM, cfg, classes=10).setup()
+    testb = {"x": jnp.asarray(test.x), "y": jnp.asarray(test.y)}
+    return eng, testb
+
+
+# ------------------------------------------------------------ determinism
+def test_event_queue_fifo_tie_break():
+    q = EventQueue()
+    q.push(1.0, Departure(0))
+    q.push(0.0, Arrival(1))
+    q.push(1.0, StragglerSpike(2))
+    q.push(1.0, Arrival(3))
+    assert [e for _, e in q.pop_due(0.5)] == [Arrival(1)]
+    # equal timestamps pop in insertion order
+    assert [e.pid for _, e in q.pop_due(1.0)] == [0, 2, 3]
+    assert len(q) == 0
+
+
+def test_trace_generation_deterministic():
+    a = make_trace("mixed", 10, 6, seed=7)
+    b = make_trace("mixed", 10, 6, seed=7)
+    assert a.events == b.events
+    c = make_trace("mixed", 10, 6, seed=8)
+    assert a.events != c.events
+
+
+def test_sim_run_deterministic():
+    def run_once():
+        eng, testb = _setup(n=8, compact_to=2)
+        trace = make_trace("mixed", 8, 3, seed=5)
+        sim = HeterogeneitySim(eng, trace, SimConfig(rounds=3))
+        rep = sim.run(testb)
+        return [(r.round, r.duration, [(c.level, c.active, c.dropped,
+                                        c.offline, sorted(c.masked))
+                                       for c in r.clusters], r.events)
+                for r in rep.rows], rep.final_acc
+
+    rows_a, acc_a = run_once()
+    rows_b, acc_b = run_once()
+    assert rows_a == rows_b
+    assert acc_a == acc_b
+
+
+# ------------------------------------------------------------ MAR semantics
+def _straggler_setup():
+    """6 healthy devices, one moderate straggler (pid 6, 4× slower compute)
+    and one hopeless one (pid 7), all in a single cluster with a budget that
+    admits the healthy, partially fits the moderate, and excludes pid 7."""
+    V = np.array([[3.0, 30.0, 8.0]] * 6
+                 + [[0.75, 30.0, 8.0], [1e-4, 30.0, 8.0]])
+    eng, testb = _setup(parts_V=V, n=8, compact_to=1, mar=1e9,
+                        n_data=[50] * 8)
+    spec = eng.specs[0]
+    t = {p: cost_model.round_time(eng.parts[p], spec.flops_per_sample,
+                                  spec.model_bytes, spec.E,
+                                  eng.assignment.n_eff[p])
+         for p in range(8)}
+    spec.mar = 0.6 * t[6]          # moderate straggler fits 60% of a round
+    assert max(t[p] for p in range(6)) < spec.mar < t[6] < t[7]
+    return eng, testb
+
+
+def test_mar_drop_excludes_stragglers_every_round():
+    eng, testb = _straggler_setup()
+    sim = HeterogeneitySim(eng, make_trace("stable", 8, 3),
+                           SimConfig(rounds=3, mar_policy="drop"))
+    rep = sim.run(testb)
+    for row in rep.rows:
+        c = row.clusters[0]
+        assert sorted(c.violations) == [6, 7] == sorted(c.dropped)
+        assert sorted(c.active) == list(range(6))
+        # round time is bounded by the survivors, not the stragglers
+        assert c.time <= eng.specs[0].mar
+
+
+def test_mar_mask_never_grants_full_steps():
+    eng, testb = _straggler_setup()
+    S = eng.cfg.steps_per_round
+    sim = HeterogeneitySim(eng, make_trace("stable", 8, 3),
+                           SimConfig(rounds=3, mar_policy="mask"))
+    rep = sim.run(testb)
+    for row in rep.rows:
+        c = row.clusters[0]
+        assert sorted(c.violations) == [6, 7]
+        # slower than the budget → strictly fewer than S local steps
+        assert 0 < c.masked[6] < S
+        assert 6 in c.active
+        # a hopeless device (0 steps fit) degrades to a download-only drop
+        assert c.masked.get(7, 0) == 0 and 7 in c.dropped
+
+
+def test_mar_wait_keeps_stragglers_and_pays_eq2_time():
+    eng, testb = _straggler_setup()
+    sim = HeterogeneitySim(eng, make_trace("stable", 8, 2),
+                           SimConfig(rounds=2, mar_policy="wait"))
+    rep = sim.run(testb)
+    for row in rep.rows:
+        c = row.clusters[0]
+        assert sorted(c.violations) == [6, 7]
+        assert 7 in c.active and not c.dropped
+        assert c.time > eng.specs[0].mar     # straggler-bound round (Eq. 2)
+
+
+def test_departure_colliding_with_rejoin_still_applies():
+    """A fresh Departure landing on the same round as a scheduled rejoin must
+    net to 'rejoined, then dropped again' — not be silently swallowed."""
+    eng, testb = _setup(n=8, compact_to=1, mar=1e9)
+    trace = make_trace("stable", 8, 5)
+    trace.events.append((1.0, Departure(2, rejoin_after=2.0)))  # rejoin @ 3
+    trace.events.append((3.0, Departure(2, rejoin_after=2.0)))  # collides
+    sim = HeterogeneitySim(eng, trace, SimConfig(rounds=5))
+    rep = sim.run(testb)
+    offline = [2 in r.clusters[0].offline for r in rep.rows]
+    assert offline == [False, True, True, True, True]
+
+
+def test_permanent_departure_during_rejoin_window_sticks():
+    """A permanent Departure landing while the participant is transiently
+    offline supersedes the pending rejoin — it must not rejoin at round 3
+    and stay online forever."""
+    eng, testb = _setup(n=8, compact_to=1, mar=1e9)
+    trace = make_trace("stable", 8, 6)
+    trace.events.append((1.0, Departure(5, rejoin_after=2.0)))  # rejoin @ 3
+    trace.events.append((2.0, Departure(5, rejoin_after=None)))  # permanent
+    # trace noise after the permanent dropout must not schedule a rejoin
+    trace.events.append((3.0, Departure(5, rejoin_after=1.0)))
+    sim = HeterogeneitySim(eng, trace, SimConfig(rounds=6))
+    rep = sim.run(testb)
+    offline = [5 in r.clusters[0].offline for r in rep.rows]
+    assert offline == [False, True, True, True, True, True]
+
+
+def test_dropout_participant_does_not_contribute():
+    eng, testb = _setup(n=8, compact_to=1, mar=1e9)
+    trace = make_trace("stable", 8, 3)
+    trace.events.append((1.0, Departure(2, rejoin_after=1.0)))
+    sim = HeterogeneitySim(eng, trace, SimConfig(rounds=3))
+    rep = sim.run(testb)
+    assert 2 in rep.rows[0].clusters[0].active
+    assert 2 in rep.rows[1].clusters[0].offline
+    assert 2 in rep.rows[2].clusters[0].active        # rejoined
+
+
+# ------------------------------------------------------------ equivalence
+@pytest.mark.slow
+def test_vmap_matches_loop_aggregated_params():
+    """The batched vmap cluster update reproduces the per-pid loop's
+    aggregated params (master FedAvg and slave KD paths)."""
+    results = {}
+    for vm in (True, False):
+        eng, testb = _setup(n=8, samples=400, compact_to=2, vmap_clusters=vm)
+        eng.train(testb)
+        results[vm] = eng
+    assert results[True].m == results[False].m
+    for lvl, pv in results[True].cluster_params.items():
+        pl = results[False].cluster_params[lvl]
+        for a, b in zip(jax.tree.leaves(pv), jax.tree.leaves(pl)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=2e-4, atol=1e-5)
+
+
+def test_cluster_round_partial_aggregation_renormalizes():
+    """Zero-weight (dropped) members leave the aggregate unchanged vs an
+    explicit sub-cluster round over the survivors."""
+    eng, testb = _setup(n=6, compact_to=1, mar=1e9)
+    members = list(eng.assignment.members[0])
+    params = eng.family.init(jax.random.PRNGKey(0), 0)
+    S = eng.cfg.steps_per_round
+    masks = np.ones((len(members), S), np.float32)
+    weights = np.array([eng.assignment.n_eff[p] for p in members], np.float32)
+    masks[2] = 0.0
+    weights[2] = 0.0
+    full, _ = eng.cluster_round(0, members, params, 0,
+                                step_masks=jnp.asarray(masks),
+                                weights=weights)
+    sub_members = [p for i, p in enumerate(members) if i != 2]
+    sub, _ = eng.cluster_round(0, sub_members, params, 0,
+                               weights=[eng.assignment.n_eff[p]
+                                        for p in sub_members])
+    for a, b in zip(jax.tree.leaves(full), jax.tree.leaves(sub)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_all_dropped_round_is_a_no_op():
+    eng, testb = _setup(n=6, compact_to=1, mar=1e9)
+    members = list(eng.assignment.members[0])
+    params = eng.family.init(jax.random.PRNGKey(0), 0)
+    S = eng.cfg.steps_per_round
+    out, _ = eng.cluster_round(
+        0, members, params, 0,
+        step_masks=jnp.zeros((len(members), S), jnp.float32),
+        weights=np.zeros(len(members), np.float32))
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -1,15 +1,15 @@
-"""Looped vs batched-vmap cluster execution throughput.
+"""Simulator benchmarks: cluster-execution throughput + compile-stable padding.
 
-  PYTHONPATH=src python benchmarks/bench_sim.py [--family lm|cnn]
-      [--members 12] [--rounds 20]
+  PYTHONPATH=src python benchmarks/bench_sim.py [--mode cluster|padding|all]
+      [--family lm|cnn] [--members 12] [--rounds 20] [--json out.json]
 
-Times ``FedRAC._train_cluster`` on one cluster of C members both ways:
-the legacy per-pid Python loop (C jitted calls + host round-trips per round)
-and the batched path (one ``make_cluster_update`` vmap call per round).
-Reports each path's best-of-``--reps`` client-steps/sec (C × steps_per_round
-× rounds / wall time), synced via ``block_until_ready`` and excluding
-compile; reps are interleaved so transient host load hits both paths
-equally.
+``--mode cluster`` times ``FedRAC._train_cluster`` on one cluster of C
+members both ways: the legacy per-pid Python loop (C jitted calls + host
+round-trips per round) and the batched path (one ``make_cluster_update``
+vmap call per round).  Reports each path's best-of-``--reps``
+client-steps/sec (C × steps_per_round × rounds / wall time), synced via
+``block_until_ready`` and excluding compile; reps are interleaved so
+transient host load hits both paths equally.
 
 Two regimes:
 * ``--family lm`` (default) — an edge-scale transformer (matmul-dominated,
@@ -20,17 +20,27 @@ Two regimes:
   *per-member weights* poorly, so the loop is at parity or ahead on CPU.
   On accelerators the batched path is additionally one pjit program
   instead of C dispatches.
+
+``--mode padding`` runs a drift-heavy ``repro.sim`` trace (a master member
+bounced across the cluster boundary every round → ≥5 Procedure-2
+reassignments) with capacity padding on vs off and reports wall-clock and
+XLA compile counts: the unpadded path retraces its round program on every
+cluster-cardinality change, the padded path compiles once per capacity
+bucket.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import pathlib
 import sys
+import time
 
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
 
 import jax                           # noqa: E402
+import jax.numpy as jnp              # noqa: E402
 import numpy as np                   # noqa: E402
 
 from common import Timer             # noqa: E402
@@ -41,20 +51,33 @@ from repro.core.resources import participants_from_matrix  # noqa: E402
 from repro.data.partition import dirichlet_partition       # noqa: E402
 from repro.data.synthetic import (lm_batches, make_classification,  # noqa: E402
                                   make_lm_corpus, train_test_split)
+from repro.sim import (HeterogeneitySim, ResourceDrift, SimConfig,  # noqa: E402
+                       make_trace)
 from repro.sim.traces import sample_profiles               # noqa: E402
 
 
-def build_cnn(n_members: int, steps: int, seed: int, base_width: float):
-    ds = make_classification("synth-mnist", 120 * n_members, seed=seed)
-    train, _ = train_test_split(ds)
-    idx = dirichlet_partition(train.y, n_members, alpha=10.0, seed=seed)
+def build_cnn(n_members: int, steps: int, seed: int, base_width: float, *,
+              samples: int | None = None, dirichlet: float = 10.0,
+              with_test: bool = False, **cfg_kw):
+    """CNN engine builder shared by the cluster and padding benches.
+    Defaults: one cluster, nobody demoted, exact-C tracing so the
+    loop-vs-vmap comparison is not skewed by padded capacity rows;
+    the padding bench overrides via cfg_kw."""
+    ds = make_classification("synth-mnist", samples or 120 * n_members,
+                             seed=seed)
+    train, test = train_test_split(ds)
+    idx = dirichlet_partition(train.y, n_members, alpha=dirichlet, seed=seed)
     parts = participants_from_matrix(sample_profiles(n_members, seed=seed),
                                      n_data=[len(p) for p in idx])
     cd = [{"x": train.x[p], "y": train.y[p]} for p in idx]
     fam = cnn_family(classes=10, in_channels=1, base_width=base_width)
     cfg = srv.FLConfig(steps_per_round=steps, lr=0.08, seed=seed,
-                       compact_to=1, mar=1e9)   # one cluster, nobody demoted
-    return srv.FedRAC(parts, cd, fam, cfg, classes=10).setup()
+                       **({"compact_to": 1, "mar": 1e9,
+                           "pad_clusters": False} | cfg_kw))
+    eng = srv.FedRAC(parts, cd, fam, cfg, classes=10).setup()
+    if with_test:
+        return eng, {"x": jnp.asarray(test.x), "y": jnp.asarray(test.y)}
+    return eng
 
 
 def build_lm(n_members: int, steps: int, seed: int):
@@ -79,7 +102,8 @@ def build_lm(n_members: int, steps: int, seed: int):
             return {"tokens": t, "y": t[:, :, -1]}
 
     cfg = srv.FLConfig(steps_per_round=steps, lr=0.1, seed=seed,
-                       compact_to=1, mar=1e9, class_balanced=False)
+                       compact_to=1, mar=1e9, class_balanced=False,
+                       pad_clusters=False)
     return LMFedRAC(parts, cd, fam, cfg, classes=64).setup()
 
 
@@ -104,18 +128,59 @@ def best_of(reps, eng, members, rounds, steps):
     return best
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--family", default="lm", choices=["lm", "cnn"])
-    ap.add_argument("--members", type=int, default=16)
-    ap.add_argument("--rounds", type=int, default=20)
-    ap.add_argument("--steps", type=int, default=4)
-    ap.add_argument("--base-width", type=float, default=0.125,
-                    help="CNN family only")
-    ap.add_argument("--reps", type=int, default=3)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args(argv)
+# ------------------------------------------------------------ padding bench
+def _build_sim_engine(n: int, samples: int, steps: int, seed: int,
+                      base_width: float, pad: bool):
+    return build_cnn(n, steps, seed, base_width, samples=samples,
+                     dirichlet=2.0, with_test=True, local_batch=8,
+                     compact_to=2, mar=None, pad_clusters=pad)
 
+
+def _drift_trace(eng, n: int, rounds: int):
+    """Bounce three master members across the cluster boundary on staggered
+    phases: every extreme drift is a Procedure-2 reassignment, and the
+    staggering walks each cluster through several distinct cardinalities —
+    the unpadded path retraces at every new C, the padded one reuses its
+    capacity-bucket programs."""
+    trace = make_trace("stable", n, rounds)
+    pids = list(eng.assignment.members[0][:3])
+    state = {pid: 1.0 for pid in pids}               # cumulative multiplier
+    for r in range(rounds - 1):
+        pid = pids[r % len(pids)]
+        mult = 0.02 if state[pid] >= 1.0 else 50.0   # flip direction
+        state[pid] *= mult
+        trace.events.append((float(r), ResourceDrift(
+            pid, s_mult=mult, r_mult=mult, a_mult=1.0)))
+    return trace
+
+
+def run_padding_bench(n: int = 10, samples: int = 600, rounds: int = 8,
+                      steps: int = 3, seed: int = 0,
+                      base_width: float = 0.125) -> dict:
+    out = {"participants": n, "rounds": rounds}
+    for pad in (True, False):
+        eng, testb = _build_sim_engine(n, samples, steps, seed, base_width,
+                                       pad)
+        trace = _drift_trace(eng, n, rounds)
+        sim = HeterogeneitySim(eng, trace, SimConfig(rounds=rounds))
+        t0 = time.perf_counter()
+        rep = sim.run(testb)
+        dt = time.perf_counter() - t0
+        try:
+            stats = eng.compile_stats()
+        except RuntimeError:        # jax build without jit _cache_size
+            stats = {}
+        out["padded" if pad else "unpadded"] = {
+            "wall_s": round(dt, 3),
+            "xla_compiles": sum(stats.values()) if stats else None,
+            "round_programs": len(stats) if stats else None,
+            "migrations": sum(ev.count("→") for r in rep.rows
+                              for ev in r.events),
+        }
+    return out
+
+
+def run_cluster_bench(args) -> dict:
     if args.family == "lm":
         eng = build_lm(args.members, args.steps, args.seed)
     else:
@@ -131,6 +196,72 @@ def main(argv=None):
     print(f"  batched vmap : {vmapped:10.1f} client-steps/s "
           f"({vmapped / looped:.2f}× speedup)")
     return {"looped": looped, "vmapped": vmapped}
+
+
+# ------------------------------------------------------------ run.py hooks
+def bench_sim_padding():
+    """benchmarks/run.py suite: padded vs unpadded drift-heavy sim rows."""
+    res = run_padding_bench()
+    for tag in ("padded", "unpadded"):
+        r = res[tag]
+        yield (f"sim/{tag}", r["wall_s"] * 1e6 / res["rounds"],
+               f"compiles={r['xla_compiles']};programs={r['round_programs']};"
+               f"migrations={r['migrations']}")
+
+
+def bench_sim_cluster():
+    """benchmarks/run.py suite: looped vs vmapped cluster execution (CNN at
+    CPU-budget scale; the lm regime stays CLI-only)."""
+    eng = build_cnn(8, 3, 0, 0.125)
+    members = list(eng.assignment.members[0])
+    best = best_of(1, eng, members, 8, 3)
+    for tag, key in (("loop", False), ("vmap", True)):
+        sps = best[key]
+        yield (f"sim/cluster_{tag}", 1e6 / max(sps, 1e-9),
+               f"client_steps_per_s={sps:.1f}")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", default="cluster",
+                    choices=["cluster", "padding", "all"])
+    ap.add_argument("--family", default="lm", choices=["lm", "cnn"])
+    ap.add_argument("--members", type=int, default=16)
+    ap.add_argument("--rounds", type=int, default=20)
+    ap.add_argument("--steps", type=int, default=4)
+    ap.add_argument("--base-width", type=float, default=0.125,
+                    help="CNN family only")
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--sim-rounds", type=int, default=8,
+                    help="padding mode: simulated rounds per path")
+    ap.add_argument("--participants", type=int, default=10,
+                    help="padding mode: fleet size")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write results as JSON (BENCH_sim.json in CI)")
+    args = ap.parse_args(argv)
+
+    results = {}
+    if args.mode in ("cluster", "all"):
+        results["cluster"] = run_cluster_bench(args)
+    if args.mode in ("padding", "all"):
+        pad = run_padding_bench(n=args.participants, rounds=args.sim_rounds,
+                                steps=args.steps, seed=args.seed,
+                                base_width=args.base_width)
+        results["padding"] = pad
+        p, u = pad["padded"], pad["unpadded"]
+        print(f"drift-heavy sim, {pad['participants']} participants × "
+              f"{pad['rounds']} rounds, {u['migrations']} migrations")
+        print(f"  padded   : {p['wall_s']:7.2f}s  "
+              f"{p['xla_compiles']} XLA compiles "
+              f"({p['round_programs']} programs)")
+        print(f"  unpadded : {u['wall_s']:7.2f}s  "
+              f"{u['xla_compiles']} XLA compiles "
+              f"({u['round_programs']} programs)")
+    if args.json:
+        pathlib.Path(args.json).write_text(json.dumps(results, indent=2))
+        print(f"wrote {args.json}")
+    return results
 
 
 if __name__ == "__main__":

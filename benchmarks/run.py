@@ -13,7 +13,8 @@ import traceback
 
 
 def _suites(fast: bool):
-    from benchmarks import bench_kernels, bench_mar, bench_roofline, bench_tables
+    from benchmarks import (bench_kernels, bench_mar, bench_roofline,
+                            bench_sim, bench_tables)
     suites = [
         ("table2", bench_tables.bench_table2_clustering),
         ("mar", bench_mar.bench_mar),
@@ -22,9 +23,11 @@ def _suites(fast: bool):
         ("kernels/fedagg", bench_kernels.bench_fedagg),
         ("kernels/kd", bench_kernels.bench_kd_jnp_vs_kernel_math),
         ("roofline", bench_roofline.bench_roofline),
+        ("sim/padding", bench_sim.bench_sim_padding),
     ]
     if not fast:
         suites += [
+            ("sim/cluster", bench_sim.bench_sim_cluster),
             ("table4", bench_tables.bench_table4_normalization),
             ("table5", bench_tables.bench_table5_compaction),
             ("fig2", bench_tables.bench_fig2_convergence),

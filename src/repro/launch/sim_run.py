@@ -42,7 +42,10 @@ def build(args):
     cfg = srv.FLConfig(alpha=args.alpha, steps_per_round=args.steps_per_round,
                        lr=args.lr, lam=lam, compact_to=args.compact_to,
                        seed=args.seed, E=args.epochs, mar=args.mar,
-                       kappa=args.kappa)
+                       kappa=args.kappa, pad_clusters=not args.no_pad,
+                       aggregation=("buffered" if args.mar_policy == "buffer"
+                                    else "sync"),
+                       staleness_discount=args.staleness_discount)
     eng = srv.FedRAC(parts, client_data, fam, cfg, classes=classes).setup()
     testb = {"x": jnp.asarray(test.x), "y": jnp.asarray(test.y)}
     return eng, testb
@@ -61,6 +64,13 @@ def run(args):
         schedule=args.schedule, eval_every=args.eval_every))
     report = sim.run(testb)
     print(report.timeline())
+    try:
+        stats = eng.compile_stats()
+        print(f"# round programs={len(stats)} "
+              f"xla_compiles={sum(stats.values())} "
+              f"(padding {'on' if eng.cfg.pad_clusters else 'off'})")
+    except RuntimeError:
+        print("# compile telemetry unavailable on this jax build")
     if args.json:
         print(json.dumps(report.to_dict(), default=float))
     return report
@@ -70,7 +80,13 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--trace", default="dropout", choices=sorted(SCENARIOS))
     ap.add_argument("--mar-policy", default="drop",
-                    choices=["drop", "mask", "wait"])
+                    choices=["drop", "mask", "wait", "buffer"])
+    ap.add_argument("--staleness-discount", type=float, default=0.6,
+                    help="per-round weight decay of banked async updates "
+                         "(buffer policy)")
+    ap.add_argument("--no-pad", action="store_true",
+                    help="disable compile-stable capacity padding "
+                         "(retraces on every cluster-cardinality change)")
     ap.add_argument("--schedule", default="parallel",
                     choices=["parallel", "sequential"])
     ap.add_argument("--dropout-rate", type=float, default=0.15)

@@ -13,7 +13,12 @@ cost model (Eq. 2, with transient slowdowns); (3) applies the MAR policy:
   communication cost, down-weighted by the granted fraction (comm time
   alone blowing the budget degrades to a download-only drop);
 * ``wait``  — nobody is cut; the round runs straggler-bound (Eq. 2), the
-  violation is only recorded.
+  violation is only recorded;
+* ``buffer`` — violators train their full τ steps but miss the synchronous
+  aggregate; their update is banked and joins the NEXT round's FedAvg at a
+  staleness-discounted weight (``FLConfig(aggregation="buffered")``) — the
+  round stays bounded by the on-time members, and the straggler's work is
+  not thrown away.
 
 Masks and weights feed ``FedRAC.cluster_round`` — one batched vmap update per
 cluster per round — so the simulator exercises exactly the fast path.
@@ -26,7 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import cost_model
+from repro.core import aggregation, cost_model
 from repro.core.server import FedRAC
 from repro.sim.clock import EventQueue, SimClock
 from repro.sim.events import (Arrival, Departure, ResourceDrift, SpikeEnd,
@@ -38,7 +43,7 @@ from repro.sim.traces import Trace
 @dataclass
 class SimConfig:
     rounds: int = 10
-    mar_policy: str = "drop"          # drop | mask | wait
+    mar_policy: str = "drop"          # drop | mask | wait | buffer
     schedule: str = "parallel"        # Eq. 9 parallel | Eq. 10 sequential
     eval_every: int = 0               # 0 → evaluate only after the last round
     min_speed: float = 0.05           # drift clamps (GHz / Mbps / GB floors)
@@ -50,10 +55,13 @@ class HeterogeneitySim:
     """Couples a set-up ``FedRAC`` with a ``Trace`` and runs the event loop."""
 
     def __init__(self, fedrac: FedRAC, trace: Trace, cfg: SimConfig):
-        if cfg.mar_policy not in ("drop", "mask", "wait"):
+        if cfg.mar_policy not in ("drop", "mask", "wait", "buffer"):
             raise ValueError(f"unknown mar_policy {cfg.mar_policy!r}")
         if cfg.schedule not in ("parallel", "sequential"):
             raise ValueError(f"unknown schedule {cfg.schedule!r}")
+        if cfg.mar_policy == "buffer" and fedrac.cfg.aggregation != "buffered":
+            raise ValueError(
+                'mar_policy "buffer" needs FLConfig(aggregation="buffered")')
         self.fl = fedrac
         self.trace = trace
         self.cfg = cfg
@@ -66,6 +74,8 @@ class HeterogeneitySim:
         self._spike_seq = 0
         self._rejoin_token: dict[int, int] = {}          # pid -> departure gen
         self._gone: set[int] = set()                     # permanent dropouts
+        # buffered async aggregation: level -> [{pid, params, n_eff, round}]
+        self._bank: dict[int, list] = {lvl: [] for lvl in range(fedrac.m)}
 
     # ------------------------------------------------------------ events
     def _apply_events(self, r: int) -> list[str]:
@@ -163,6 +173,15 @@ class HeterogeneitySim:
                     stats.bytes += cost_model.round_bytes(
                         spec.model_bytes, upload=False)
                     continue
+                if cfg.mar_policy == "buffer":
+                    # full local work, zero sync weight: the update is banked
+                    # after the round and joins the next aggregate discounted.
+                    # The upload completes late, off this round's critical
+                    # path, so it does not bound the cluster time.
+                    masks[i] = 1.0
+                    stats.banked.append(pid)
+                    stats.bytes += cost_model.round_bytes(spec.model_bytes)
+                    continue
                 if cfg.mar_policy == "mask":
                     # only the train part scales with steps; comm is fixed,
                     # so grant ⌊S·(MAR − T_c)/T_a⌋ steps (0 if comm alone
@@ -213,17 +232,54 @@ class HeterogeneitySim:
                     continue
                 stats, masks, weights, t_cluster = self._mar_decisions(
                     lvl, members)
-                if float(weights.sum()) > 0.0:
+                ripe = [b for b in self._bank[lvl] if b["round"] < r]
+                live = float(weights.sum()) > 0.0
+                if live or stats.banked or ripe:
                     teacher = None
                     if lvl > 0:
                         teacher = (master_before if cfg.schedule == "parallel"
                                    else params[0])
-                    params[lvl], losses = fl.cluster_round(
-                        lvl, members, params[lvl], r, teacher=teacher,
-                        step_masks=jnp.asarray(masks), weights=weights)
+                    buffered = None
+                    if ripe:
+                        self._bank[lvl] = [b for b in self._bank[lvl]
+                                           if b["round"] >= r]
+                        stats.flushed = len(ripe)
+                        if live:
+                            us = aggregation.staleness_weights(
+                                [b["n_eff"] for b in ripe],
+                                [r - b["round"] for b in ripe],
+                                fl.cfg.staleness_discount)
+                            buffered = [(b["params"], u)
+                                        for b, u in zip(ripe, us)]
+                        else:
+                            # no live contributor to anchor the convex
+                            # combination inside cluster_round — anchor the
+                            # current aggregate at the cluster's live weight,
+                            # exactly as the terminal flush does
+                            params[lvl] = self._anchored_merge(
+                                params[lvl], ripe, r, lvl)
+                    if live or stats.banked:
+                        # buffered mode always requests the stack so one
+                        # jitted program serves rounds with and without
+                        # violators
+                        want_stack = fl.cfg.aggregation == "buffered"
+                        out = fl.cluster_round(
+                            lvl, members, params[lvl], r, teacher=teacher,
+                            step_masks=masks, weights=weights,
+                            buffered=buffered, return_stack=want_stack)
+                        params[lvl], losses = out[0], out[1]
+                        if stats.banked:
+                            stack = out[2]
+                        for pid in stats.banked:
+                            i = members.index(pid)
+                            self._bank[lvl].append({
+                                "pid": pid, "round": r,
+                                "n_eff": fl.assignment.n_eff.get(pid, 1),
+                                "params": jax.tree.map(lambda x: x[i], stack)})
                     contributing = weights > 0
-                    stats.mean_loss = float(
-                        np.mean(np.asarray(losses)[contributing]))
+                    if contributing.any():
+                        stats.mean_loss = float(
+                            np.mean(np.asarray(losses)[contributing]))
                 if cfg.eval_every and (r + 1) % cfg.eval_every == 0:
                     stats.acc = fl.evaluate(lvl, params[lvl], test)
                 clusters.append(stats)
@@ -234,6 +290,7 @@ class HeterogeneitySim:
                                    duration=duration, clusters=clusters,
                                    events=ev_log))
             self.clock.advance(duration)
+        self._terminal_flush(params, cfg.rounds, report)
         for lvl in range(fl.m):
             if not fl.assignment.members.get(lvl):
                 continue
@@ -242,3 +299,34 @@ class HeterogeneitySim:
                                      fl.evaluate(lvl, params[lvl], test))
         self.params = params
         return report
+
+    def _anchored_merge(self, cur, entries: list, r: int, lvl: int):
+        """Flush banked entries into ``cur`` with no live contributors to
+        normalize against: the current aggregate anchors the convex
+        combination at the cluster's live n_eff weight, so discounted stale
+        updates nudge — never replace — the model."""
+        fl = self.fl
+        W = float(sum(fl.assignment.n_eff.get(pid, 1)
+                      for pid in fl.assignment.members.get(lvl, [])))
+        us = aggregation.staleness_weights(
+            [b["n_eff"] for b in entries],
+            [r - b["round"] for b in entries],
+            fl.cfg.staleness_discount)
+        total = W + sum(us)
+        anchored = jax.tree.map(lambda x: (W / total) * x, cur)
+        return aggregation.merge_buffered(
+            anchored, [b["params"] for b in entries],
+            [u / total for u in us])
+
+    def _terminal_flush(self, params: dict, rounds: int, report) -> None:
+        """Merge updates still sitting in the bank when the sim ends (banked
+        in the last round, or in a cluster that never ran again) — so 'no
+        work is thrown away' holds for the last round too."""
+        for lvl, entries in self._bank.items():
+            if not entries:
+                continue
+            params[lvl] = self._anchored_merge(params[lvl], entries,
+                                               rounds, lvl)
+            if report.rows:
+                report.rows[-1].clusters[lvl].flushed += len(entries)
+            self._bank[lvl] = []

@@ -18,6 +18,8 @@ class ClusterRoundStats:
     offline: list = field(default_factory=list)    # not online this round
     masked: dict = field(default_factory=dict)     # pid -> steps granted (<S)
     violations: list = field(default_factory=list)  # pids with T_i > MAR
+    banked: list = field(default_factory=list)     # late updates buffered
+    flushed: int = 0                               # stale updates merged
     bytes: float = 0.0
     mean_loss: float = float("nan")
     acc: float | None = None
@@ -62,10 +64,14 @@ class SimReport:
     # ------------------------------------------------------------ summaries
     def summary(self) -> dict:
         n_parts = {p for r in self.rows for c in r.clusters
-                   for p in (c.active + c.dropped + c.offline)}
-        total_slots = sum(len(c.active) + len(c.dropped) + len(c.offline)
-                          for r in self.rows for c in r.clusters)
-        active_slots = sum(len(c.active) for r in self.rows for c in r.clusters)
+                   for p in (c.active + c.dropped + c.offline + c.banked)}
+        total_slots = sum(
+            len(c.active) + len(c.dropped) + len(c.offline) + len(c.banked)
+            for r in self.rows for c in r.clusters)
+        # banked members participate — their (late) update reaches the next
+        # round's aggregate
+        active_slots = sum(len(c.active) + len(c.banked)
+                           for r in self.rows for c in r.clusters)
         return {
             "scenario": self.scenario,
             "mar_policy": self.mar_policy,
@@ -78,6 +84,10 @@ class SimReport:
                                   if total_slots else 0.0,
             "mar_violations": sum(len(r.violations) for r in self.rows),
             "dropped_total": sum(len(r.dropped) for r in self.rows),
+            "banked_total": sum(len(c.banked) for r in self.rows
+                                for c in r.clusters),
+            "flushed_total": sum(c.flushed for r in self.rows
+                                 for c in r.clusters),
             "final_acc": {k: round(v, 4) for k, v in self.final_acc.items()},
         }
 
@@ -92,6 +102,10 @@ class SimReport:
                     bits += f" {len(c.dropped)}drop"
                 if c.masked:
                     bits += f" {len(c.masked)}mask"
+                if c.banked:
+                    bits += f" {len(c.banked)}bank"
+                if c.flushed:
+                    bits += f" {c.flushed}flush"
                 if c.offline:
                     bits += f" {len(c.offline)}off"
                 if c.violations:

@@ -57,9 +57,14 @@ def test_reassign_preserves_total_membership():
 
 
 def test_server_update_resources(tiny_fl_setup):
+    import dataclasses
+
     from repro.core import server as srv
     from repro.core.families import cnn_family
     parts, client_data, train, test = tiny_fl_setup
+    # update_resources mutates Participant objects in place — copy them so
+    # the session-scoped fixture stays pristine for later test modules
+    parts = [dataclasses.replace(p) for p in parts]
     fam = cnn_family(classes=10, in_channels=1, base_width=0.125)
     cfg = srv.FLConfig(rounds=1, steps_per_round=1, compact_to=3, seed=3)
     eng = srv.FedRAC(parts, client_data, fam, cfg, classes=10).setup()

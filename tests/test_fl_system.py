@@ -26,11 +26,10 @@ def fedrac_result(tiny_fl_setup):
     return eng, res
 
 
-@pytest.mark.xfail(
-    reason="accuracy threshold missed at CPU-scale round budget (0.175 vs "
-           "0.22); pre-existing at seed, see ROADMAP open items",
-    strict=False)
 def test_fedrac_learns(fedrac_result):
+    """Passes since the Procedure-1 k-selection fix: the corrected Dunn/
+    k-means++ clustering yields a stronger master cluster at the same
+    CPU-scale round budget."""
     eng, res = fedrac_result
     assert res.global_acc > 0.22          # 10 classes, random = 0.10
     assert res.final_acc[0] > 0.30        # master cluster trains properly
@@ -50,8 +49,12 @@ def test_fedrac_clusters_ordered(fedrac_result):
 
 
 @pytest.mark.xfail(
-    reason="KD-vs-CE margin not reproduced at CPU-scale budgets; "
-           "pre-existing at seed, see ROADMAP open items", strict=False)
+    reason="KD student (≈0.24) trails plain CE (≈0.49) at this 24-step "
+           "budget: kd_alpha=0.5 halves the hard-label signal before the "
+           "level-2 student can exploit the teacher's soft targets.  "
+           "Clustering-independent (the pipeline here bypasses Procedure 1), "
+           "so the k-selection fix does not move it; needs a longer student "
+           "budget or an α/T sweep.", strict=False)
 def test_master_slave_kd_helps_small_model(tiny_fl_setup):
     """Fig. 3 mechanism, isolated: with a WELL-TRAINED master as teacher, a
     level-2 slave model distilled on limited data beats the same model

@@ -12,7 +12,8 @@ from repro.core.resources import Participant, participants_from_matrix
 from repro.data.partition import dirichlet_partition
 from repro.data.synthetic import make_classification, train_test_split
 from repro.sim import (Arrival, Departure, EventQueue, HeterogeneitySim,
-                       SimConfig, StragglerSpike, make_trace, sample_profiles)
+                       ResourceDrift, SimConfig, StragglerSpike, make_trace,
+                       sample_profiles)
 
 FAM = cnn_family(classes=10, in_channels=1, base_width=0.125)
 
@@ -222,3 +223,190 @@ def test_all_dropped_round_is_a_no_op():
         weights=np.zeros(len(members), np.float32))
     for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(params)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ------------------------------------------------------------ padding
+def test_capacity_bucketing():
+    eng, _ = _setup(n=6, compact_to=1, mar=1e9)
+    eng.cfg.pad_max = 16
+    for c, cap in ((1, 1), (2, 2), (3, 4), (5, 8), (9, 16), (16, 16),
+                   (17, 32), (33, 48)):
+        assert eng._capacity(c) == cap, (c, cap)
+    # non-power-of-two pad_max: the pow2 branch is capped at pad_max so
+    # capacities stay monotone and never exceed the bucket granularity
+    eng.cfg.pad_max = 48
+    for c, cap in ((33, 48), (47, 48), (48, 48), (49, 96)):
+        assert eng._capacity(c) == cap, (c, cap)
+    caps = [eng._capacity(c) for c in range(1, 100)]
+    assert all(a <= b for a, b in zip(caps, caps[1:]))
+    eng.cfg.pad_clusters = False
+    assert eng._capacity(5) == 5
+
+
+def test_padded_round_matches_unpadded_exactly():
+    """Padding slots (zero batches, zero step-masks, zero weights) must not
+    perturb the renormalized FedAvg — same round, padded vs exact-C."""
+    eng, _ = _setup(n=6, compact_to=1, mar=1e9)
+    members = list(eng.assignment.members[0])    # C=6 → capacity 8
+    params = eng.family.init(jax.random.PRNGKey(0), 0)
+    eng.cfg.pad_clusters = True
+    padded, pl = eng.cluster_round(0, members, params, 0)
+    assert eng._capacity(len(members)) > len(members)
+    eng.cfg.pad_clusters = False
+    eng._programs.clear()
+    exact, el = eng.cluster_round(0, members, params, 0)
+    for a, b in zip(jax.tree.leaves(padded), jax.tree.leaves(exact)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=1e-6)
+    assert pl.shape == el.shape == (len(members),)
+    np.testing.assert_allclose(np.asarray(pl), np.asarray(el),
+                               rtol=2e-4, atol=1e-6)
+
+
+def test_procedure2_reassignment_does_not_retrace():
+    """≥5 drift-driven cluster migrations must reuse the per-capacity round
+    programs: each jitted program compiles exactly once."""
+    eng, testb = _setup(n=10, compact_to=2)       # auto MAR: placement bites
+    trace = make_trace("stable", 10, 8)
+    # bounce one master member across the cluster boundary every round:
+    # alternating extreme down/up drifts make each re-placement a migration
+    pid = eng.assignment.members[0][0]
+    for r in range(7):
+        mult = 0.02 if r % 2 == 0 else 50.0
+        trace.events.append((float(r), ResourceDrift(
+            pid, s_mult=mult, r_mult=mult, a_mult=1.0)))
+    sim = HeterogeneitySim(eng, trace, SimConfig(rounds=8))
+    rep = sim.run(testb)
+    migrations = sum(ev.count("→") for r in rep.rows for ev in r.events)
+    assert migrations >= 5, f"only {migrations} migrations in trace"
+    stats = eng.compile_stats()
+    assert stats, "no round programs were built"
+    retraced = {k: v for k, v in stats.items() if v != 1}
+    assert not retraced, f"programs retraced: {retraced}"
+
+
+# ------------------------------------------------------------ buffered async
+def test_buffer_policy_banks_flushes_and_bounds_round_time():
+    eng, testb = _straggler_setup()
+    eng.cfg.aggregation = "buffered"
+    sim = HeterogeneitySim(eng, make_trace("stable", 8, 4),
+                           SimConfig(rounds=4, mar_policy="buffer"))
+    rep = sim.run(testb)
+    for i, row in enumerate(rep.rows):
+        c = row.clusters[0]
+        assert sorted(c.violations) == [6, 7] == sorted(c.banked)
+        assert sorted(c.active) == list(range(6))
+        assert not c.dropped
+        # stragglers are off the critical path: survivors bound the round
+        assert c.time <= eng.specs[0].mar
+        # the previous round's banked updates are merged the next round;
+        # the final round's bank is terminally flushed into the last row
+        want = 0 if i == 0 else (4 if i == len(rep.rows) - 1 else 2)
+        assert c.flushed == want
+    s = rep.summary()
+    # every banked update reaches an aggregate — nothing thrown away
+    assert s["banked_total"] == 8 == s["flushed_total"]
+    assert s["participation_rate"] == 1.0
+
+
+def test_buffer_policy_all_members_banked_then_flushed():
+    """A cluster where EVERY online member violates MAR: the round aggregates
+    nothing (params unchanged) but every update is banked and flushes into
+    the next round — no crash, no lost work."""
+    eng, testb = _setup(n=6, compact_to=1, mar=1e9)
+    eng.cfg.aggregation = "buffered"
+    eng.specs[0].mar = 1e-9                       # everyone is late
+    p0 = eng.family.init(jax.random.PRNGKey(eng.cfg.seed), 0)
+    sim = HeterogeneitySim(eng, make_trace("stable", 6, 3),
+                           SimConfig(rounds=3, mar_policy="buffer"))
+    rep = sim.run(testb)
+    c0 = rep.rows[0].clusters[0]
+    assert sorted(c0.banked) == list(range(6)) and not c0.active
+    assert c0.flushed == 0
+    # round 1 flushes all six banked updates; params moved off the init
+    c1 = rep.rows[1].clusters[0]
+    assert c1.flushed == 6
+    moved = any(not np.allclose(np.asarray(a), np.asarray(b))
+                for a, b in zip(jax.tree.leaves(sim.params[0]),
+                                jax.tree.leaves(p0)))
+    assert moved
+    assert rep.summary()["participation_rate"] == 1.0
+
+
+def test_buffer_flush_during_offline_blip_keeps_anchor():
+    """Ripe banked updates flushing into a round where EVERY member is
+    offline must anchor on the current aggregate (live n_eff weight), not
+    replace it with the discounted stale average."""
+    eng, testb = _setup(n=6, compact_to=1, mar=1e9)
+    eng.cfg.aggregation = "buffered"
+    eng.specs[0].mar = 1e-9                       # round 0: everyone banked
+    trace = make_trace("stable", 6, 3)
+    for pid in range(6):                          # round 1: everyone offline
+        trace.events.append((1.0, Departure(pid, rejoin_after=1.0)))
+    sim = HeterogeneitySim(eng, trace, SimConfig(rounds=3,
+                                                 mar_policy="buffer"))
+    rep = sim.run(testb)
+    c1 = rep.rows[1].clusters[0]
+    assert len(c1.offline) == 6 and not c1.active
+    assert c1.flushed == 6                        # flush-only round, no crash
+    # the anchor kept a majority share: the flushed model must not coincide
+    # with the unanchored pure-stale average (weights: W=6·n_eff vs Σu·0.6)
+    assert rep.summary()["banked_total"] == rep.summary()["flushed_total"]
+
+
+def test_buffer_policy_requires_buffered_aggregation():
+    eng, _ = _setup(n=6, compact_to=1, mar=1e9)
+    with pytest.raises(ValueError, match="buffered"):
+        HeterogeneitySim(eng, make_trace("stable", 6, 2),
+                         SimConfig(rounds=2, mar_policy="buffer"))
+
+
+def test_buffered_merge_is_weighted_convex_combination():
+    """cluster_round with a banked contribution equals the hand-computed
+    FedAvg over live members and the stale params at their raw weights."""
+    eng, _ = _setup(n=6, compact_to=1, mar=1e9)
+    members = list(eng.assignment.members[0])
+    params = eng.family.init(jax.random.PRNGKey(0), 0)
+    stale = eng.family.init(jax.random.PRNGKey(1), 0)   # a banked update
+    w = np.array([eng.assignment.n_eff[p] for p in members], np.float32)
+    u = 2.5
+    # reference: run the same round synchronously, then mix in stale params
+    sync, _ = eng.cluster_round(0, members, params, 0, weights=w)
+    W = float(w.sum())
+    want = jax.tree.map(lambda a, b: (W * a + u * b) / (W + u), sync, stale)
+    got, _ = eng.cluster_round(0, members, params, 0, weights=w,
+                               buffered=[(stale, u)])
+    for a, b in zip(jax.tree.leaves(want), jax.tree.leaves(got)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=1e-6)
+
+
+@pytest.mark.slow
+def test_buffered_convergence_smoke():
+    """Under permanent stragglers the buffered schedule still learns: the
+    master cluster clearly beats the 0.10 random baseline, and the banked
+    updates keep total participation at 100%."""
+    eng, testb = _straggler_setup()
+    eng.cfg.aggregation = "buffered"
+    sim = HeterogeneitySim(eng, make_trace("stable", 8, 6),
+                           SimConfig(rounds=6, mar_policy="buffer",
+                                     eval_every=6))
+    rep = sim.run(testb)
+    assert rep.final_acc[0] > 0.2
+    assert rep.summary()["participation_rate"] == 1.0
+
+
+@pytest.mark.slow
+def test_padded_vs_unpadded_full_train_equivalence():
+    """End-to-end: FedRAC.train with capacity padding reproduces the exact-C
+    path's aggregated params (rtol 2e-4, matching the loop/vmap test)."""
+    results = {}
+    for pad in (True, False):
+        eng, testb = _setup(n=8, samples=400, compact_to=2, pad_clusters=pad)
+        eng.train(testb)
+        results[pad] = eng
+    for lvl, pv in results[True].cluster_params.items():
+        pl = results[False].cluster_params[lvl]
+        for a, b in zip(jax.tree.leaves(pv), jax.tree.leaves(pl)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=2e-4, atol=1e-5)

@@ -1,6 +1,8 @@
-"""Simulator benchmarks: cluster-execution throughput + compile-stable padding.
+"""Simulator benchmarks: cluster-execution throughput, compile-stable
+padding, and the device-resident multi-round dispatch pipeline.
 
-  PYTHONPATH=src python benchmarks/bench_sim.py [--mode cluster|padding|all]
+  PYTHONPATH=src python benchmarks/bench_sim.py
+      [--mode cluster|padding|dispatch|all]
       [--family lm|cnn] [--members 12] [--rounds 20] [--json out.json]
 
 ``--mode cluster`` times ``FedRAC._train_cluster`` on one cluster of C
@@ -27,12 +29,22 @@ reassignments) with capacity padding on vs off and reports wall-clock and
 XLA compile counts: the unpadded path retraces its round program on every
 cluster-cardinality change, the padded path compiles once per capacity
 bucket.
+
+``--mode dispatch`` times the device-resident round pipeline on a
+dispatch-bound micro-LM cluster (per-round XLA compute of a few ms, so the
+per-round host work — numpy sampling, stacking, transfer, program dispatch —
+is a real fraction of the round): ``rounds_per_dispatch=R`` fuses R rounds
+into one lax.scan program with in-program batch sampling and flat-plane
+aggregation.  Reports each path's median-of-``--reps`` client-steps/s
+(interleaved reps, medians rather than best-of: container load is the
+dominant noise source).  Target on this container's CPU: ≥1.5× at R=8.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import pathlib
+import statistics
 import sys
 import time
 
@@ -46,7 +58,8 @@ import numpy as np                   # noqa: E402
 from common import Timer             # noqa: E402
 from repro.configs.base import ModelConfig                 # noqa: E402
 from repro.core import server as srv                       # noqa: E402
-from repro.core.families import cnn_family, lm_family      # noqa: E402
+from repro.core.families import (cnn_family, lm_family,    # noqa: E402
+                                 mlp_family)
 from repro.core.resources import participants_from_matrix  # noqa: E402
 from repro.data.partition import dirichlet_partition       # noqa: E402
 from repro.data.synthetic import (lm_batches, make_classification,  # noqa: E402
@@ -105,6 +118,101 @@ def build_lm(n_members: int, steps: int, seed: int):
                        compact_to=1, mar=1e9, class_balanced=False,
                        pad_clusters=False)
     return LMFedRAC(parts, cd, fam, cfg, classes=64).setup()
+
+
+# ------------------------------------------------------------ dispatch bench
+class TokenShardFedRAC(srv.FedRAC):
+    """FedRAC over {"tokens"} shards: host batches via numpy (legacy path),
+    device batches via the ``_batch_from_gathered`` hook (dispatch path)."""
+
+    def _client_batches(self, pid, r, balanced):
+        d = self.client_data[pid]
+        rng = np.random.default_rng(pid * 31 + r)
+        idx = rng.integers(0, d["tokens"].shape[0],
+                           (self.cfg.steps_per_round, self.cfg.local_batch))
+        t = d["tokens"][idx]
+        return {"tokens": t, "y": t[:, :, -1]}
+
+    def _batch_from_gathered(self, g):
+        return {"tokens": g["tokens"], "y": g["tokens"][:, :, -1]}
+
+
+def build_micro_lm(n_members: int, steps: int, seed: int, R: int,
+                   batch: int = 4, d_model: int = 16, seq: int = 9,
+                   vocab: int = 16):
+    """Dispatch-bound cluster: a micro LM whose per-round XLA program runs in
+    a few ms, so per-round host overhead dominates the legacy path."""
+    base = ModelConfig(name="micro-lm", family="dense", n_layers=1,
+                       d_model=d_model, n_heads=1, n_kv_heads=1,
+                       head_dim=d_model, d_ff=2 * d_model, vocab_size=vocab,
+                       rope_theta=1e4)
+    fam = lm_family(base, alpha=0.5)
+    corpus = make_lm_corpus(vocab, 4000, seed=seed)
+    parts = participants_from_matrix(sample_profiles(n_members, seed=seed),
+                                     n_data=[64] * n_members)
+    chunks = np.array_split(corpus, n_members)
+    cd = [{"tokens": lm_batches(ch, batch, seq, 1, seed=i)[0]}
+          for i, ch in enumerate(chunks)]
+    cfg = srv.FLConfig(steps_per_round=steps, lr=0.1, seed=seed,
+                       compact_to=1, mar=1e9, class_balanced=False,
+                       pad_clusters=False, local_batch=batch,
+                       rounds_per_dispatch=R)
+    return TokenShardFedRAC(parts, cd, fam, cfg, classes=vocab).setup()
+
+
+def build_micro_mlp(n_members: int, steps: int, seed: int, R: int,
+                    batch: int = 8):
+    """The headline dispatch-bound cluster: a two-layer MLP whose per-round
+    XLA program is a handful of ops, so the legacy path's per-round host
+    work dominates."""
+    ds = make_classification("synth-mnist", 60 * n_members, seed=seed)
+    train, _ = train_test_split(ds)
+    idx = dirichlet_partition(train.y, n_members, alpha=10.0, seed=seed)
+    parts = participants_from_matrix(sample_profiles(n_members, seed=seed),
+                                     n_data=[len(p) for p in idx])
+    cd = [{"x": train.x[p], "y": train.y[p]} for p in idx]
+    cfg = srv.FLConfig(steps_per_round=steps, lr=0.08, seed=seed,
+                       compact_to=1, mar=1e9, pad_clusters=False,
+                       local_batch=batch, class_balanced=False,
+                       rounds_per_dispatch=R)
+    return srv.FedRAC(parts, cd, mlp_family(), cfg, classes=10).setup()
+
+
+def _time_dispatch_pair(build, n: int, steps: int, seed: int, R: int,
+                        rounds: int, reps: int) -> dict:
+    engs = {1: build(n, steps, seed, 1), R: build(n, steps, seed, R)}
+    members = {k: list(e.assignment.members[0]) for k, e in engs.items()}
+    for k, eng in engs.items():                      # compile both paths
+        eng._train_cluster(0, members[k], max(k, 2), None,
+                           record_every=10 ** 9)
+    sps = {1: [], R: []}
+    for _ in range(reps):                            # interleaved medians
+        for k, eng in engs.items():
+            with Timer() as t:
+                p, _ = eng._train_cluster(0, members[k], rounds, None,
+                                          record_every=10 ** 9)
+                jax.block_until_ready(jax.tree.leaves(p))
+            sps[k].append(n * steps * rounds / t.dt)
+    r1 = statistics.median(sps[1])
+    rR = statistics.median(sps[R])
+    return {"members": n, "rounds": rounds, "R": R, "steps": steps,
+            "legacy_steps_per_s": round(r1, 1),
+            "dispatch_steps_per_s": round(rR, 1),
+            "speedup": round(rR / r1, 3)}
+
+
+def run_dispatch_bench(n: int = 12, R: int = 8, reps: int = 4,
+                       seed: int = 0, with_lm: bool = True) -> dict:
+    """R-round fused dispatch vs the legacy one-round-per-dispatch path on
+    the dispatch-bound MLP cluster (headline, ≥1.5× target) and — for
+    context — the micro-LM, whose larger per-round op count leaves less
+    host overhead to remove (~1.3× on this container)."""
+    out = {"mlp": _time_dispatch_pair(build_micro_mlp, n, 2, seed, R,
+                                      rounds=64, reps=reps)}
+    if with_lm:
+        out["lm"] = _time_dispatch_pair(build_micro_lm, n, 1, seed, R,
+                                        rounds=32, reps=reps)
+    return out
 
 
 def time_path(eng, members, rounds, steps, vmap: bool) -> float:
@@ -199,6 +307,18 @@ def run_cluster_bench(args) -> dict:
 
 
 # ------------------------------------------------------------ run.py hooks
+def bench_sim_dispatch():
+    """benchmarks/run.py suite: fused multi-round dispatch vs legacy rounds
+    on the dispatch-bound MLP cluster (CPU-budget scale; the micro-LM
+    context row stays CLI-only)."""
+    res = run_dispatch_bench(n=12, R=8, reps=3, with_lm=False)["mlp"]
+    for tag, key in (("r1", "legacy_steps_per_s"),
+                     ("r8", "dispatch_steps_per_s")):
+        sps = res[key]
+        yield (f"sim/dispatch_{tag}", 1e6 / max(sps, 1e-9),
+               f"client_steps_per_s={sps};speedup={res['speedup']}")
+
+
 def bench_sim_padding():
     """benchmarks/run.py suite: padded vs unpadded drift-heavy sim rows."""
     res = run_padding_bench()
@@ -224,7 +344,9 @@ def bench_sim_cluster():
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", default="cluster",
-                    choices=["cluster", "padding", "all"])
+                    choices=["cluster", "padding", "dispatch", "all"])
+    ap.add_argument("--dispatch-r", type=int, default=8,
+                    help="dispatch mode: rounds fused per program")
     ap.add_argument("--family", default="lm", choices=["lm", "cnn"])
     ap.add_argument("--members", type=int, default=16)
     ap.add_argument("--rounds", type=int, default=20)
@@ -238,12 +360,27 @@ def main(argv=None):
     ap.add_argument("--participants", type=int, default=10,
                     help="padding mode: fleet size")
     ap.add_argument("--json", default=None, metavar="PATH",
-                    help="also write results as JSON (BENCH_sim.json in CI)")
+                    help="also write results as JSON (CI tracks the suite "
+                         "via benchmarks/run.py --json BENCH_core.json)")
     args = ap.parse_args(argv)
+    if args.mode in ("dispatch", "all") and args.dispatch_r < 2:
+        ap.error("--dispatch-r must be ≥ 2 (R=1 IS the legacy baseline)")
 
     results = {}
     if args.mode in ("cluster", "all"):
         results["cluster"] = run_cluster_bench(args)
+    if args.mode in ("dispatch", "all"):
+        res = run_dispatch_bench(n=args.members, R=args.dispatch_r,
+                                 reps=args.reps, seed=args.seed)
+        results["dispatch"] = res
+        for fam, d in res.items():
+            print(f"{fam} cluster of C={d['members']} members, "
+                  f"{d['steps']} local steps × {d['rounds']} rounds")
+            print(f"  legacy (R=1)  : {d['legacy_steps_per_s']:10.1f} "
+                  f"client-steps/s")
+            print(f"  fused  (R={d['R']})  : "
+                  f"{d['dispatch_steps_per_s']:10.1f} client-steps/s "
+                  f"({d['speedup']:.2f}× speedup)")
     if args.mode in ("padding", "all"):
         pad = run_padding_bench(n=args.participants, rounds=args.sim_rounds,
                                 steps=args.steps, seed=args.seed,

@@ -1,12 +1,18 @@
 """Benchmark harness — one entry per paper table/figure + kernels + roofline.
 
   PYTHONPATH=src python -m benchmarks.run [--only substring] [--fast]
+      [--json BENCH_core.json]
 
-Prints ``name,us_per_call,derived`` CSV (one row per measurement).
+Prints ``name,us_per_call,derived`` CSV (one row per measurement); with
+``--json`` additionally writes the whole suite as a machine-readable
+artifact (name → {us_per_call, derived}) so the perf trajectory is tracked
+across PRs (CI uploads it from the fast lane).
 """
 from __future__ import annotations
 
 import argparse
+import json
+import pathlib
 import sys
 import time
 import traceback
@@ -24,6 +30,7 @@ def _suites(fast: bool):
         ("kernels/kd", bench_kernels.bench_kd_jnp_vs_kernel_math),
         ("roofline", bench_roofline.bench_roofline),
         ("sim/padding", bench_sim.bench_sim_padding),
+        ("sim/dispatch", bench_sim.bench_sim_dispatch),
     ]
     if not fast:
         suites += [
@@ -44,8 +51,12 @@ def main() -> None:
     ap.add_argument("--only", default="")
     ap.add_argument("--fast", action="store_true",
                     help="skip the FL-training table benchmarks")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write all rows as JSON "
+                         "(BENCH_core.json in CI)")
     args = ap.parse_args()
 
+    rows = {}
     print("name,us_per_call,derived")
     t_start = time.time()
     for name, fn in _suites(args.fast):
@@ -55,10 +66,19 @@ def main() -> None:
             for row, us, derived in fn():
                 print(f"{row},{us:.1f},{str(derived).replace(',', ';')}",
                       flush=True)
+                rows[row] = {"us_per_call": round(float(us), 3),
+                             "derived": str(derived)}
         except Exception:
-            print(f"{name},0.0,HARNESS_ERROR:"
-                  f"{traceback.format_exc().splitlines()[-1]}", flush=True)
-    print(f"# total wall: {time.time() - t_start:.1f}s", file=sys.stderr)
+            err = traceback.format_exc().splitlines()[-1]
+            print(f"{name},0.0,HARNESS_ERROR:{err}", flush=True)
+            rows[name] = {"us_per_call": 0.0, "derived": f"HARNESS_ERROR:{err}"}
+    wall = time.time() - t_start
+    print(f"# total wall: {wall:.1f}s", file=sys.stderr)
+    if args.json:
+        pathlib.Path(args.json).write_text(json.dumps(
+            {"rows": rows, "wall_s": round(wall, 1),
+             "fast": args.fast}, indent=2))
+        print(f"# wrote {args.json}", file=sys.stderr)
 
 
 if __name__ == "__main__":

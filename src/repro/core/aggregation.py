@@ -57,6 +57,42 @@ def fedavg_delta(global_params, params_stack, weights):
     return jax.tree.map(lambda a, g: a - g, agg, global_params)
 
 
+# ------------------------------------------------------------ flat plane
+# Plane counterparts of the pytree ops above: the dispatch path carries
+# cluster parameters as one contiguous (C, D_pad) fp32 buffer (core/plane.py)
+# so aggregation is a single contraction with no per-call tree_flatten /
+# concatenate / pad.  On TPU the contraction routes through the Pallas
+# ``kernels/fedagg`` kernel (the plane length is already block-aligned);
+# elsewhere it lowers to one dot.
+
+
+def _use_fedagg_kernel() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def aggregate_plane(plane, weights, *, use_kernel: bool | None = None):
+    """plane: (C, D) fp32; weights: (C,) raw or normalized → (D,) Σ w_i p_i."""
+    w = jnp.asarray(weights, jnp.float32)
+    if use_kernel is None:
+        use_kernel = _use_fedagg_kernel()
+    if use_kernel:
+        from repro.kernels.fedagg.ops import aggregate_plane as _kernel_plane
+        return _kernel_plane(plane, w, interpret=False)
+    return jnp.tensordot(w, plane, axes=(0, 0))
+
+
+def fedavg_delta_plane(global_plane, plane, weights):
+    """Server update as an aggregated delta, on the plane."""
+    return aggregate_plane(plane, weights) - global_plane
+
+
+def merge_buffered_plane(partial_plane, bank_plane, bank_weights):
+    """Plane form of ``merge_buffered``: fold banked rows (already normalized
+    by the live+buffered total) into a partial plane sum — one contraction,
+    no per-contribution tree_map."""
+    return partial_plane + aggregate_plane(bank_plane, bank_weights)
+
+
 # ------------------------------------------------------------ buffered async
 def staleness_weights(n_list, age_list, discount: float) -> list[float]:
     """Raw weights for banked (late) contributions: the member's data weight

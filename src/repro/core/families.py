@@ -44,6 +44,42 @@ def cnn_family(*, classes: int = 10, in_channels: int = 1, alpha: float = 0.5,
                          model_bytes=mb, flops_per_sample=flops)
 
 
+def mlp_family(*, classes: int = 10, in_dim: int = 14 * 14,
+               hidden: int = 32, alpha: float = 0.5) -> FLModelFamily:
+    """Two-layer MLP family: the small-model end of the spectrum (edge
+    devices below the paper's CNN).  Its per-round XLA program is a handful
+    of ops, which makes it dispatch-bound on CPU — the regime the
+    device-resident round pipeline (``FLConfig.rounds_per_dispatch``) is
+    built for; ``benchmarks/bench_sim.py --mode dispatch`` uses it."""
+    def width(level):
+        return max(4, int(hidden * alpha ** level))
+
+    def init(key, level):
+        h = width(level)
+        k1, k2 = jax.random.split(key)
+        return {"w1": jax.random.normal(k1, (in_dim, h)) * 0.05,
+                "b1": jnp.zeros((h,)),
+                "w2": jax.random.normal(k2, (h, classes)) * 0.05,
+                "b2": jnp.zeros((classes,))}
+
+    def loss_and_logits(level, params, batch):
+        x = batch["x"].reshape(batch["x"].shape[0], -1)
+        z = jax.nn.relu(x @ params["w1"] + params["b1"])
+        logits = z @ params["w2"] + params["b2"]
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(logits, batch["y"][:, None], axis=-1)[:, 0]
+        return jnp.mean(lse - picked), logits
+
+    def mb(level):
+        h = width(level)
+        return 4.0 * (in_dim * h + h + h * classes + classes)
+
+    return FLModelFamily(
+        init=init, loss_and_logits=loss_and_logits, model_bytes=mb,
+        flops_per_sample=lambda l: 2.0 * (in_dim * width(l)
+                                          + width(l) * classes))
+
+
 def lm_family(base_cfg: ModelConfig, alpha: float = 0.5) -> FLModelFamily:
     """Federated LM family: per-cluster α-compressed configs (same vocab →
     KD-compatible logits).  batch = {"tokens": (B,S), "y": (B,S) next ids}."""

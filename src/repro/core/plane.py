@@ -1,0 +1,52 @@
+"""Flat parameter plane: the device-resident currency of the dispatch path.
+
+A cluster's parameters are raveled ONCE at setup into a contiguous fp32
+vector padded to a lane-friendly multiple (``PLANE_ALIGN``), so that the
+multi-round ``lax.scan`` dispatch, the Pallas ``kernels/fedagg`` weighted
+aggregate, ``fedavg_delta`` and the buffered-async merges all operate on a
+single ``(capacity, D_pad)`` buffer with no per-call ``tree_flatten`` /
+``concatenate`` / ``pad``.  Pytrees reappear only at evaluation/reporting
+boundaries (``PlaneSpec.to_params``) and inside the per-member model forward
+(where XLA fuses the unravel slices away).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+# Multiple every plane length is padded to: keeps the Pallas fedagg block
+# grid divisible without per-call padding, and matches the 128-lane TPU
+# register tile.
+PLANE_ALIGN = 128
+
+
+@dataclass(frozen=True)
+class PlaneSpec:
+    """Ravel/unravel recipe for one cluster level's parameter pytree."""
+    d: int                      # true parameter count
+    d_pad: int                  # padded plane length (multiple of PLANE_ALIGN)
+    unravel: Callable           # (d,) -> params pytree (jax-traceable)
+
+    def to_plane(self, params) -> jnp.ndarray:
+        """params pytree -> (d_pad,) fp32 plane (jax-traceable)."""
+        flat, _ = ravel_pytree(params)
+        flat = flat.astype(jnp.float32)
+        if self.d_pad > self.d:
+            flat = jnp.concatenate(
+                [flat, jnp.zeros((self.d_pad - self.d,), jnp.float32)])
+        return flat
+
+    def to_params(self, plane: jnp.ndarray):
+        """(d_pad,) plane -> params pytree (jax-traceable)."""
+        return self.unravel(plane[:self.d])
+
+
+def make_plane_spec(params_template) -> PlaneSpec:
+    flat, unravel = ravel_pytree(params_template)
+    d = flat.shape[0]
+    d_pad = -(-d // PLANE_ALIGN) * PLANE_ALIGN
+    return PlaneSpec(d=d, d_pad=d_pad, unravel=unravel)

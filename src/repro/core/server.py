@@ -17,8 +17,10 @@ import numpy as np
 from repro.core import aggregation, assignment as asg, clustering, compaction
 from repro.core import cost_model, rounds as rnd
 from repro.core.client import local_update, make_cluster_update
+from repro.core.plane import make_plane_spec
 from repro.core.resources import (LAMBDA_PAPER, Participant, resource_matrix,
                                   unit_normalize)
+from repro.data import device_sampler
 from repro.data.sampler import class_balanced_batches, sample_batches
 
 
@@ -72,7 +74,28 @@ class FLConfig:
     # sim's MAR policy "buffer" feeds this path.
     aggregation: str = "sync"
     staleness_discount: float = 0.6
+    # device-resident round pipeline: >1 fuses that many communication
+    # rounds into ONE jitted lax.scan program (in-program batch sampling
+    # from device-resident shards, parameters carried as a flat fp32 plane,
+    # plane donated between blocks).  1 keeps the legacy one-round-per-
+    # dispatch path.  Within the dispatch path the batch stream depends
+    # only on the absolute round index, so any two widths R are numerically
+    # equivalent; the legacy path keeps its historical numpy stream.
+    rounds_per_dispatch: int = 1
+    # donate the parameter plane (and bank plane) into each dispatch so
+    # multi-round blocks run copy-free; the caller's handle to the donated
+    # buffer is dead after the call.
+    donate_plane: bool = True
     consts: rnd.ConvergenceConstants = field(default_factory=rnd.ConvergenceConstants)
+
+
+@dataclass
+class DispatchOut:
+    """Result of one scan-fused dispatch block (``FedRAC.dispatch_rounds``)."""
+    plane: object               # (D_pad,) fp32 — replaces the donated input
+    losses: object              # (R, C) per-round per-member mean losses
+    bank: tuple | None          # (bank_plane, bank_w) after the last round
+    history: object | None      # (R, D_pad) per-round planes (want_history)
 
 
 @dataclass
@@ -93,6 +116,10 @@ class FedRAC:
                  family: FLModelFamily, cfg: FLConfig, classes: int):
         if cfg.aggregation not in ("sync", "buffered"):
             raise ValueError(f"unknown aggregation {cfg.aggregation!r}")
+        if cfg.rounds_per_dispatch > 1 and not cfg.vmap_clusters:
+            raise ValueError(
+                "rounds_per_dispatch>1 (device-resident pipeline) requires "
+                "vmap_clusters=True — the per-pid loop cannot be scan-fused")
         self.parts = parts
         self.client_data = client_data        # per pid: {"x": ..., "y": ...}
         self.family = family
@@ -100,6 +127,13 @@ class FedRAC:
         self.classes = classes
         # (level, use_kd, capacity, want_stack, …) -> jitted round programs
         self._programs = {}
+        # dispatch-path caches: level -> PlaneSpec; (level, members) ->
+        # device-resident shard pack; lazily-computed global pad lengths
+        self._plane_specs = {}
+        self._shard_packs = {}
+        self._shard_len_pad = None
+        self._class_m_pad = None
+        self._class_tables = {}           # pid -> (table, counts) host arrays
 
     # ------------------------------------------------------------ setup
     def setup(self):
@@ -145,6 +179,46 @@ class FedRAC:
                             self.cfg.consts, self.cfg.lr)
 
     # ------------------------------------------------------------ training
+    # Batch sampling.  The legacy one-round-per-dispatch path samples on
+    # host with numpy (seed + 977·pid + round — unchanged numerics).  The
+    # scan-fused dispatch path draws its indices from a seeded jax.random
+    # stream keyed on (seed, absolute round, member slot) INSIDE the program
+    # (data/device_sampler.py) and gathers from device-resident shards, so
+    # any two dispatch widths R are numerically interchangeable (the stream
+    # never depends on block boundaries).
+    # The two paths' streams are statistically equivalent but distinct —
+    # cross-path comparisons are statistical, cross-R comparisons exact.
+
+    def _member_shard(self, pid: int):
+        """Hook: one member's full data shard (pytree, leading axis = n_i)
+        for the dispatch path.  Subclasses with non-{"x","y"} data override
+        this plus ``_batch_from_gathered``."""
+        return self.client_data[pid]
+
+    def _batch_from_gathered(self, gathered):
+        """Hook: post-gather transform from a (steps, batch, …) shard slice
+        to the loss_fn batch format (jax-traceable — it runs inside the
+        dispatch scan body)."""
+        return gathered
+
+    def _class_table(self, pid: int):
+        """Per-member class index table for balanced in-program sampling,
+        padded to the fleet-wide max class count so the dispatch program
+        shape is stable under Procedure-2 churn."""
+        if self._class_m_pad is None:
+            m = 1
+            for q in range(len(self.parts)):
+                y = np.asarray(self._member_shard(q)["y"])
+                if y.size:
+                    m = max(m, int(np.bincount(y, minlength=self.classes)
+                                   .max()))
+            self._class_m_pad = 1 << (m - 1).bit_length()
+        if pid not in self._class_tables:
+            self._class_tables[pid] = device_sampler.build_class_table(
+                np.asarray(self._member_shard(pid)["y"]), self.classes,
+                self._class_m_pad)
+        return self._class_tables[pid]
+
     def _client_batches(self, pid: int, rng_round: int, balanced: bool):
         d = self.client_data[pid]
         steps = self.cfg.steps_per_round
@@ -186,6 +260,72 @@ class FedRAC:
             return jnp.asarray(arr)
 
         return jax.tree.map(stack, *per)
+
+    # ------------------------------------------------------------ plane
+    def plane_spec(self, level: int):
+        """Flat-parameter-plane recipe for one level (cached; the template
+        init is shape-only)."""
+        if level not in self._plane_specs:
+            self._plane_specs[level] = make_plane_spec(
+                self.family.init(jax.random.PRNGKey(0), level))
+        return self._plane_specs[level]
+
+    def plane_of(self, level: int, params) -> jnp.ndarray:
+        """Ravel a params pytree into its (D_pad,) fp32 plane."""
+        return self.plane_spec(level).to_plane(params)
+
+    def params_of(self, level: int, plane):
+        """Unravel a plane back to a params pytree (evaluation/reporting
+        boundary — the only place the dispatch path leaves the plane)."""
+        return self.plane_spec(level).to_params(plane)
+
+    def _shard_pack(self, level: int, members: list[int], capacity: int,
+                    balanced: bool):
+        """Device-resident member data for the dispatch path: every member's
+        full shard stacked to (capacity, N_pad, …) once (padded rows are
+        zeros and never drawn), plus lengths, pids, and — for balanced
+        levels — class tables.  N_pad and the class-table width are fleet-
+        wide power-of-two ceilings so the program shape is identical for
+        every membership Procedure-2 churn can produce."""
+        key = (level, tuple(members), capacity, balanced)
+        if key in self._shard_packs:
+            pack = self._shard_packs.pop(key)      # LRU: refresh on hit
+            self._shard_packs[key] = pack
+            return pack
+        if self._shard_len_pad is None:
+            n_max = max(max((jax.tree.leaves(self._member_shard(q))[0].shape[0]
+                             for q in range(len(self.parts))), default=1), 1)
+            self._shard_len_pad = 1 << (n_max - 1).bit_length()
+        N = self._shard_len_pad
+        shards = [self._member_shard(pid) for pid in members]
+
+        def pack_leaf(*xs):
+            first = np.asarray(xs[0])
+            out = np.zeros((capacity, N) + first.shape[1:], first.dtype)
+            for i, x in enumerate(xs):
+                x = np.asarray(x)
+                out[i, :x.shape[0]] = x
+            return jnp.asarray(out)
+
+        pack = {"shards": jax.tree.map(pack_leaf, *shards),
+                "n": jnp.asarray(np.concatenate(
+                    [np.asarray([jax.tree.leaves(s)[0].shape[0]
+                                 for s in shards], np.int32),
+                     np.zeros(capacity - len(members), np.int32)])),
+                "tables": None, "counts": None}
+        if balanced and members:
+            self._class_table(members[0])              # sizes _class_m_pad
+            tables = np.zeros((capacity, self.classes, self._class_m_pad),
+                              np.int32)
+            counts = np.zeros((capacity, self.classes), np.int32)
+            for i, pid in enumerate(members):
+                tables[i], counts[i] = self._class_table(pid)
+            pack["tables"] = jnp.asarray(tables)
+            pack["counts"] = jnp.asarray(counts)
+        if len(self._shard_packs) >= 16:               # bound device memory
+            self._shard_packs.pop(next(iter(self._shard_packs)))
+        self._shard_packs[key] = pack
+        return pack
 
     def _cluster_programs(self, level: int, use_kd: bool, capacity: int,
                           want_stack: bool = False):
@@ -313,6 +453,152 @@ class FedRAC:
         losses = losses[:C]
         return (partial, losses, stack) if return_stack else (partial, losses)
 
+    # ------------------------------------------------------------ dispatch
+    def _dispatch_programs(self, level: int, use_kd: bool, capacity: int,
+                           R: int, balanced: bool, banked: bool,
+                           want_history: bool):
+        """Cached scan-fused block program: R communication rounds in ONE
+        jitted XLA program.  Per scan step it draws every member's batch
+        indices in-program (seeded on the absolute round index), gathers
+        from the device-resident shard pack, runs the vmapped member update,
+        and aggregates on the flat parameter plane — one contraction, no
+        host round-trip, no tree_flatten.  The plane (and bank plane) are
+        donated, so blocks run copy-free.  ``banked`` variants additionally
+        carry the buffered-aggregation bank through the scan: each round
+        merges the previous round's bank (pre-discounted weights) into the
+        FedAvg and re-banks this round's violators at ``bank_gain``."""
+        cfg = self.cfg
+        key = ("dispatch", level, use_kd, capacity, R, balanced, banked,
+               want_history, cfg.lr, cfg.kd_T, cfg.kd_alpha, cfg.seed,
+               cfg.steps_per_round, cfg.local_batch, cfg.donate_plane)
+        if key in self._programs:
+            return self._programs[key]
+        loss_fn = jax.tree_util.Partial(self.family.loss_and_logits, level)
+        kw = dict(kd_T=cfg.kd_T, kd_alpha=cfg.kd_alpha) if use_kd else {}
+        update = make_cluster_update(loss_fn, cfg.lr, **kw)
+        t_loss_fn = jax.tree_util.Partial(self.family.loss_and_logits, 0)
+        spec = self.plane_spec(level)
+        steps, batch, seed = cfg.steps_per_round, cfg.local_batch, cfg.seed
+
+        def one_round(g, bank_p, bank_w, r, shards, n_i, tables,
+                      counts, step_masks, weights, teacher):
+            key = device_sampler.round_key(seed, r)
+            if balanced:
+                idx = device_sampler.balanced_indices(key, steps, batch,
+                                                      tables, counts)
+            else:
+                idx = device_sampler.uniform_indices(key, steps, batch, n_i)
+            batches = jax.vmap(lambda sh, ix: self._batch_from_gathered(
+                jax.tree.map(lambda a: a[ix], sh)))(shards, idx)
+            params = spec.to_params(g)
+            p_stack = jax.tree.map(
+                lambda x: jnp.broadcast_to(x[None], (capacity,) + x.shape),
+                params)
+            teachers = None
+            if use_kd:
+                teachers = jax.vmap(
+                    jax.vmap(lambda b: t_loss_fn(teacher, b)[1]))(batches)
+            new_stack, losses = update(p_stack, batches, step_masks, teachers)
+            new_plane = jax.vmap(spec.to_plane)(new_stack)
+            total = jnp.sum(weights) + (jnp.sum(bank_w) if banked else 0.0)
+            denom = jnp.where(total > 0.0, total, 1.0)
+            agg = aggregation.aggregate_plane(new_plane, weights / denom)
+            if banked:
+                agg = aggregation.merge_buffered_plane(agg, bank_p,
+                                                       bank_w / denom)
+            g_next = jnp.where(total > 0.0, agg, g)
+            return g_next, new_plane, losses
+
+        if banked:
+            def block_fn(plane, bank_plane, bank_w, shards, n_i,
+                         tables, counts, r0, step_masks, weights, bank_gain,
+                         teacher):
+                def body(carry, r):
+                    g, bp, bw = carry
+                    g2, new_plane, losses = one_round(
+                        g, bp, bw, r, shards, n_i, tables, counts,
+                        step_masks, weights, teacher)
+                    ys = (losses, g2) if want_history else (losses,)
+                    return (g2, new_plane, bank_gain), ys
+                carry, ys = jax.lax.scan(
+                    body, (plane, bank_plane, bank_w),
+                    r0 + jnp.arange(R, dtype=jnp.int32))
+                return carry + tuple(ys)
+            donate = (0, 1) if cfg.donate_plane else ()
+        else:
+            def block_fn(plane, shards, n_i, tables, counts, r0,
+                         step_masks, weights, teacher):
+                def body(g, r):
+                    g2, _, losses = one_round(
+                        g, None, None, r, shards, n_i, tables, counts,
+                        step_masks, weights, teacher)
+                    ys = (losses, g2) if want_history else (losses,)
+                    return g2, ys
+                g, ys = jax.lax.scan(body, plane,
+                                     r0 + jnp.arange(R, dtype=jnp.int32))
+                return (g,) + tuple(ys)
+            donate = (0,) if cfg.donate_plane else ()
+        self._programs[key] = jax.jit(block_fn, donate_argnums=donate)
+        return self._programs[key]
+
+    def dispatch_rounds(self, level: int, members: list[int], plane, r0: int,
+                        n_rounds: int, *, teacher=None, step_masks=None,
+                        weights=None, bank=None, want_history: bool = False):
+        """Device-resident block dispatch: run ``n_rounds`` rounds fused.
+
+        ``plane`` is the cluster's (D_pad,) parameter plane — it is DONATED
+        (with ``donate_plane``): the caller's handle is dead after the call
+        and must be replaced by the returned plane.  ``bank`` is the
+        buffered-aggregation carry ``(bank_plane (cap, D_pad), bank_w (cap,),
+        bank_gain (cap,))``: rows merged into the first round at ``bank_w``,
+        each round's member updates re-banked at ``bank_gain`` (zero rows =
+        not banked).  Returns a ``DispatchOut`` with per-round member losses
+        and, with ``want_history``, the per-round planes — the hook that
+        keeps telemetry/history exact under fusion.
+        """
+        cfg = self.cfg
+        C = len(members)
+        cap = self._capacity(C)
+        balanced = cfg.class_balanced and level == 0
+        use_kd = teacher is not None and cfg.use_kd
+        banked = bank is not None
+        pack = self._shard_pack(level, members, cap, balanced)
+        S = cfg.steps_per_round
+        if isinstance(weights, jax.Array) and weights.shape == (cap,):
+            w = weights                   # pre-padded device array: no copy
+        else:
+            if weights is None:
+                weights = [self.assignment.n_eff.get(pid, 1)
+                           for pid in members]
+            w = np.zeros(cap, np.float32)
+            w[:C] = np.asarray(weights, np.float32)
+            w = jnp.asarray(w)
+        if isinstance(step_masks, jax.Array) and step_masks.shape == (cap, S):
+            masks = step_masks            # pre-padded device array: no copy
+        else:
+            masks = np.zeros((cap, S), np.float32)
+            masks[:C] = (np.ones((C, S), np.float32) if step_masks is None
+                         else np.asarray(step_masks, np.float32))
+            masks = jnp.asarray(masks)
+        prog = self._dispatch_programs(level, use_kd, cap, n_rounds,
+                                       balanced, banked, want_history)
+        tail = (pack["shards"], pack["n"], pack["tables"], pack["counts"],
+                jnp.asarray(r0, jnp.int32), masks, w)
+        if banked:
+            bank_plane, bank_w, bank_gain = bank
+            out = prog(plane, bank_plane, bank_w, *tail,
+                       jnp.asarray(bank_gain, jnp.float32), teacher)
+            new_plane, bank_out = out[0], (out[1], out[2])
+            rest = out[3:]
+        else:
+            out = prog(plane, *tail, teacher)
+            new_plane, bank_out = out[0], None
+            rest = out[1:]
+        losses = rest[0][:, :C]
+        history = rest[1] if want_history else None
+        return DispatchOut(plane=new_plane, losses=losses, bank=bank_out,
+                           history=history)
+
     def _train_cluster(self, level: int, members: list[int], n_rounds: int,
                        test, teacher=None, record_every: int = 1):
         cfg = self.cfg
@@ -323,6 +609,10 @@ class FedRAC:
         if not cfg.vmap_clusters:
             return self._train_cluster_loop(level, members, n_rounds, test,
                                             params, teacher, record_every)
+        if cfg.rounds_per_dispatch > 1:
+            return self._train_cluster_dispatch(level, members, n_rounds,
+                                                test, params, teacher,
+                                                record_every)
         history = []
         weights = [self.assignment.n_eff.get(pid, 1) for pid in members]
         for r in range(n_rounds):
@@ -331,6 +621,43 @@ class FedRAC:
             if (r + 1) % record_every == 0:
                 history.append(self.evaluate(level, params, test))
         return params, history
+
+    def _train_cluster_dispatch(self, level: int, members: list[int],
+                                n_rounds: int, test, params, teacher=None,
+                                record_every: int = 1):
+        """Chunk ``n_rounds`` into blocks of ``rounds_per_dispatch`` fused
+        rounds; per-round history stays exact via scan-stacked planes when a
+        record boundary falls inside a block."""
+        cfg = self.cfg
+        R = cfg.rounds_per_dispatch
+        spec = self.plane_spec(level)
+        plane = spec.to_plane(params)
+        # masks/weights are constant across blocks: pad + transfer once
+        cap = self._capacity(len(members))
+        weights = np.zeros(cap, np.float32)
+        weights[:len(members)] = [self.assignment.n_eff.get(pid, 1)
+                                  for pid in members]
+        weights = jnp.asarray(weights)
+        masks = jnp.zeros((cap, cfg.steps_per_round), jnp.float32
+                          ).at[:len(members)].set(1.0)
+        history = []
+        r = 0
+        while r < n_rounds:
+            L = min(R, n_rounds - r)
+            rec = [rr for rr in range(r, r + L)
+                   if (rr + 1) % record_every == 0]
+            want_hist = any(rr != r + L - 1 for rr in rec)
+            out = self.dispatch_rounds(level, members, plane, r, L,
+                                       teacher=teacher, step_masks=masks,
+                                       weights=weights,
+                                       want_history=want_hist)
+            plane = out.plane
+            for rr in rec:
+                p = (spec.to_params(out.history[rr - r]) if want_hist
+                     else spec.to_params(plane))
+                history.append(self.evaluate(level, p, test))
+            r += L
+        return self.params_of(level, plane), history
 
     def _train_cluster_loop(self, level: int, members: list[int],
                             n_rounds: int, test, params, teacher=None,

@@ -1,0 +1,75 @@
+"""Seeded jax.random batch-index draws for the device-resident dispatch path.
+
+The scan-fused multi-round pipeline draws every member's batch indices
+INSIDE the program: one round key folded from (seed, absolute round index),
+one batched draw covering the whole padded member axis.  Because the stream
+depends only on the absolute round index (never on block boundaries or the
+dispatch width R), any two widths are numerically interchangeable — R is an
+execution knob, not a semantic one.  The legacy one-round-per-dispatch path
+keeps its historical host-side numpy stream; the two streams are
+statistically equivalent but distinct.
+
+``balanced_indices`` realizes §IV-C class-balanced resampling as a fixed-
+shape draw (round-robin class quotas over each member's present classes,
+then a uniform draw within the class) so a whole cluster of members with
+heterogeneous class support runs under one program.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def round_key(seed: int, r):
+    """PRNG key for one communication round: folds the absolute round index
+    only, so draws are invariant to dispatch-block boundaries."""
+    return jax.random.fold_in(jax.random.PRNGKey(seed), r)
+
+
+def uniform_indices(key, steps: int, batch: int, n) -> jnp.ndarray:
+    """(C, steps, batch) int32 draws, member i uniform over [0, n[i])."""
+    n = jnp.maximum(jnp.asarray(n, jnp.int32), 1)
+    return jax.random.randint(key, (n.shape[0], steps, batch), 0,
+                              n[:, None, None])
+
+
+def balanced_indices(key, steps: int, batch: int, tables, counts) -> jnp.ndarray:
+    """Class-balanced (C, steps, batch) draws from per-member class tables.
+
+    ``tables``: (C, classes, m) int32 — per member and class, the member's
+    sample indices (rows padded arbitrarily past ``counts``); ``counts``:
+    (C, classes) int32.  Batch slots are assigned round-robin over each
+    member's PRESENT classes (equal ⌈batch/n_present⌉ quotas — the numpy
+    resampling scheme; slot order is irrelevant to an averaged loss, so no
+    shuffle), then each slot draws uniformly within its class.
+    """
+    counts = jnp.asarray(counts, jnp.int32)
+    C, classes = counts.shape
+    present = counts > 0
+    n_present = jnp.maximum(jnp.sum(present.astype(jnp.int32), -1), 1)  # (C,)
+    # per member: present classes first, in ascending class order
+    order = jnp.argsort(jnp.where(present, 0, 1) * classes
+                        + jnp.arange(classes)[None, :], axis=-1)
+    slot_cls = jnp.arange(batch)[None, :] % n_present[:, None]      # (C, B)
+    cls = jnp.take_along_axis(order, slot_cls, axis=1)              # (C, B)
+    cnt = jnp.maximum(jnp.take_along_axis(counts, cls, axis=1), 1)  # (C, B)
+    inst = jax.random.randint(key, (C, steps, batch), 0, cnt[:, None, :])
+    return jax.vmap(lambda t, c, i: t[c[None, :], i])(
+        jnp.asarray(tables), cls, inst)
+
+
+def build_class_table(y: np.ndarray, classes: int, m: int | None = None):
+    """Host-side: (classes, m) index table + (classes,) counts for one shard.
+    Rows are padded by repeating the class's indices (padding is never drawn:
+    the instance draw is bounded by counts)."""
+    y = np.asarray(y)
+    cols = [np.where(y == c)[0].astype(np.int32) for c in range(classes)]
+    counts = np.array([len(c) for c in cols], np.int32)
+    m = int(m if m is not None else max(1, counts.max(initial=1)))
+    table = np.zeros((classes, m), np.int32)
+    for c, col in enumerate(cols):
+        if len(col):
+            reps = -(-m // len(col))
+            table[c] = np.tile(col, reps)[:m]
+    return table, counts

@@ -13,6 +13,25 @@ def _interpret_default() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def aggregate_plane(plane, weights, *, block_d: int = 2048,
+                    interpret: bool | None = None):
+    """Weighted aggregate straight on a flat parameter plane (C, D) → (D,).
+
+    The plane path of the dispatch pipeline: D is already padded to a
+    multiple of ``core.plane.PLANE_ALIGN`` at spec time, so — unlike
+    ``aggregate_tree`` — there is no per-call flatten/concatenate/pad; the
+    kernel grid tiles D at the largest power-of-two block ≤ ``block_d``
+    that divides it."""
+    interpret = _interpret_default() if interpret is None else interpret
+    D = plane.shape[1]
+    bd = min(block_d, D)
+    while D % bd:
+        bd //= 2
+    return weighted_aggregate(plane.astype(jnp.float32),
+                              weights.astype(jnp.float32), block_d=bd,
+                              interpret=interpret)
+
+
 def aggregate_tree(params_stack, weights, *, block_d: int = 2048,
                    interpret: bool | None = None):
     """params_stack: pytree with leading client axis C → aggregated pytree."""

@@ -45,7 +45,8 @@ def build(args):
                        kappa=args.kappa, pad_clusters=not args.no_pad,
                        aggregation=("buffered" if args.mar_policy == "buffer"
                                     else "sync"),
-                       staleness_discount=args.staleness_discount)
+                       staleness_discount=args.staleness_discount,
+                       rounds_per_dispatch=args.rounds_per_dispatch)
     eng = srv.FedRAC(parts, client_data, fam, cfg, classes=classes).setup()
     testb = {"x": jnp.asarray(test.x), "y": jnp.asarray(test.y)}
     return eng, testb
@@ -87,6 +88,11 @@ def main(argv=None):
     ap.add_argument("--no-pad", action="store_true",
                     help="disable compile-stable capacity padding "
                          "(retraces on every cluster-cardinality change)")
+    ap.add_argument("--rounds-per-dispatch", type=int, default=1,
+                    help=">1 runs the device-resident pipeline: up to that "
+                         "many rounds fused per cluster into one scan "
+                         "program between events (in-program sampling, "
+                         "flat-plane aggregation, donated buffers)")
     ap.add_argument("--schedule", default="parallel",
                     choices=["parallel", "sequential"])
     ap.add_argument("--dropout-rate", type=float, default=0.15)

@@ -24,6 +24,12 @@ class EventQueue:
         heapq.heappush(self._heap, (float(time), self._seq, event))
         self._seq += 1
 
+    def next_time(self) -> float | None:
+        """Peek the earliest pending event time (None when empty) — the
+        dispatch-mode engine caps fused blocks so no event can land inside
+        one."""
+        return self._heap[0][0] if self._heap else None
+
     def pop_due(self, now: float) -> list:
         """Pop every (time, event) with time <= now, in (time, seq) order."""
         due = []

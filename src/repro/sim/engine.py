@@ -25,7 +25,8 @@ cluster per round — so the simulator exercises exactly the fast path.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+import math
+from dataclasses import dataclass, replace
 
 import jax
 import jax.numpy as jnp
@@ -214,6 +215,8 @@ class HeterogeneitySim:
 
     # ------------------------------------------------------------ round loop
     def run(self, test) -> SimReport:
+        if self.fl.cfg.rounds_per_dispatch > 1:
+            return self._run_dispatch(test)
         fl, cfg = self.fl, self.cfg
         report = SimReport(scenario=self.trace.name,
                            mar_policy=cfg.mar_policy, schedule=cfg.schedule)
@@ -300,11 +303,183 @@ class HeterogeneitySim:
         self.params = params
         return report
 
-    def _anchored_merge(self, cur, entries: list, r: int, lvl: int):
-        """Flush banked entries into ``cur`` with no live contributors to
-        normalize against: the current aggregate anchors the convex
-        combination at the cluster's live n_eff weight, so discounted stale
-        updates nudge — never replace — the model."""
+    # ------------------------------------------------------------ dispatch
+    def _block_len(self, r: int) -> int:
+        """Longest fused block starting at round r: capped by the dispatch
+        width, the horizon, the next pending event (device/cluster state
+        must be frozen across a block), and the next eval boundary
+        (evaluation happens at block ends)."""
+        cfg, fl = self.cfg, self.fl
+        L = min(fl.cfg.rounds_per_dispatch, cfg.rounds - r)
+        nt = self.queue.next_time()
+        if nt is not None:
+            L = min(L, max(1, math.ceil(nt) - r))
+        if cfg.eval_every:
+            e = cfg.eval_every
+            L = min(L, (e - ((r + 1) % e)) % e + 1)
+        return max(1, L)
+
+    def _run_dispatch(self, test) -> SimReport:
+        """Device-resident block mode (``FLConfig(rounds_per_dispatch>1)``):
+        between events, up to R communication rounds per cluster run as ONE
+        scan-fused program over the flat parameter plane, with the buffered
+        schedule's bank riding the scan carry.  MAR decisions are frozen
+        while no event fires, so per-round telemetry within a block is equal
+        by construction and per-round losses come back scan-stacked — the
+        records are as exact as the legacy path's.  KD teachers refresh at
+        block granularity (parallel schedule: the master plane at block
+        start; for a length-1 block this IS the legacy per-round
+        master_before)."""
+        fl, cfg = self.fl, self.cfg
+        report = SimReport(scenario=self.trace.name,
+                           mar_policy=cfg.mar_policy, schedule=cfg.schedule)
+        buffered = fl.cfg.aggregation == "buffered"
+        planes = {lvl: fl.plane_of(lvl, fl.family.init(
+            jax.random.PRNGKey(fl.cfg.seed + lvl), lvl))
+            for lvl in range(fl.m)}
+        r = 0
+        while r < cfg.rounds:
+            ev_log = self._apply_events(r)
+            L = self._block_len(r)
+            decisions = {}
+            for lvl in range(fl.m):
+                members = list(fl.assignment.members.get(lvl, []))
+                if not members:
+                    continue
+                stats, masks, weights, t_cluster = self._mar_decisions(
+                    lvl, members)
+                ripe = [b for b in self._bank[lvl] if b["round"] < r]
+                live = float(weights.sum()) > 0.0
+                if not live and (ripe or stats.banked):
+                    # anchored flush / bank-only edge round: keep it
+                    # un-fused so the host-side anchor math applies
+                    L = 1
+                decisions[lvl] = (members, stats, masks, weights,
+                                  t_cluster, ripe, live)
+            teacher = None
+            if fl.m > 1 and cfg.schedule == "parallel":
+                teacher = fl.params_of(0, planes[0])   # block-start master
+            rows = [[] for _ in range(L)]
+            times = []
+            for lvl in range(fl.m):
+                if lvl not in decisions:
+                    for j in range(L):
+                        rows[j].append(ClusterRoundStats(level=lvl, time=0.0))
+                    times.append(0.0)
+                    continue
+                members, stats, masks, weights, t_cluster, ripe, live = \
+                    decisions[lvl]
+                losses = None
+                if live or stats.banked or ripe:
+                    t = None
+                    if lvl > 0:
+                        t = (teacher if cfg.schedule == "parallel"
+                             else fl.params_of(0, planes[0]))
+                    if ripe:
+                        self._bank[lvl] = [b for b in self._bank[lvl]
+                                           if b["round"] >= r]
+                        if not live:
+                            planes[lvl] = self._anchored_merge_plane(
+                                planes[lvl], ripe, r, lvl)
+                    if live or stats.banked:
+                        bank = (self._bank_carry(lvl, members,
+                                                 ripe if live else [],
+                                                 stats.banked, r)
+                                if buffered else None)
+                        out = fl.dispatch_rounds(
+                            lvl, members, planes[lvl], r, L, teacher=t,
+                            step_masks=masks, weights=weights, bank=bank)
+                        planes[lvl] = out.plane
+                        losses = np.asarray(out.losses)
+                        if stats.banked:
+                            bank_rows = out.bank[0]
+                            for pid in stats.banked:
+                                i = members.index(pid)
+                                self._bank[lvl].append({
+                                    "pid": pid, "round": r + L - 1,
+                                    "n_eff": fl.assignment.n_eff.get(pid, 1),
+                                    "plane": bank_rows[i]})
+                contributing = weights > 0
+                for j in range(L):
+                    s = self._clone_stats(stats)
+                    s.flushed = (len(ripe) if j == 0
+                                 else len(stats.banked) if live else 0)
+                    if losses is not None and contributing.any():
+                        s.mean_loss = float(np.mean(losses[j][contributing]))
+                    rows[j].append(s)
+                if (cfg.eval_every and (r + L) % cfg.eval_every == 0):
+                    rows[L - 1][-1].acc = fl.evaluate(
+                        lvl, fl.params_of(lvl, planes[lvl]), test)
+                times.append(t_cluster)
+            duration = (max(times, default=0.0) if cfg.schedule == "parallel"
+                        else sum(times))
+            for j in range(L):
+                report.add(RoundRecord(round=r + j, t_start=self.clock.now,
+                                       duration=duration, clusters=rows[j],
+                                       events=ev_log if j == 0 else []))
+                self.clock.advance(duration)
+            r += L
+        self._terminal_flush(planes, cfg.rounds, report,
+                             merge=self._anchored_merge_plane)
+        for lvl in range(fl.m):
+            if not fl.assignment.members.get(lvl):
+                continue
+            last = report.rows[-1].clusters[lvl].acc if report.rows else None
+            report.final_acc[lvl] = (
+                last if last is not None
+                else fl.evaluate(lvl, fl.params_of(lvl, planes[lvl]), test))
+        self.params = {lvl: fl.params_of(lvl, planes[lvl])
+                       for lvl in range(fl.m)}
+        return report
+
+    @staticmethod
+    def _clone_stats(s: ClusterRoundStats) -> ClusterRoundStats:
+        """Fresh per-round copy of a block's frozen MAR decision stats."""
+        return replace(s, active=list(s.active), dropped=list(s.dropped),
+                       offline=list(s.offline), masked=dict(s.masked),
+                       violations=list(s.violations), banked=list(s.banked),
+                       flushed=0, mean_loss=float("nan"), acc=None)
+
+    def _bank_carry(self, lvl: int, members: list[int], ripe: list,
+                    banked_pids: list, r: int):
+        """Build the scan-carry bank for one block: entering rows = the ripe
+        host entries at their staleness-discounted weights; ``bank_gain`` =
+        the weight each round's re-banked violator rows carry into the NEXT
+        round's aggregate (n_eff · discount, age 1 inside a block)."""
+        fl = self.fl
+        cap = fl._capacity(len(members))
+        dp = fl.plane_spec(lvl).d_pad
+        us = aggregation.staleness_weights(
+            [b["n_eff"] for b in ripe], [r - b["round"] for b in ripe],
+            fl.cfg.staleness_discount)
+        rows = [b["plane"] for b in ripe]
+        if len(rows) > cap:
+            # membership shrank below the banked backlog (event between
+            # blocks): compress everything into ONE weighted-average row —
+            # Σu and Σu·p are preserved exactly, so the round-0 merge is
+            # unchanged
+            u = jnp.asarray(us, jnp.float32)
+            rows = [aggregation.aggregate_plane(jnp.stack(rows),
+                                                u / float(u.sum()))]
+            us = [float(u.sum())]
+        bank_plane = jnp.zeros((cap, dp), jnp.float32)
+        bank_w = np.zeros(cap, np.float32)
+        if rows:
+            bank_plane = jnp.concatenate(
+                [jnp.stack(rows),
+                 jnp.zeros((cap - len(rows), dp), jnp.float32)])
+            bank_w[:len(rows)] = us
+        bank_gain = np.zeros(cap, np.float32)
+        for pid in banked_pids:
+            bank_gain[members.index(pid)] = (
+                fl.assignment.n_eff.get(pid, 1) * fl.cfg.staleness_discount)
+        return (bank_plane, jnp.asarray(bank_w), jnp.asarray(bank_gain))
+
+    def _anchor_weights(self, entries: list, r: int, lvl: int):
+        """Shared anchor math for flushes with no live contributors: the
+        cluster's full live n_eff weight W anchors the convex combination,
+        so discounted stale updates nudge — never replace — the model.
+        Returns (anchor weight, normalized per-entry weights)."""
         fl = self.fl
         W = float(sum(fl.assignment.n_eff.get(pid, 1)
                       for pid in fl.assignment.members.get(lvl, [])))
@@ -313,20 +488,34 @@ class HeterogeneitySim:
             [r - b["round"] for b in entries],
             fl.cfg.staleness_discount)
         total = W + sum(us)
-        anchored = jax.tree.map(lambda x: (W / total) * x, cur)
-        return aggregation.merge_buffered(
-            anchored, [b["params"] for b in entries],
-            [u / total for u in us])
+        return W / total, [u / total for u in us]
 
-    def _terminal_flush(self, params: dict, rounds: int, report) -> None:
+    def _anchored_merge(self, cur, entries: list, r: int, lvl: int):
+        """Anchored flush over pytree params (legacy engine)."""
+        wa, us = self._anchor_weights(entries, r, lvl)
+        anchored = jax.tree.map(lambda x: wa * x, cur)
+        return aggregation.merge_buffered(
+            anchored, [b["params"] for b in entries], us)
+
+    def _anchored_merge_plane(self, cur, entries: list, r: int, lvl: int):
+        """Anchored flush over the flat parameter plane (dispatch engine)."""
+        wa, us = self._anchor_weights(entries, r, lvl)
+        return wa * cur + aggregation.aggregate_plane(
+            jnp.stack([b["plane"] for b in entries]),
+            jnp.asarray(us, jnp.float32))
+
+    def _terminal_flush(self, params: dict, rounds: int, report,
+                        merge=None) -> None:
         """Merge updates still sitting in the bank when the sim ends (banked
         in the last round, or in a cluster that never ran again) — so 'no
-        work is thrown away' holds for the last round too."""
+        work is thrown away' holds for the last round too.  ``merge``
+        selects the representation (defaults to the pytree path; the
+        dispatch engine passes ``_anchored_merge_plane``)."""
+        merge = merge or self._anchored_merge
         for lvl, entries in self._bank.items():
             if not entries:
                 continue
-            params[lvl] = self._anchored_merge(params[lvl], entries,
-                                               rounds, lvl)
+            params[lvl] = merge(params[lvl], entries, rounds, lvl)
             if report.rows:
                 report.rows[-1].clusters[lvl].flushed += len(entries)
             self._bank[lvl] = []

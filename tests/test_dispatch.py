@@ -1,0 +1,317 @@
+"""Device-resident round pipeline (FLConfig.rounds_per_dispatch): R-block
+numerical invariance, donation semantics, compile stability under
+Procedure-2 churn, flat-plane aggregation, and the padded-label dtype
+regression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import aggregation, cost_model
+from repro.core import server as srv
+from repro.core.families import cnn_family, mlp_family
+from repro.core.resources import participants_from_matrix
+from repro.data.partition import dirichlet_partition
+from repro.data.synthetic import make_classification, train_test_split
+from repro.sim import (HeterogeneitySim, ResourceDrift, SimConfig,
+                       make_trace, sample_profiles)
+
+FAM = cnn_family(classes=10, in_channels=1, base_width=0.125)
+
+
+def _setup(parts_V=None, n=8, samples=400, seed=0, n_data=None, fam=FAM,
+           **cfg_kw):
+    ds = make_classification("synth-mnist", samples, seed=seed)
+    train, test = train_test_split(ds)
+    idx = dirichlet_partition(train.y, n, alpha=2.0, seed=seed)
+    V = parts_V if parts_V is not None else sample_profiles(n, seed=seed)
+    parts = participants_from_matrix(
+        V, n_data=n_data if n_data is not None else [len(p) for p in idx])
+    cd = [{"x": train.x[p], "y": train.y[p]} for p in idx]
+    cfg = srv.FLConfig(steps_per_round=3, lr=0.08, seed=seed,
+                       local_batch=8, **cfg_kw)
+    eng = srv.FedRAC(parts, cd, fam, cfg, classes=10).setup()
+    testb = {"x": jnp.asarray(test.x), "y": jnp.asarray(test.y)}
+    return eng, testb
+
+
+def _allclose_trees(a, b, rtol=2e-4, atol=1e-5):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=rtol, atol=atol)
+
+
+# ------------------------------------------------------------ R-invariance
+def test_dispatch_r4_matches_single_round_blocks():
+    """The fast-lane equivalence check: rounds_per_dispatch=4 reproduces the
+    same training as single-round dispatch blocks (batch streams depend
+    only on the absolute round index), for the balanced master AND a KD
+    slave cluster — params and recorded history both match."""
+    out = {}
+    for R in (1, 4):
+        eng, testb = _setup(n=6, compact_to=2, rounds_per_dispatch=R)
+        m0 = list(eng.assignment.members[0])
+        p0 = eng.family.init(jax.random.PRNGKey(0), 0)
+        p, hist = eng._train_cluster_dispatch(0, m0, 4, testb, p0,
+                                              record_every=2)
+        teach = eng.family.init(jax.random.PRNGKey(42), 0)
+        m1 = list(eng.assignment.members[1])
+        p1 = eng.family.init(jax.random.PRNGKey(1), 1)
+        pk, _ = eng._train_cluster_dispatch(1, m1, 4, testb, p1,
+                                            teacher=teach,
+                                            record_every=10 ** 9)
+        out[R] = (p, hist, pk)
+    _allclose_trees(out[1][0], out[4][0])
+    _allclose_trees(out[1][2], out[4][2])
+    assert out[1][1] == out[4][1]
+
+
+def test_dispatch_intra_block_history_is_exact():
+    """A record boundary strictly inside a block is served from the
+    scan-stacked per-round planes — identical history to unfused blocks."""
+    hists = {}
+    for R in (1, 8):
+        eng, testb = _setup(n=6, compact_to=1, mar=1e9,
+                            rounds_per_dispatch=R)
+        m = list(eng.assignment.members[0])
+        p0 = eng.family.init(jax.random.PRNGKey(0), 0)
+        _, hists[R] = eng._train_cluster_dispatch(0, m, 6, testb, p0,
+                                                  record_every=1)
+    assert len(hists[1]) == len(hists[8]) == 6
+    assert hists[1] == hists[8]
+
+
+@pytest.mark.slow
+def test_dispatch_full_train_matches_r1_blocks():
+    """End-to-end FedRAC.train (master FedAvg + slave KD) is invariant to
+    the dispatch width."""
+    results = {}
+    for R in (1, 8):
+        eng, testb = _setup(n=8, compact_to=2, rounds_per_dispatch=R,
+                            rounds=6)
+        # force the dispatch machinery for BOTH widths (R=1 exercises
+        # single-round blocks of the same pipeline)
+        eng.cfg.rounds_per_dispatch = R
+        ref = srv.FedRAC._train_cluster_dispatch
+        orig = srv.FedRAC._train_cluster
+
+        def routed(self, level, members, n_rounds, test, teacher=None,
+                   record_every=1):
+            params = self.family.init(
+                jax.random.PRNGKey(self.cfg.seed + level), level)
+            if not members:
+                return params, []
+            return ref(self, level, members, n_rounds, test, params,
+                       teacher, record_every)
+
+        srv.FedRAC._train_cluster = routed
+        try:
+            res = eng.train(testb)
+        finally:
+            srv.FedRAC._train_cluster = orig
+        results[R] = eng
+    for lvl, pv in results[8].cluster_params.items():
+        _allclose_trees(pv, results[1].cluster_params[lvl])
+
+
+# ------------------------------------------------------------ simulator
+def _telemetry(rep):
+    return [(r.round, round(r.duration, 6),
+             [(c.level, sorted(c.active), sorted(c.dropped),
+               sorted(c.offline), sorted(c.masked), sorted(c.violations),
+               sorted(c.banked), c.flushed, round(c.bytes, 1))
+              for c in r.clusters], r.events) for r in rep.rows]
+
+
+def test_sim_dispatch_telemetry_matches_legacy():
+    """Per-round MAR telemetry (active/dropped/offline/masked/violations/
+    banked/flushed/bytes/durations/events) is identical between the legacy
+    per-round engine and the fused dispatch engine on an event-heavy
+    trace — fusion never lands a block across an event."""
+    tel = {}
+    for R in (1, 4):
+        eng, testb = _setup(n=8, compact_to=2, rounds_per_dispatch=R)
+        sim = HeterogeneitySim(eng, make_trace("mixed", 8, 5, seed=5),
+                               SimConfig(rounds=5))
+        tel[R] = _telemetry(sim.run(testb))
+    assert tel[1] == tel[4]
+
+
+def _straggler_setup(**kw):
+    V = np.array([[3.0, 30.0, 8.0]] * 6
+                 + [[0.75, 30.0, 8.0], [1e-4, 30.0, 8.0]])
+    eng, testb = _setup(parts_V=V, n=8, compact_to=1, mar=1e9,
+                        n_data=[50] * 8, **kw)
+    spec = eng.specs[0]
+    t = {p: cost_model.round_time(eng.parts[p], spec.flops_per_sample,
+                                  spec.model_bytes, spec.E,
+                                  eng.assignment.n_eff[p])
+         for p in range(8)}
+    spec.mar = 0.6 * t[6]
+    return eng, testb
+
+
+@pytest.mark.slow
+def test_sim_dispatch_buffered_r_invariance():
+    """Buffered async aggregation under fusion: the bank rides the scan
+    carry, and final params + banked/flushed accounting are invariant to
+    the dispatch width."""
+    outs = {}
+    for R in (2, 8):
+        eng, testb = _straggler_setup(aggregation="buffered",
+                                      rounds_per_dispatch=R)
+        sim = HeterogeneitySim(eng, make_trace("stable", 8, 6),
+                               SimConfig(rounds=6, mar_policy="buffer"))
+        rep = sim.run(testb)
+        outs[R] = (_telemetry(rep), sim.params[0], rep.summary())
+    assert outs[2][0] == outs[8][0]
+    _allclose_trees(outs[2][1], outs[8][1])
+    s = outs[8][2]
+    assert s["banked_total"] == s["flushed_total"] > 0
+    assert s["participation_rate"] == 1.0
+
+
+def test_bank_carry_compresses_overflow():
+    """Banked backlog larger than a (shrunk) cluster capacity must not
+    crash the dispatch engine: overflow rows compress into one
+    weighted-average row preserving Σu and Σu·p exactly."""
+    eng, testb = _setup(n=6, compact_to=1, mar=1e9, fam=mlp_family(),
+                        aggregation="buffered", rounds_per_dispatch=4,
+                        pad_clusters=False)
+    sim = HeterogeneitySim(eng, make_trace("stable", 6, 2),
+                           SimConfig(rounds=2, mar_policy="buffer"))
+    members = list(eng.assignment.members[0])[:2]     # capacity 2
+    cap = eng._capacity(len(members))
+    dp = eng.plane_spec(0).d_pad
+    keys = jax.random.split(jax.random.PRNGKey(0), 5)
+    ripe = [{"pid": i, "round": 0, "n_eff": i + 1,
+             "plane": eng.plane_of(0, eng.family.init(k, 0))}
+            for i, k in enumerate(keys)]              # 5 entries > cap 2
+    bank_plane, bank_w, gain = sim._bank_carry(0, members, ripe, [], r=2)
+    assert bank_plane.shape == (cap, dp) and bank_w.shape == (cap,)
+    us = aggregation.staleness_weights([b["n_eff"] for b in ripe],
+                                       [2] * 5, eng.cfg.staleness_discount)
+    np.testing.assert_allclose(float(bank_w.sum()), sum(us), rtol=1e-6)
+    want = sum(u * np.asarray(b["plane"]) for u, b in zip(us, ripe))
+    got = np.asarray(bank_w) @ np.asarray(bank_plane)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+# ------------------------------------------------------------ donation
+def test_donated_plane_is_consumed():
+    """With donate_plane the input plane buffer is dead after a dispatch —
+    reusing it must raise (no silent aliasing of stale buffers); with
+    donation off it stays valid and round-trips."""
+    eng, _ = _setup(n=6, compact_to=1, mar=1e9, rounds_per_dispatch=4)
+    m = list(eng.assignment.members[0])
+    params = eng.family.init(jax.random.PRNGKey(0), 0)
+    plane = eng.plane_of(0, params)
+    out = eng.dispatch_rounds(0, m, plane, 0, 4)
+    assert plane.is_deleted()
+    with pytest.raises(RuntimeError, match="deleted"):
+        np.asarray(plane)
+    assert not out.plane.is_deleted()
+
+    eng2, _ = _setup(n=6, compact_to=1, mar=1e9, rounds_per_dispatch=4,
+                     donate_plane=False)
+    m2 = list(eng2.assignment.members[0])
+    plane2 = eng2.plane_of(0, params)
+    out2 = eng2.dispatch_rounds(0, m2, plane2, 0, 4)
+    assert not plane2.is_deleted()
+    _allclose_trees(eng2.params_of(0, plane2), params, rtol=0, atol=0)
+    # the two variants still compute the same result
+    np.testing.assert_allclose(np.asarray(out.plane), np.asarray(out2.plane),
+                               rtol=2e-4, atol=1e-5)
+
+
+# ------------------------------------------------------------ compile stats
+def test_dispatch_compile_stable_under_churn():
+    """Procedure-2 churn (≥5 drift migrations) in dispatch mode reuses the
+    per-(level, capacity, R) block programs: every jitted program compiles
+    exactly once."""
+    eng, testb = _setup(n=10, samples=500, compact_to=2,
+                        rounds_per_dispatch=4)
+    trace = make_trace("stable", 10, 8)
+    pid = eng.assignment.members[0][0]
+    for r in range(7):
+        mult = 0.02 if r % 2 == 0 else 50.0
+        trace.events.append((float(r), ResourceDrift(
+            pid, s_mult=mult, r_mult=mult, a_mult=1.0)))
+    sim = HeterogeneitySim(eng, trace, SimConfig(rounds=8))
+    rep = sim.run(testb)
+    migrations = sum(ev.count("→") for r in rep.rows for ev in r.events)
+    assert migrations >= 5, f"only {migrations} migrations in trace"
+    stats = eng.compile_stats()
+    dispatch_keys = [k for k in stats if k[0] == "dispatch"]
+    assert dispatch_keys, "no dispatch programs were built"
+    retraced = {k: v for k, v in stats.items() if v != 1}
+    assert not retraced, f"programs retraced: {retraced}"
+    # one program per (level, capacity, R) triple
+    triples = [(k[1], k[3], k[4]) for k in dispatch_keys]
+    assert len(triples) == len(set(triples))
+
+
+# ------------------------------------------------------------ dtype hazard
+def test_padded_batches_and_shards_keep_label_dtype():
+    """Regression: integer-label pytrees keep their dtype through capacity
+    zero-padding (legacy ``_stacked_batches``) and through the
+    device-resident shard pack + in-program gather."""
+    eng, _ = _setup(n=6, compact_to=1, mar=1e9, rounds_per_dispatch=4)
+    m = list(eng.assignment.members[0])
+    assert eng.client_data[m[0]]["y"].dtype == np.int32
+    cap = len(m) + 2
+    batches = eng._stacked_batches(m, 0, 0, cap)
+    assert batches["y"].dtype == jnp.int32
+    assert batches["x"].dtype == jnp.float32
+    assert batches["y"].shape[0] == cap
+    np.testing.assert_array_equal(np.asarray(batches["y"][len(m):]), 0)
+    pack = eng._shard_pack(0, m, cap, balanced=False)
+    assert pack["shards"]["y"].dtype == jnp.int32
+    assert pack["n"].dtype == jnp.int32
+    # the fused program consumes them end to end without dtype surgery
+    plane = eng.plane_of(0, eng.family.init(jax.random.PRNGKey(0), 0))
+    out = eng.dispatch_rounds(0, m, plane, 0, 2)
+    assert np.isfinite(np.asarray(out.losses)).all()
+
+
+# ------------------------------------------------------------ plane ops
+def test_plane_roundtrip_and_alignment():
+    from repro.core.plane import PLANE_ALIGN
+    eng, _ = _setup(n=6, compact_to=1, mar=1e9)
+    params = eng.family.init(jax.random.PRNGKey(3), 0)
+    spec = eng.plane_spec(0)
+    assert spec.d_pad % PLANE_ALIGN == 0 and spec.d_pad >= spec.d
+    plane = eng.plane_of(0, params)
+    assert plane.shape == (spec.d_pad,) and plane.dtype == jnp.float32
+    back = eng.params_of(0, plane)
+    _allclose_trees(back, params, rtol=0, atol=0)
+
+
+def test_aggregate_plane_matches_tree_and_kernel():
+    """Flat-plane aggregation == pytree FedAvg == the Pallas fedagg kernel
+    run directly on the plane (interpret mode)."""
+    from repro.kernels.fedagg.ops import aggregate_plane as kernel_plane
+    eng, _ = _setup(n=6, compact_to=1, mar=1e9, fam=mlp_family())
+    spec = eng.plane_spec(0)
+    C = 5
+    keys = jax.random.split(jax.random.PRNGKey(0), C)
+    stacks = [eng.family.init(k, 0) for k in keys]
+    stack = jax.tree.map(lambda *xs: jnp.stack(xs), *stacks)
+    w = aggregation.normalized_weights([3, 1, 4, 1, 5])
+    want = aggregation.aggregate(stack, w)
+    plane = jnp.stack([eng.plane_of(0, p) for p in stacks])
+    got = eng.params_of(0, aggregation.aggregate_plane(plane, w))
+    _allclose_trees(got, want, rtol=1e-6, atol=1e-6)
+    got_k = eng.params_of(0, kernel_plane(plane, w, interpret=True))
+    _allclose_trees(got_k, want, rtol=1e-6, atol=1e-6)
+    # delta + buffered merge on the plane
+    g = plane[0]
+    delta = aggregation.fedavg_delta_plane(g, plane, w)
+    np.testing.assert_allclose(
+        np.asarray(delta),
+        np.asarray(aggregation.aggregate_plane(plane, w) - g), rtol=1e-6)
+    merged = aggregation.merge_buffered_plane(
+        aggregation.aggregate_plane(plane, w * 0.5), plane, w * 0.5)
+    np.testing.assert_allclose(np.asarray(merged),
+                               np.asarray(aggregation.aggregate_plane(plane, w)),
+                               rtol=1e-5, atol=1e-6)

@@ -38,14 +38,26 @@ into one lax.scan program with in-program batch sampling and flat-plane
 aggregation.  Reports each path's median-of-``--reps`` client-steps/s
 (interleaved reps, medians rather than best-of: container load is the
 dominant noise source).  Target on this container's CPU: ≥1.5× at R=8.
+
+``--mode mesh`` re-executes this file under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` and times the
+plane-SHARDED fused dispatch (member axis split over an 8-way ``data``
+mesh; per-round aggregation = local fedagg contraction + one psum) against
+the legacy one-round path and the unsharded fused path on the MLP family.
+Headline: sharded-R=8 vs legacy ≥1.2× on this container (the 8 virtual
+host devices share 2 physical cores, so the sharding itself is ~neutral
+here; the row pins the scaling machinery, real meshes supply the compute).
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import pathlib
 import statistics
+import subprocess
 import sys
+import tempfile
 import time
 
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
@@ -161,10 +173,11 @@ def build_micro_lm(n_members: int, steps: int, seed: int, R: int,
 
 
 def build_micro_mlp(n_members: int, steps: int, seed: int, R: int,
-                    batch: int = 8):
+                    batch: int = 8, mesh=None):
     """The headline dispatch-bound cluster: a two-layer MLP whose per-round
     XLA program is a handful of ops, so the legacy path's per-round host
-    work dominates."""
+    work dominates.  ``mesh`` shards the member axis of the dispatch
+    program (``--mode mesh``)."""
     ds = make_classification("synth-mnist", 60 * n_members, seed=seed)
     train, _ = train_test_split(ds)
     idx = dirichlet_partition(train.y, n_members, alpha=10.0, seed=seed)
@@ -175,7 +188,8 @@ def build_micro_mlp(n_members: int, steps: int, seed: int, R: int,
                        compact_to=1, mar=1e9, pad_clusters=False,
                        local_batch=batch, class_balanced=False,
                        rounds_per_dispatch=R)
-    return srv.FedRAC(parts, cd, mlp_family(), cfg, classes=10).setup()
+    return srv.FedRAC(parts, cd, mlp_family(), cfg, classes=10,
+                      mesh=mesh).setup()
 
 
 def _time_dispatch_pair(build, n: int, steps: int, seed: int, R: int,
@@ -213,6 +227,76 @@ def run_dispatch_bench(n: int = 12, R: int = 8, reps: int = 4,
         out["lm"] = _time_dispatch_pair(build_micro_lm, n, 1, seed, R,
                                         rounds=32, reps=reps)
     return out
+
+
+# ------------------------------------------------------------ mesh bench
+def run_mesh_bench(n: int = 24, R: int = 8, reps: int = 3, seed: int = 0,
+                   mesh_n: int = 8, rounds: int = 64, steps: int = 2) -> dict:
+    """Plane-sharded multi-device dispatch on the dispatch-bound MLP family:
+    the member axis of the fused R-round program splits over a ``mesh_n``-way
+    ``data`` mesh (per-round aggregation = local fedagg contraction + one
+    psum).  Reports median client-steps/s for the legacy one-round path, the
+    unsharded fused path, and the mesh-sharded fused path — the headline is
+    mesh vs legacy (≥1.2× on this container's 2-core CPU, where 8 virtual
+    devices add no compute; on real multi-host meshes the sharding itself
+    scales the fleet).  Requires ≥ ``mesh_n`` devices: run via ``--mode
+    mesh`` (subprocess sets XLA_FLAGS) or force host devices yourself."""
+    if jax.device_count() < mesh_n:
+        raise RuntimeError(
+            f"mesh bench needs ≥{mesh_n} devices (have {jax.device_count()});"
+            " use --mode mesh, which re-executes under XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={mesh_n}")
+    from repro.launch.mesh import make_sim_mesh
+    engs = {"legacy_r1": build_micro_mlp(n, steps, seed, 1),
+            "fused_r8": build_micro_mlp(n, steps, seed, R),
+            "mesh_r8": build_micro_mlp(n, steps, seed, R,
+                                       mesh=make_sim_mesh(mesh_n))}
+    members = {k: list(e.assignment.members[0]) for k, e in engs.items()}
+    for k, e in engs.items():                        # compile all paths
+        e._train_cluster(0, members[k], max(R, 2), None, record_every=10**9)
+    sps = {k: [] for k in engs}
+    for _ in range(reps):                            # interleaved medians
+        for k, e in engs.items():
+            with Timer() as t:
+                p, _ = e._train_cluster(0, members[k], rounds, None,
+                                        record_every=10**9)
+                jax.block_until_ready(jax.tree.leaves(p))
+            sps[k].append(n * steps * rounds / t.dt)
+    med = {k: statistics.median(v) for k, v in sps.items()}
+    return {"members": n, "rounds": rounds, "R": R, "steps": steps,
+            "devices": mesh_n,
+            "legacy_steps_per_s": round(med["legacy_r1"], 1),
+            "fused_steps_per_s": round(med["fused_r8"], 1),
+            "mesh_steps_per_s": round(med["mesh_r8"], 1),
+            "speedup_vs_legacy": round(med["mesh_r8"] / med["legacy_r1"], 3),
+            "sharding_overhead": round(med["mesh_r8"] / med["fused_r8"], 3)}
+
+
+def run_mesh_bench_subprocess(n: int = 24, R: int = 8, reps: int = 3,
+                              seed: int = 0, mesh_n: int = 8) -> dict:
+    """Re-execute this file with forced host devices (XLA_FLAGS must be set
+    BEFORE jax initializes its backend, which importing this module already
+    did in the calling process) and collect the mesh-bench JSON."""
+    fd, out = tempfile.mkstemp(suffix=".json")
+    os.close(fd)
+    out = pathlib.Path(out)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={mesh_n} "
+                        + env.get("XLA_FLAGS", "")).strip()
+    env["JAX_PLATFORMS"] = "cpu"
+    try:
+        r = subprocess.run(
+            [sys.executable, os.path.abspath(__file__), "--mode", "mesh-inner",
+             "--members", str(n), "--dispatch-r", str(R), "--reps", str(reps),
+             "--seed", str(seed), "--mesh-devices", str(mesh_n),
+             "--json", str(out)],
+            capture_output=True, text=True, timeout=560, env=env)
+        if r.returncode != 0:
+            raise RuntimeError(
+                f"mesh bench subprocess failed:\n{r.stderr[-2000:]}")
+        return json.loads(out.read_text())["mesh"]
+    finally:
+        out.unlink(missing_ok=True)
 
 
 def time_path(eng, members, rounds, steps, vmap: bool) -> float:
@@ -307,6 +391,21 @@ def run_cluster_bench(args) -> dict:
 
 
 # ------------------------------------------------------------ run.py hooks
+def bench_sim_mesh():
+    """benchmarks/run.py suite: plane-sharded dispatch at 8 forced host
+    devices (subprocess — XLA_FLAGS must precede jax backend init) vs the
+    legacy one-round path and the unsharded fused path."""
+    res = run_mesh_bench_subprocess(n=24, R=8, reps=3)
+    for tag, key in (("legacy_r1", "legacy_steps_per_s"),
+                     ("fused_r8", "fused_steps_per_s"),
+                     ("sharded_r8", "mesh_steps_per_s")):
+        sps = res[key]
+        yield (f"sim/mesh_{tag}", 1e6 / max(sps, 1e-9),
+               f"client_steps_per_s={sps};devices={res['devices']};"
+               f"speedup_vs_legacy={res['speedup_vs_legacy']};"
+               f"sharding_overhead={res['sharding_overhead']}")
+
+
 def bench_sim_dispatch():
     """benchmarks/run.py suite: fused multi-round dispatch vs legacy rounds
     on the dispatch-bound MLP cluster (CPU-budget scale; the micro-LM
@@ -344,9 +443,15 @@ def bench_sim_cluster():
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", default="cluster",
-                    choices=["cluster", "padding", "dispatch", "all"])
+                    choices=["cluster", "padding", "dispatch", "mesh",
+                             "mesh-inner", "all"],
+                    help="'mesh' re-executes itself under 8 forced host "
+                         "devices and times the plane-sharded dispatch "
+                         "('mesh-inner' is that subprocess entry)")
     ap.add_argument("--dispatch-r", type=int, default=8,
                     help="dispatch mode: rounds fused per program")
+    ap.add_argument("--mesh-devices", type=int, default=8,
+                    help="mesh mode: data-axis size (= forced host devices)")
     ap.add_argument("--family", default="lm", choices=["lm", "cnn"])
     ap.add_argument("--members", type=int, default=16)
     ap.add_argument("--rounds", type=int, default=20)
@@ -363,10 +468,32 @@ def main(argv=None):
                     help="also write results as JSON (CI tracks the suite "
                          "via benchmarks/run.py --json BENCH_core.json)")
     args = ap.parse_args(argv)
-    if args.mode in ("dispatch", "all") and args.dispatch_r < 2:
+    if (args.mode in ("dispatch", "mesh", "mesh-inner", "all")
+            and args.dispatch_r < 2):
         ap.error("--dispatch-r must be ≥ 2 (R=1 IS the legacy baseline)")
 
     results = {}
+    if args.mode in ("mesh", "mesh-inner"):
+        if args.mode == "mesh":
+            res = run_mesh_bench_subprocess(n=args.members, R=args.dispatch_r,
+                                            reps=args.reps, seed=args.seed,
+                                            mesh_n=args.mesh_devices)
+        else:
+            res = run_mesh_bench(n=args.members, R=args.dispatch_r,
+                                 reps=args.reps, seed=args.seed,
+                                 mesh_n=args.mesh_devices)
+        results["mesh"] = res
+        print(f"mlp cluster of C={res['members']} members, "
+              f"{res['steps']} local steps × {res['rounds']} rounds, "
+              f"{res['devices']}-way data mesh")
+        print(f"  legacy (R=1, 1 dev) : {res['legacy_steps_per_s']:10.1f} "
+              f"client-steps/s")
+        print(f"  fused  (R={res['R']}, 1 dev) : "
+              f"{res['fused_steps_per_s']:10.1f} client-steps/s")
+        print(f"  sharded(R={res['R']}, {res['devices']} dev) : "
+              f"{res['mesh_steps_per_s']:10.1f} client-steps/s "
+              f"({res['speedup_vs_legacy']:.2f}× vs legacy, "
+              f"{res['sharding_overhead']:.2f}× vs unsharded fused)")
     if args.mode in ("cluster", "all"):
         results["cluster"] = run_cluster_bench(args)
     if args.mode in ("dispatch", "all"):

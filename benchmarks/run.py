@@ -31,6 +31,7 @@ def _suites(fast: bool):
         ("roofline", bench_roofline.bench_roofline),
         ("sim/padding", bench_sim.bench_sim_padding),
         ("sim/dispatch", bench_sim.bench_sim_dispatch),
+        ("sim/mesh", bench_sim.bench_sim_mesh),
     ]
     if not fast:
         suites += [

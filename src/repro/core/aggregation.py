@@ -7,6 +7,11 @@ Two interchangeable implementations (tested equal):
     This is the paper's "upload WPM to server" step realized as an
     all-reduce, and the Pallas ``kernels/fedagg`` kernel is its per-device
     inner loop.
+
+Both exist in flat-plane form too (``aggregate_plane[_sharded]`` etc.): the
+dispatch path's (C, D) parameter plane shards along the same ``data`` axis,
+and non-divisible member counts ride any mesh via zero-weight padding rows
+(``core.plane.pad_member_rows``) instead of a divisibility assert.
 """
 from __future__ import annotations
 
@@ -30,17 +35,36 @@ def aggregate(params_stack, weights):
 
 
 def normalized_weights(n_list) -> jnp.ndarray:
+    """Normalize raw non-negative weights to sum 1 — with a zero-total guard:
+    an all-violator round (every live member banked/dropped) has Σn = 0, and
+    an unguarded n/Σn would NaN-poison every downstream aggregate/plane.
+    The all-zero case returns zeros, which every aggregation in this module
+    treats as the partial-aggregation no-op."""
     n = jnp.asarray(n_list, dtype=jnp.float32)
-    return n / jnp.sum(n)
+    total = jnp.sum(n)
+    return n / jnp.where(total > 0.0, total, 1.0)
 
 
 def aggregate_sharded(mesh, params_stack, weights, axis: str = "data"):
-    """Clients sharded along `axis`; returns replicated aggregated params."""
-    C = weights.shape[0]
+    """Clients sharded along `axis`; returns replicated aggregated params.
 
-    def local_agg(stack, w):
+    The client count does not have to divide the mesh axis: the stack is
+    padded with zero-weight rows (``core.plane.pad_member_rows`` invariant)
+    up to the next multiple, so arbitrary live member counts ride any mesh.
+    """
+    C = weights.shape[0]
+    rows = _plane_rows_for_mesh(mesh, C, axis)
+    w = jnp.asarray(weights, jnp.float32)
+    if rows != C:
+        params_stack = jax.tree.map(
+            lambda x: jnp.concatenate(
+                [x, jnp.zeros((rows - C,) + x.shape[1:], x.dtype)]),
+            params_stack)
+        w = jnp.concatenate([w, jnp.zeros((rows - C,), jnp.float32)])
+
+    def local_agg(stack, wl):
         local = jax.tree.map(
-            lambda x: jnp.tensordot(w.astype(x.dtype), x, axes=(0, 0)), stack)
+            lambda x: jnp.tensordot(wl.astype(x.dtype), x, axes=(0, 0)), stack)
         return jax.tree.map(lambda x: jax.lax.psum(x, axis), local)
 
     specs_in = jax.tree.map(lambda _: P(axis), params_stack)
@@ -48,13 +72,19 @@ def aggregate_sharded(mesh, params_stack, weights, axis: str = "data"):
         local_agg, mesh=mesh,
         in_specs=(specs_in, P(axis)),
         out_specs=jax.tree.map(lambda _: P(), params_stack))
-    return fn(params_stack, weights)
+    return fn(params_stack, w)
 
 
 def fedavg_delta(global_params, params_stack, weights):
-    """Server update as an aggregated delta (useful with server optimizers)."""
+    """Server update as an aggregated delta (useful with server optimizers).
+    A zero total weight (nobody contributed) yields a ZERO delta — the
+    server-step no-op — rather than the poisoned ``-global_params``."""
+    w = jnp.asarray(weights, jnp.float32)
+    total = jnp.sum(w)
     agg = aggregate(params_stack, weights)
-    return jax.tree.map(lambda a, g: a - g, agg, global_params)
+    return jax.tree.map(
+        lambda a, g: jnp.where(total > 0.0, a - g, jnp.zeros_like(g)),
+        agg, global_params)
 
 
 # ------------------------------------------------------------ flat plane
@@ -82,8 +112,12 @@ def aggregate_plane(plane, weights, *, use_kernel: bool | None = None):
 
 
 def fedavg_delta_plane(global_plane, plane, weights):
-    """Server update as an aggregated delta, on the plane."""
-    return aggregate_plane(plane, weights) - global_plane
+    """Server update as an aggregated delta, on the plane.  Zero total
+    weight → zero delta (the server-step no-op), never ``-global_plane``."""
+    w = jnp.asarray(weights, jnp.float32)
+    return jnp.where(jnp.sum(w) > 0.0,
+                     aggregate_plane(plane, w) - global_plane,
+                     jnp.zeros_like(global_plane))
 
 
 def merge_buffered_plane(partial_plane, bank_plane, bank_weights):
@@ -91,6 +125,62 @@ def merge_buffered_plane(partial_plane, bank_plane, bank_weights):
     by the live+buffered total) into a partial plane sum — one contraction,
     no per-contribution tree_map."""
     return partial_plane + aggregate_plane(bank_plane, bank_weights)
+
+
+# ------------------------------------------------------- sharded flat plane
+# Multi-device counterparts of the plane ops: the (C, D) member plane is
+# sharded along the mesh ``data`` axis, each device contracts its LOCAL
+# member rows (the Pallas ``kernels/fedagg`` plane kernel on TPU, one
+# tensordot elsewhere — exactly ``aggregate_plane``), and a single psum
+# finishes the §III-B "upload WPM to server" all-reduce.  The member count
+# never has to divide the mesh axis: rows are padded with zero weights
+# (``core.plane.pad_member_rows``), which every weighted contraction
+# ignores by construction.
+
+
+def _plane_rows_for_mesh(mesh, C: int, axis: str) -> int:
+    """Smallest row count ≥ C divisible by the mesh ``axis`` size."""
+    n = mesh.shape[axis]
+    return -(-C // n) * n
+
+
+def aggregate_plane_sharded(mesh, plane, weights, *, axis: str = "data",
+                            use_kernel: bool | None = None):
+    """plane: (C, D) fp32 sharded along ``axis``; weights: (C,) raw or
+    normalized → replicated (D,) Σ w_i p_i.  One local contraction per
+    device + one psum."""
+    from repro.core.plane import pad_member_rows
+
+    plane, w = pad_member_rows(
+        plane, jnp.asarray(weights, jnp.float32),
+        _plane_rows_for_mesh(mesh, plane.shape[0], axis))
+
+    def local_agg(p, wl):
+        return jax.lax.psum(
+            aggregate_plane(p, wl, use_kernel=use_kernel), axis)
+
+    fn = _shard_map(local_agg, mesh=mesh,
+                    in_specs=(P(axis, None), P(axis)), out_specs=P())
+    return fn(plane, w)
+
+
+def fedavg_delta_plane_sharded(mesh, global_plane, plane, weights, *,
+                               axis: str = "data"):
+    """Sharded server update as an aggregated delta on the plane.  A zero
+    total weight yields a zero delta (same guard as ``fedavg_delta``)."""
+    w = jnp.asarray(weights, jnp.float32)
+    agg = aggregate_plane_sharded(mesh, plane, w, axis=axis)
+    return jnp.where(jnp.sum(w) > 0.0, agg - global_plane,
+                     jnp.zeros_like(global_plane))
+
+
+def merge_buffered_plane_sharded(mesh, partial_plane, bank_plane,
+                                 bank_weights, *, axis: str = "data"):
+    """Sharded ``merge_buffered_plane``: the banked rows live on the same
+    mesh axis as the member plane; their discounted contraction joins the
+    partial sum through the same local-reduce + psum path."""
+    return partial_plane + aggregate_plane_sharded(
+        mesh, bank_plane, bank_weights, axis=axis)
 
 
 # ------------------------------------------------------------ buffered async

@@ -50,3 +50,22 @@ def make_plane_spec(params_template) -> PlaneSpec:
     d = flat.shape[0]
     d_pad = -(-d // PLANE_ALIGN) * PLANE_ALIGN
     return PlaneSpec(d=d, d_pad=d_pad, unravel=unravel)
+
+
+def pad_member_rows(plane: jnp.ndarray, weights: jnp.ndarray, rows: int):
+    """Pad a (C, D) member plane and its (C,) weight vector with zero rows up
+    to ``rows`` (jax-traceable).  This is the PR-2 padding invariant applied
+    to the member axis: a zero-weight row contributes nothing to any weighted
+    contraction, so callers may round C up to whatever divisibility a mesh
+    axis (or capacity bucket) demands instead of asserting it."""
+    C = plane.shape[0]
+    if rows < C:
+        raise ValueError(f"cannot pad {C} member rows down to {rows}")
+    if rows == C:
+        return plane, jnp.asarray(weights, jnp.float32)
+    pad = rows - C
+    plane = jnp.concatenate(
+        [plane, jnp.zeros((pad, plane.shape[1]), plane.dtype)])
+    weights = jnp.concatenate(
+        [jnp.asarray(weights, jnp.float32), jnp.zeros((pad,), jnp.float32)])
+    return plane, weights

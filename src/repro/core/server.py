@@ -13,6 +13,7 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import aggregation, assignment as asg, clustering, compaction
 from repro.core import cost_model, rounds as rnd
@@ -22,6 +23,8 @@ from repro.core.resources import (LAMBDA_PAPER, Participant, resource_matrix,
                                   unit_normalize)
 from repro.data import device_sampler
 from repro.data.sampler import class_balanced_batches, sample_batches
+from repro.launch.sharding import (member_specs, replicated_specs,
+                                   shard_member_tree)
 
 
 @dataclass
@@ -113,18 +116,31 @@ class FedRACResult:
 
 class FedRAC:
     def __init__(self, parts: list[Participant], client_data: list[dict],
-                 family: FLModelFamily, cfg: FLConfig, classes: int):
+                 family: FLModelFamily, cfg: FLConfig, classes: int, *,
+                 mesh=None, mesh_axis: str = "data"):
         if cfg.aggregation not in ("sync", "buffered"):
             raise ValueError(f"unknown aggregation {cfg.aggregation!r}")
         if cfg.rounds_per_dispatch > 1 and not cfg.vmap_clusters:
             raise ValueError(
                 "rounds_per_dispatch>1 (device-resident pipeline) requires "
                 "vmap_clusters=True — the per-pid loop cannot be scan-fused")
+        if mesh is not None and cfg.rounds_per_dispatch == 1:
+            raise ValueError(
+                "a mesh shards the device-resident dispatch path — set "
+                "rounds_per_dispatch>1 (the legacy one-round path would "
+                "silently ignore it)")
         self.parts = parts
         self.client_data = client_data        # per pid: {"x": ..., "y": ...}
         self.family = family
         self.cfg = cfg
         self.classes = classes
+        # member-sharded execution: the dispatch block program runs under
+        # shard_map with the capacity axis split along mesh `mesh_axis` —
+        # each device trains its local member rows and one psum realizes
+        # the §III-B upload as an all-reduce.  None = single-device.
+        self.mesh = mesh
+        self.mesh_axis = mesh_axis
+        self._mesh_n = int(mesh.shape[mesh_axis]) if mesh is not None else 1
         # (level, use_kd, capacity, want_stack, …) -> jitted round programs
         self._programs = {}
         # dispatch-path caches: level -> PlaneSpec; (level, members) ->
@@ -233,13 +249,21 @@ class FedRAC:
         """Bucket a live member count to its padded capacity: next power of
         two capped at pad_max, then multiples of pad_max — a handful of
         buckets covers every cardinality Procedure-2 churn can produce.
-        (The cap keeps capacities monotone for non-power-of-two pad_max.)"""
+        (The cap keeps capacities monotone for non-power-of-two pad_max.)
+        On a mesh the capacity is additionally rounded up to a multiple of
+        the data-axis size so every device holds the same member-row count
+        — the extra rows are the same zero-weight padding the buckets use,
+        so they never touch the aggregate."""
         cfg = self.cfg
-        if not cfg.pad_clusters or C <= 0:
-            return C
-        if C >= cfg.pad_max:
-            return -(-C // cfg.pad_max) * cfg.pad_max
-        return min(1 << (C - 1).bit_length(), cfg.pad_max)
+        cap = C
+        if cfg.pad_clusters and C > 0:
+            if C >= cfg.pad_max:
+                cap = -(-C // cfg.pad_max) * cfg.pad_max
+            else:
+                cap = min(1 << (C - 1).bit_length(), cfg.pad_max)
+        if self._mesh_n > 1 and cap > 0:
+            cap = -(-cap // self._mesh_n) * self._mesh_n
+        return cap
 
     def _stacked_batches(self, members: list[int], rng_round: int, level: int,
                          capacity: int | None = None):
@@ -271,8 +295,25 @@ class FedRAC:
         return self._plane_specs[level]
 
     def plane_of(self, level: int, params) -> jnp.ndarray:
-        """Ravel a params pytree into its (D_pad,) fp32 plane."""
-        return self.plane_spec(level).to_plane(params)
+        """Ravel a params pytree into its (D_pad,) fp32 plane (committed
+        replicated on the mesh, so every dispatch call sees one input
+        sharding signature and block programs never retrace)."""
+        return self.place_replicated(self.plane_spec(level).to_plane(params))
+
+    def place_replicated(self, x):
+        """Commit an array replicated over the mesh (no-op without one)."""
+        if self.mesh is None:
+            return x
+        return jax.device_put(x, NamedSharding(self.mesh, P()))
+
+    def place_member_sharded(self, x):
+        """Commit an array sharded along the member axis (no-op without a
+        mesh) — bank carries and mask/weight rows enter dispatch programs
+        pre-placed instead of being resharded per call."""
+        if self.mesh is None:
+            return x
+        return jax.device_put(x, NamedSharding(self.mesh,
+                                               P(self.mesh_axis)))
 
     def params_of(self, level: int, plane):
         """Unravel a plane back to a params pytree (evaluation/reporting
@@ -322,6 +363,10 @@ class FedRAC:
                 tables[i], counts[i] = self._class_table(pid)
             pack["tables"] = jnp.asarray(tables)
             pack["counts"] = jnp.asarray(counts)
+        if self.mesh is not None:
+            # place the pack row-sharded on the mesh ONCE; cached reuse then
+            # skips the implicit per-call jit reshard
+            pack = shard_member_tree(self.mesh, pack, self.mesh_axis)
         if len(self._shard_packs) >= 16:               # bound device memory
             self._shard_packs.pop(next(iter(self._shard_packs)))
         self._shard_packs[key] = pack
@@ -456,21 +501,36 @@ class FedRAC:
     # ------------------------------------------------------------ dispatch
     def _dispatch_programs(self, level: int, use_kd: bool, capacity: int,
                            R: int, balanced: bool, banked: bool,
-                           want_history: bool):
+                           want_history: bool, t_per_round: bool = False,
+                           pack=None, teacher_example=None):
         """Cached scan-fused block program: R communication rounds in ONE
         jitted XLA program.  Per scan step it draws every member's batch
-        indices in-program (seeded on the absolute round index), gathers
-        from the device-resident shard pack, runs the vmapped member update,
-        and aggregates on the flat parameter plane — one contraction, no
-        host round-trip, no tree_flatten.  The plane (and bank plane) are
-        donated, so blocks run copy-free.  ``banked`` variants additionally
-        carry the buffered-aggregation bank through the scan: each round
-        merges the previous round's bank (pre-discounted weights) into the
-        FedAvg and re-banks this round's violators at ``bank_gain``."""
+        indices in-program (seeded on the absolute round index and the
+        member's global slot), gathers from the device-resident shard pack,
+        runs the vmapped member update, and aggregates on the flat parameter
+        plane — one contraction, no host round-trip, no tree_flatten.  The
+        plane (and bank plane) are donated, so blocks run copy-free.
+        ``banked`` variants additionally carry the buffered-aggregation bank
+        through the scan: each round merges the previous round's bank
+        (pre-discounted weights) into the FedAvg and re-banks this round's
+        violators at ``bank_gain``.  ``t_per_round`` programs scan a
+        (R, D_master) teacher-plane stack instead of closing over one fixed
+        teacher — the hook that keeps KD teachers refreshing at round
+        granularity inside a fused block.
+
+        On a mesh the whole block runs under ``shard_map`` with the member
+        (capacity) axis split along ``mesh_axis``: every device trains its
+        local member rows, the per-round aggregation contracts locally
+        (``aggregate_plane`` — the Pallas fedagg kernel on TPU) and ONE psum
+        per round completes the §III-B upload all-reduce; the plane and the
+        per-round teacher stack stay replicated, donation is preserved, and
+        the buffered bank rows ride the carry sharded like the members they
+        came from."""
         cfg = self.cfg
         key = ("dispatch", level, use_kd, capacity, R, balanced, banked,
                want_history, cfg.lr, cfg.kd_T, cfg.kd_alpha, cfg.seed,
-               cfg.steps_per_round, cfg.local_batch, cfg.donate_plane)
+               cfg.steps_per_round, cfg.local_batch, cfg.donate_plane,
+               t_per_round, self._mesh_n)
         if key in self._programs:
             return self._programs[key]
         loss_fn = jax.tree_util.Partial(self.family.loss_and_logits, level)
@@ -478,72 +538,118 @@ class FedRAC:
         update = make_cluster_update(loss_fn, cfg.lr, **kw)
         t_loss_fn = jax.tree_util.Partial(self.family.loss_and_logits, 0)
         spec = self.plane_spec(level)
+        t_spec = self.plane_spec(0) if (use_kd and t_per_round) else None
         steps, batch, seed = cfg.steps_per_round, cfg.local_batch, cfg.seed
+        axis = self.mesh_axis if self.mesh is not None else None
 
         def one_round(g, bank_p, bank_w, r, shards, n_i, tables,
-                      counts, step_masks, weights, teacher):
+                      counts, step_masks, weights, teacher, offset):
+            C_loc = step_masks.shape[0]       # local member rows (mesh-split)
             key = device_sampler.round_key(seed, r)
             if balanced:
                 idx = device_sampler.balanced_indices(key, steps, batch,
-                                                      tables, counts)
+                                                      tables, counts,
+                                                      offset=offset)
             else:
-                idx = device_sampler.uniform_indices(key, steps, batch, n_i)
+                idx = device_sampler.uniform_indices(key, steps, batch, n_i,
+                                                     offset=offset)
             batches = jax.vmap(lambda sh, ix: self._batch_from_gathered(
                 jax.tree.map(lambda a: a[ix], sh)))(shards, idx)
             params = spec.to_params(g)
             p_stack = jax.tree.map(
-                lambda x: jnp.broadcast_to(x[None], (capacity,) + x.shape),
+                lambda x: jnp.broadcast_to(x[None], (C_loc,) + x.shape),
                 params)
             teachers = None
             if use_kd:
+                t_params = (t_spec.to_params(teacher) if t_per_round
+                            else teacher)
                 teachers = jax.vmap(
-                    jax.vmap(lambda b: t_loss_fn(teacher, b)[1]))(batches)
+                    jax.vmap(lambda b: t_loss_fn(t_params, b)[1]))(batches)
             new_stack, losses = update(p_stack, batches, step_masks, teachers)
             new_plane = jax.vmap(spec.to_plane)(new_stack)
             total = jnp.sum(weights) + (jnp.sum(bank_w) if banked else 0.0)
+            if axis is not None:
+                total = jax.lax.psum(total, axis)
             denom = jnp.where(total > 0.0, total, 1.0)
-            agg = aggregation.aggregate_plane(new_plane, weights / denom)
+            local = aggregation.aggregate_plane(new_plane, weights / denom)
             if banked:
-                agg = aggregation.merge_buffered_plane(agg, bank_p,
-                                                       bank_w / denom)
+                local = aggregation.merge_buffered_plane(local, bank_p,
+                                                         bank_w / denom)
+            agg = jax.lax.psum(local, axis) if axis is not None else local
             g_next = jnp.where(total > 0.0, agg, g)
             return g_next, new_plane, losses
+
+        def _offset(step_masks):
+            """Global slot index of this device's first member row."""
+            if axis is None:
+                return jnp.int32(0)
+            return jax.lax.axis_index(axis) * step_masks.shape[0]
+
+        def _xs(r0, teacher):
+            rs = r0 + jnp.arange(R, dtype=jnp.int32)
+            return (rs, teacher) if t_per_round else rs
 
         if banked:
             def block_fn(plane, bank_plane, bank_w, shards, n_i,
                          tables, counts, r0, step_masks, weights, bank_gain,
                          teacher):
-                def body(carry, r):
+                off = _offset(step_masks)
+
+                def body(carry, x):
                     g, bp, bw = carry
+                    r, t = x if t_per_round else (x, teacher)
                     g2, new_plane, losses = one_round(
                         g, bp, bw, r, shards, n_i, tables, counts,
-                        step_masks, weights, teacher)
+                        step_masks, weights, t, off)
                     ys = (losses, g2) if want_history else (losses,)
                     return (g2, new_plane, bank_gain), ys
                 carry, ys = jax.lax.scan(
-                    body, (plane, bank_plane, bank_w),
-                    r0 + jnp.arange(R, dtype=jnp.int32))
+                    body, (plane, bank_plane, bank_w), _xs(r0, teacher))
                 return carry + tuple(ys)
             donate = (0, 1) if cfg.donate_plane else ()
         else:
             def block_fn(plane, shards, n_i, tables, counts, r0,
                          step_masks, weights, teacher):
-                def body(g, r):
+                off = _offset(step_masks)
+
+                def body(g, x):
+                    r, t = x if t_per_round else (x, teacher)
                     g2, _, losses = one_round(
                         g, None, None, r, shards, n_i, tables, counts,
-                        step_masks, weights, teacher)
+                        step_masks, weights, t, off)
                     ys = (losses, g2) if want_history else (losses,)
                     return g2, ys
-                g, ys = jax.lax.scan(body, plane,
-                                     r0 + jnp.arange(R, dtype=jnp.int32))
+                g, ys = jax.lax.scan(body, plane, _xs(r0, teacher))
                 return (g,) + tuple(ys)
             donate = (0,) if cfg.donate_plane else ()
-        self._programs[key] = jax.jit(block_fn, donate_argnums=donate)
+
+        fn = block_fn
+        if axis is not None:
+            Pm, Pr = P(axis), P()
+            t_in = None
+            if use_kd:
+                t_in = (Pr if t_per_round
+                        else replicated_specs(teacher_example))
+            tail = (member_specs(pack["shards"], axis), Pm,
+                    member_specs(pack["tables"], axis),
+                    member_specs(pack["counts"], axis), Pr, Pm, Pm)
+            ys_specs = (P(None, axis),) + ((Pr,) if want_history else ())
+            if banked:
+                in_specs = (Pr, Pm, Pm) + tail + (Pm, t_in)
+                out_specs = (Pr, Pm, Pm) + ys_specs
+            else:
+                in_specs = (Pr,) + tail + (t_in,)
+                out_specs = (Pr,) + ys_specs
+            fn = aggregation._shard_map(block_fn, mesh=self.mesh,
+                                        in_specs=in_specs,
+                                        out_specs=out_specs)
+        self._programs[key] = jax.jit(fn, donate_argnums=donate)
         return self._programs[key]
 
     def dispatch_rounds(self, level: int, members: list[int], plane, r0: int,
-                        n_rounds: int, *, teacher=None, step_masks=None,
-                        weights=None, bank=None, want_history: bool = False):
+                        n_rounds: int, *, teacher=None, teacher_planes=None,
+                        step_masks=None, weights=None, bank=None,
+                        want_history: bool = False):
         """Device-resident block dispatch: run ``n_rounds`` rounds fused.
 
         ``plane`` is the cluster's (D_pad,) parameter plane — it is DONATED
@@ -552,15 +658,27 @@ class FedRAC:
         buffered-aggregation carry ``(bank_plane (cap, D_pad), bank_w (cap,),
         bank_gain (cap,))``: rows merged into the first round at ``bank_w``,
         each round's member updates re-banked at ``bank_gain`` (zero rows =
-        not banked).  Returns a ``DispatchOut`` with per-round member losses
-        and, with ``want_history``, the per-round planes — the hook that
-        keeps telemetry/history exact under fusion.
+        not banked).  The KD teacher is either ``teacher`` (one params
+        pytree, fixed for the whole block — the ``FedRAC.train`` path, whose
+        master is fully trained first) or ``teacher_planes`` (an
+        (n_rounds, D_master) plane stack scanned through the block, one
+        teacher per round — the simulator path, where the master co-trains
+        and R=1 semantics demand per-round refresh).  Returns a
+        ``DispatchOut`` with per-round member losses and, with
+        ``want_history``, the per-round planes — the hook that keeps
+        telemetry/history exact under fusion.
         """
         cfg = self.cfg
         C = len(members)
         cap = self._capacity(C)
         balanced = cfg.class_balanced and level == 0
-        use_kd = teacher is not None and cfg.use_kd
+        use_kd = cfg.use_kd and (teacher is not None
+                                 or teacher_planes is not None)
+        t_per_round = use_kd and teacher_planes is not None
+        if t_per_round and teacher_planes.shape[0] != n_rounds:
+            raise ValueError(
+                f"teacher_planes carries {teacher_planes.shape[0]} rounds "
+                f"for a {n_rounds}-round block")
         banked = bank is not None
         pack = self._shard_pack(level, members, cap, balanced)
         S = cfg.steps_per_round
@@ -572,26 +690,29 @@ class FedRAC:
                            for pid in members]
             w = np.zeros(cap, np.float32)
             w[:C] = np.asarray(weights, np.float32)
-            w = jnp.asarray(w)
+            w = self.place_member_sharded(jnp.asarray(w))
         if isinstance(step_masks, jax.Array) and step_masks.shape == (cap, S):
             masks = step_masks            # pre-padded device array: no copy
         else:
             masks = np.zeros((cap, S), np.float32)
             masks[:C] = (np.ones((C, S), np.float32) if step_masks is None
                          else np.asarray(step_masks, np.float32))
-            masks = jnp.asarray(masks)
+            masks = self.place_member_sharded(jnp.asarray(masks))
         prog = self._dispatch_programs(level, use_kd, cap, n_rounds,
-                                       balanced, banked, want_history)
+                                       balanced, banked, want_history,
+                                       t_per_round=t_per_round, pack=pack,
+                                       teacher_example=teacher)
+        t_arg = teacher_planes if t_per_round else teacher
         tail = (pack["shards"], pack["n"], pack["tables"], pack["counts"],
                 jnp.asarray(r0, jnp.int32), masks, w)
         if banked:
             bank_plane, bank_w, bank_gain = bank
             out = prog(plane, bank_plane, bank_w, *tail,
-                       jnp.asarray(bank_gain, jnp.float32), teacher)
+                       jnp.asarray(bank_gain, jnp.float32), t_arg)
             new_plane, bank_out = out[0], (out[1], out[2])
             rest = out[3:]
         else:
-            out = prog(plane, *tail, teacher)
+            out = prog(plane, *tail, t_arg)
             new_plane, bank_out = out[0], None
             rest = out[1:]
         losses = rest[0][:, :C]
@@ -631,15 +752,16 @@ class FedRAC:
         cfg = self.cfg
         R = cfg.rounds_per_dispatch
         spec = self.plane_spec(level)
-        plane = spec.to_plane(params)
+        plane = self.plane_of(level, params)
         # masks/weights are constant across blocks: pad + transfer once
         cap = self._capacity(len(members))
         weights = np.zeros(cap, np.float32)
         weights[:len(members)] = [self.assignment.n_eff.get(pid, 1)
                                   for pid in members]
-        weights = jnp.asarray(weights)
-        masks = jnp.zeros((cap, cfg.steps_per_round), jnp.float32
-                          ).at[:len(members)].set(1.0)
+        weights = self.place_member_sharded(jnp.asarray(weights))
+        masks = self.place_member_sharded(
+            jnp.zeros((cap, cfg.steps_per_round), jnp.float32
+                      ).at[:len(members)].set(1.0))
         history = []
         r = 0
         while r < n_rounds:

@@ -2,12 +2,14 @@
 
 The scan-fused multi-round pipeline draws every member's batch indices
 INSIDE the program: one round key folded from (seed, absolute round index),
-one batched draw covering the whole padded member axis.  Because the stream
-depends only on the absolute round index (never on block boundaries or the
-dispatch width R), any two widths are numerically interchangeable — R is an
-execution knob, not a semantic one.  The legacy one-round-per-dispatch path
-keeps its historical host-side numpy stream; the two streams are
-statistically equivalent but distinct.
+then one key per member folded from the member's GLOBAL slot index.  Because
+the stream depends only on (absolute round, global member slot) — never on
+block boundaries, the dispatch width R, or how the member axis is sharded
+over a mesh — any two widths are numerically interchangeable AND a
+mesh-sharded program (each device passing its slice start as ``offset``)
+draws bit-identically to the single-device program.  The legacy
+one-round-per-dispatch path keeps its historical host-side numpy stream; the
+two streams are statistically equivalent but distinct.
 
 ``balanced_indices`` realizes §IV-C class-balanced resampling as a fixed-
 shape draw (round-robin class quotas over each member's present classes,
@@ -27,14 +29,28 @@ def round_key(seed: int, r):
     return jax.random.fold_in(jax.random.PRNGKey(seed), r)
 
 
-def uniform_indices(key, steps: int, batch: int, n) -> jnp.ndarray:
-    """(C, steps, batch) int32 draws, member i uniform over [0, n[i])."""
+def _member_keys(key, C: int, offset) -> jnp.ndarray:
+    """One key per member, folded from the GLOBAL member slot index
+    ``offset + i``.  Because each member's stream depends only on (round
+    key, global slot), a mesh-sharded program — where each device sees a
+    contiguous slice of the member axis and passes its slice start as
+    ``offset`` — draws bit-identical indices to the unsharded program."""
+    return jax.vmap(lambda i: jax.random.fold_in(key, i))(
+        jnp.asarray(offset, jnp.int32) + jnp.arange(C, dtype=jnp.int32))
+
+
+def uniform_indices(key, steps: int, batch: int, n, offset=0) -> jnp.ndarray:
+    """(C, steps, batch) int32 draws, member i uniform over [0, n[i]).
+    ``offset`` is the members' global slot base (nonzero inside mesh-sharded
+    programs)."""
     n = jnp.maximum(jnp.asarray(n, jnp.int32), 1)
-    return jax.random.randint(key, (n.shape[0], steps, batch), 0,
-                              n[:, None, None])
+    keys = _member_keys(key, n.shape[0], offset)
+    return jax.vmap(lambda k, ni: jax.random.randint(
+        k, (steps, batch), 0, ni))(keys, n)
 
 
-def balanced_indices(key, steps: int, batch: int, tables, counts) -> jnp.ndarray:
+def balanced_indices(key, steps: int, batch: int, tables, counts,
+                     offset=0) -> jnp.ndarray:
     """Class-balanced (C, steps, batch) draws from per-member class tables.
 
     ``tables``: (C, classes, m) int32 — per member and class, the member's
@@ -42,10 +58,17 @@ def balanced_indices(key, steps: int, batch: int, tables, counts) -> jnp.ndarray
     (C, classes) int32.  Batch slots are assigned round-robin over each
     member's PRESENT classes (equal ⌈batch/n_present⌉ quotas — the numpy
     resampling scheme; slot order is irrelevant to an averaged loss, so no
-    shuffle), then each slot draws uniformly within its class.
+    shuffle), then each slot draws uniformly within its class.  ``offset``
+    is the members' global slot base (see ``uniform_indices``).
+
+    The instance draw is clamped to the table width m: a caller that built
+    its tables narrower than ``counts.max()`` gets uniform draws over each
+    class's first m indices instead of silently-clamped gathers that
+    over-weight the last column.
     """
     counts = jnp.asarray(counts, jnp.int32)
     C, classes = counts.shape
+    tables = jnp.asarray(tables)
     present = counts > 0
     n_present = jnp.maximum(jnp.sum(present.astype(jnp.int32), -1), 1)  # (C,)
     # per member: present classes first, in ascending class order
@@ -54,19 +77,28 @@ def balanced_indices(key, steps: int, batch: int, tables, counts) -> jnp.ndarray
     slot_cls = jnp.arange(batch)[None, :] % n_present[:, None]      # (C, B)
     cls = jnp.take_along_axis(order, slot_cls, axis=1)              # (C, B)
     cnt = jnp.maximum(jnp.take_along_axis(counts, cls, axis=1), 1)  # (C, B)
-    inst = jax.random.randint(key, (C, steps, batch), 0, cnt[:, None, :])
-    return jax.vmap(lambda t, c, i: t[c[None, :], i])(
-        jnp.asarray(tables), cls, inst)
+    cnt = jnp.minimum(cnt, tables.shape[-1])
+    keys = _member_keys(key, C, offset)
+    inst = jax.vmap(lambda k, c: jax.random.randint(
+        k, (steps, batch), 0, c[None, :]))(keys, cnt)
+    return jax.vmap(lambda t, c, i: t[c[None, :], i])(tables, cls, inst)
 
 
 def build_class_table(y: np.ndarray, classes: int, m: int | None = None):
     """Host-side: (classes, m) index table + (classes,) counts for one shard.
-    Rows are padded by repeating the class's indices (padding is never drawn:
-    the instance draw is bounded by counts)."""
+
+    Rows shorter than m are padded by repeating the class's indices (padding
+    is never drawn: the instance draw is bounded by counts).  Contract for
+    narrow tables: m MAY be smaller than ``counts.max()`` — each class row
+    then holds its first m sample indices, and ``balanced_indices`` clamps
+    its draw bound to m, so the drawn distribution stays uniform over those
+    m samples (never skewed toward a repeated last column).  counts is
+    returned UNclamped (it still reports true per-class populations)."""
     y = np.asarray(y)
     cols = [np.where(y == c)[0].astype(np.int32) for c in range(classes)]
     counts = np.array([len(c) for c in cols], np.int32)
     m = int(m if m is not None else max(1, counts.max(initial=1)))
+    assert m >= 1, f"class table width must be ≥ 1, got {m}"
     table = np.zeros((classes, m), np.int32)
     for c, col in enumerate(cols):
         if len(col):

@@ -13,6 +13,15 @@ def _interpret_default() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def _pick_block(D: int, block_d: int) -> int:
+    """Largest power-of-two block ≤ ``block_d`` that divides D (always
+    terminates: every D divides by 1)."""
+    bd = min(block_d, D)
+    while D % bd:
+        bd //= 2
+    return bd
+
+
 def aggregate_plane(plane, weights, *, block_d: int = 2048,
                     interpret: bool | None = None):
     """Weighted aggregate straight on a flat parameter plane (C, D) → (D,).
@@ -21,12 +30,16 @@ def aggregate_plane(plane, weights, *, block_d: int = 2048,
     multiple of ``core.plane.PLANE_ALIGN`` at spec time, so — unlike
     ``aggregate_tree`` — there is no per-call flatten/concatenate/pad; the
     kernel grid tiles D at the largest power-of-two block ≤ ``block_d``
-    that divides it."""
+    that divides it.
+
+    Under ``shard_map`` this is the PER-DEVICE inner loop of the sharded
+    plane aggregation (``aggregation.aggregate_plane_sharded`` and the
+    mesh-sharded dispatch program): C is then the device's LOCAL member-row
+    count — the zero-weight padding rows that make C divisible by the mesh
+    axis contract to nothing — and one psum outside completes the
+    all-reduce."""
     interpret = _interpret_default() if interpret is None else interpret
-    D = plane.shape[1]
-    bd = min(block_d, D)
-    while D % bd:
-        bd //= 2
+    bd = _pick_block(plane.shape[1], block_d)
     return weighted_aggregate(plane.astype(jnp.float32),
                               weights.astype(jnp.float32), block_d=bd,
                               interpret=interpret)

@@ -21,3 +21,23 @@ def data_axes(mesh) -> tuple:
 def make_host_mesh(n_data: int = 1, n_model: int = 1):
     """Small mesh over host devices (tests use 8 forced host devices)."""
     return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+def make_sim_mesh(shape):
+    """Mesh for member-sharded FL simulation (``sim_run --mesh-shape``):
+    the ``data`` axis shards the cluster member axis of the dispatch-path
+    plane programs.  ``shape`` is an int (data-axis size), an ``"8"`` /
+    ``"8x1"`` string, or a tuple ``(data[, model])``."""
+    if isinstance(shape, str):
+        shape = tuple(int(s) for s in shape.lower().replace("×", "x")
+                      .split("x"))
+    elif isinstance(shape, int):
+        shape = (shape,)
+    if len(shape) > 2:
+        raise ValueError(
+            f"sim meshes have at most (data, model) axes, got {shape}")
+    n_data = int(shape[0])
+    n_model = int(shape[1]) if len(shape) > 1 else 1
+    if n_data < 1 or n_model < 1:
+        raise ValueError(f"mesh axes must be ≥ 1, got {shape}")
+    return make_host_mesh(n_data, n_model)

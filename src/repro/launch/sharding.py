@@ -169,3 +169,30 @@ def cache_specs(cfg: ModelConfig, cache_shape, mesh, *, shard_seq: bool):
 
 def to_named(mesh, specs):
     return jax.tree.map(lambda s: NamedSharding(mesh, s), specs)
+
+
+# ---------------------------------------------------- FL member-axis planes
+# Specs for the mesh-sharded dispatch path (core/server.py): cluster members
+# shard along `data` on every leading axis — shard packs (capacity, N, …),
+# step masks (capacity, S), weights (capacity,), the bank plane
+# (capacity, D) — while the flat parameter plane (D,) stays replicated and
+# leaves the program through a psum.
+
+
+def member_specs(tree, axis: str = "data"):
+    """P(axis) on the leading (member) axis of every leaf; None subtrees
+    pass through (absent class tables on non-balanced levels)."""
+    return jax.tree.map(lambda _: P(axis), tree)
+
+
+def replicated_specs(tree):
+    """P() on every leaf (params/planes broadcast to all devices)."""
+    return jax.tree.map(lambda _: P(), tree)
+
+
+def shard_member_tree(mesh, tree, axis: str = "data"):
+    """device_put every leaf row-sharded along the member axis — used to
+    place cached shard packs on the mesh ONCE so repeated dispatch calls
+    skip the implicit jit reshard."""
+    return jax.tree.map(
+        lambda x: jax.device_put(x, NamedSharding(mesh, P(axis))), tree)

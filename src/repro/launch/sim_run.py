@@ -20,6 +20,7 @@ from repro.core import server as srv
 from repro.core.families import cnn_family
 from repro.core.resources import (LAMBDA_EQUAL, LAMBDA_PAPER,
                                   participants_from_matrix)
+from repro.launch.mesh import make_sim_mesh
 from repro.data.partition import dirichlet_partition
 from repro.data.synthetic import SPECS, make_classification, train_test_split
 from repro.sim import (SCENARIOS, HeterogeneitySim, SimConfig, make_trace,
@@ -47,7 +48,9 @@ def build(args):
                                     else "sync"),
                        staleness_discount=args.staleness_discount,
                        rounds_per_dispatch=args.rounds_per_dispatch)
-    eng = srv.FedRAC(parts, client_data, fam, cfg, classes=classes).setup()
+    mesh = make_sim_mesh(args.mesh_shape) if args.mesh_shape else None
+    eng = srv.FedRAC(parts, client_data, fam, cfg, classes=classes,
+                     mesh=mesh).setup()
     testb = {"x": jnp.asarray(test.x), "y": jnp.asarray(test.y)}
     return eng, testb
 
@@ -57,6 +60,9 @@ def run(args):
     print(f"k_optimal={eng.k_optimal} compacted_to={eng.m} "
           f"MAR(master)={eng.specs[0].mar:.2f}s "
           f"members={ {l: len(v) for l, v in eng.assignment.members.items()} }")
+    if eng.mesh is not None:
+        print(f"mesh={dict(eng.mesh.shape)} "
+              f"(member axis sharded {eng._mesh_n}-way)")
     trace = make_trace(args.trace, args.participants, args.rounds,
                        seed=args.seed, dropout_rate=args.dropout_rate,
                        drift_rate=args.drift_rate, spike_rate=args.spike_rate)
@@ -93,6 +99,13 @@ def main(argv=None):
                          "many rounds fused per cluster into one scan "
                          "program between events (in-program sampling, "
                          "flat-plane aggregation, donated buffers)")
+    ap.add_argument("--mesh-shape", default=None, metavar="DATA[xMODEL]",
+                    help="shard the dispatch-path member axis over a device "
+                         "mesh, e.g. '8' or '8x1' (requires "
+                         "--rounds-per-dispatch >1; per-round plane "
+                         "aggregation becomes local-reduce + one psum; on "
+                         "CPU force devices with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=8)")
     ap.add_argument("--schedule", default="parallel",
                     choices=["parallel", "sequential"])
     ap.add_argument("--dropout-rate", type=float, default=0.15)

@@ -327,9 +327,10 @@ class HeterogeneitySim:
         while no event fires, so per-round telemetry within a block is equal
         by construction and per-round losses come back scan-stacked — the
         records are as exact as the legacy path's.  KD teachers refresh at
-        block granularity (parallel schedule: the master plane at block
-        start; for a length-1 block this IS the legacy per-round
-        master_before)."""
+        ROUND granularity inside a block: the master block returns its
+        per-round planes, and each slave block scans a per-round teacher
+        stack at the schedule's cadence (``_teacher_planes``), so R=1 and
+        R>1 are semantically interchangeable under both schedules."""
         fl, cfg = self.fl, self.cfg
         report = SimReport(scenario=self.trace.name,
                            mar_policy=cfg.mar_policy, schedule=cfg.schedule)
@@ -356,9 +357,14 @@ class HeterogeneitySim:
                     L = 1
                 decisions[lvl] = (members, stats, masks, weights,
                                   t_cluster, ripe, live)
-            teacher = None
-            if fl.m > 1 and cfg.schedule == "parallel":
-                teacher = fl.params_of(0, planes[0])   # block-start master
+            kd = fl.m > 1 and fl.cfg.use_kd
+            # pre-flush, pre-block master plane; copied because the master's
+            # own dispatch DONATES planes[0] and the parallel-cadence teacher
+            # stack still needs the block-start value afterwards (the
+            # sequential cadence reads only post-round planes — no copy)
+            master_start = (jnp.copy(planes[0])
+                            if kd and cfg.schedule == "parallel" else None)
+            master_hist = None                         # (L, D0) post-round
             rows = [[] for _ in range(L)]
             times = []
             for lvl in range(fl.m):
@@ -371,10 +377,6 @@ class HeterogeneitySim:
                     decisions[lvl]
                 losses = None
                 if live or stats.banked or ripe:
-                    t = None
-                    if lvl > 0:
-                        t = (teacher if cfg.schedule == "parallel"
-                             else fl.params_of(0, planes[0]))
                     if ripe:
                         self._bank[lvl] = [b for b in self._bank[lvl]
                                            if b["round"] >= r]
@@ -386,10 +388,21 @@ class HeterogeneitySim:
                                                  ripe if live else [],
                                                  stats.banked, r)
                                 if buffered else None)
+                        kw = {}
+                        if lvl == 0:
+                            # per-round master planes feed the slaves'
+                            # teacher stacks (only needed for fused blocks)
+                            kw["want_history"] = kd and L > 1
+                        elif kd:
+                            kw["teacher_planes"] = self._teacher_planes(
+                                L, master_start, master_hist, planes[0])
                         out = fl.dispatch_rounds(
-                            lvl, members, planes[lvl], r, L, teacher=t,
-                            step_masks=masks, weights=weights, bank=bank)
+                            lvl, members, planes[lvl], r, L,
+                            step_masks=masks, weights=weights, bank=bank,
+                            **kw)
                         planes[lvl] = out.plane
+                        if lvl == 0 and kw.get("want_history"):
+                            master_hist = out.history
                         losses = np.asarray(out.losses)
                         if stats.banked:
                             bank_rows = out.bank[0]
@@ -432,6 +445,25 @@ class HeterogeneitySim:
                        for lvl in range(fl.m)}
         return report
 
+    def _teacher_planes(self, L: int, start, hist, cur):
+        """Per-round KD teacher planes for a slave block, at the schedule's
+        cadence.  Parallel (Eq. 9): the teacher for round r+j is the master
+        BEFORE that round — the block-start plane, then the master's
+        post-round planes shifted by one.  Sequential (Eq. 10): the teacher
+        is the master AFTER round r+j (the legacy engine reads ``params[0]``
+        once the master's round has run).  When the master ran no fused
+        block (empty or flush-only master round — the engine forces L=1
+        there — or a length-1 block), ``hist`` is None and the teacher
+        degrades to the single appropriate plane, which IS the legacy
+        per-round behaviour."""
+        if hist is not None:
+            if self.cfg.schedule == "parallel":
+                return self.fl.place_replicated(
+                    jnp.concatenate([start[None], hist[:-1]]))
+            return hist
+        t = start if self.cfg.schedule == "parallel" else cur
+        return self.fl.place_replicated(jnp.broadcast_to(t, (L,) + t.shape))
+
     @staticmethod
     def _clone_stats(s: ClusterRoundStats) -> ClusterRoundStats:
         """Fresh per-round copy of a block's frozen MAR decision stats."""
@@ -473,7 +505,9 @@ class HeterogeneitySim:
         for pid in banked_pids:
             bank_gain[members.index(pid)] = (
                 fl.assignment.n_eff.get(pid, 1) * fl.cfg.staleness_discount)
-        return (bank_plane, jnp.asarray(bank_w), jnp.asarray(bank_gain))
+        return (fl.place_member_sharded(bank_plane),
+                fl.place_member_sharded(jnp.asarray(bank_w)),
+                fl.place_member_sharded(jnp.asarray(bank_gain)))
 
     def _anchor_weights(self, entries: list, r: int, lvl: int):
         """Shared anchor math for flushes with no live contributors: the

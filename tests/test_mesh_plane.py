@@ -1,0 +1,212 @@
+"""Plane-sharded multi-device aggregation equivalence suite.
+
+The sharded plane ops (``aggregation.aggregate_plane_sharded`` & friends)
+and the mesh-sharded dispatch blocks must match their single-device
+counterparts to rtol 2e-4 — including non-divisible member counts (zero-
+weight-row padding), buffered-bank merges, and donation reuse.
+
+Coverage runs at three tiers:
+  * 1-device mesh tests — always (the shard_map path itself);
+  * 8-way in-process tests (``_eightway``) — skipped unless the process has
+    ≥8 devices; the CI mesh lane provides them via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``;
+  * one slow subprocess test re-running the ``_eightway`` tests under the
+    forced-device flag, so tier-1 exercises real multi-device execution
+    without polluting this process's single device.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import aggregation as agg
+from repro.core import server as srv
+from repro.core.families import mlp_family
+from repro.core.plane import pad_member_rows
+from repro.core.resources import participants_from_matrix
+from repro.data.partition import dirichlet_partition
+from repro.data.synthetic import make_classification, train_test_split
+from repro.launch.mesh import make_sim_mesh
+from repro.sim import HeterogeneitySim, SimConfig, make_trace, sample_profiles
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+eightway = pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="needs 8 forced host devices (CI mesh lane or the slow "
+           "subprocess wrapper below)")
+
+
+def _setup(mesh, n=6, samples=400, seed=0, fam=None, **cfg_kw):
+    ds = make_classification("synth-mnist", samples, seed=seed)
+    train, test = train_test_split(ds)
+    idx = dirichlet_partition(train.y, n, alpha=2.0, seed=seed)
+    parts = participants_from_matrix(sample_profiles(n, seed=seed),
+                                     n_data=[len(p) for p in idx])
+    cd = [{"x": train.x[p], "y": train.y[p]} for p in idx]
+    cfg = srv.FLConfig(steps_per_round=3, lr=0.08, seed=seed, local_batch=8,
+                       **({"compact_to": 1, "mar": 1e9,
+                           "rounds_per_dispatch": 4} | cfg_kw))
+    eng = srv.FedRAC(parts, cd, fam or mlp_family(), cfg, classes=10,
+                     mesh=mesh).setup()
+    testb = {"x": jnp.asarray(test.x), "y": jnp.asarray(test.y)}
+    return eng, testb
+
+
+def _allclose_trees(a, b, rtol=2e-4, atol=1e-5):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=rtol, atol=atol)
+
+
+# ------------------------------------------------------------ unit invariant
+def test_pad_member_rows_zero_weight_invariant():
+    """Zero-weight padding rows leave every weighted contraction untouched
+    — the invariant that lets non-divisible C ride any mesh axis."""
+    key = jax.random.PRNGKey(0)
+    plane = jax.random.normal(key, (5, 128))
+    w = agg.normalized_weights([3, 1, 4, 1, 5])
+    pp, pw = pad_member_rows(plane, w, 8)
+    assert pp.shape == (8, 128) and pw.shape == (8,)
+    np.testing.assert_allclose(np.asarray(agg.aggregate_plane(pp, pw)),
+                               np.asarray(agg.aggregate_plane(plane, w)),
+                               rtol=1e-6)
+    with pytest.raises(ValueError, match="cannot pad"):
+        pad_member_rows(plane, w, 3)
+
+
+# ------------------------------------------------------------ 1-device mesh
+def test_plane_sharded_ops_match_single_device():
+    """shard_map plane path on a 1×1 mesh ≡ single-device aggregate_plane /
+    fedavg_delta_plane / merge_buffered_plane (the multi-device equivalence
+    runs in the eightway tests below)."""
+    mesh = make_sim_mesh(1)
+    key = jax.random.PRNGKey(1)
+    plane = jax.random.normal(key, (5, 256))
+    w = agg.normalized_weights([3, 1, 4, 1, 5])
+    want = agg.aggregate_plane(plane, w)
+    np.testing.assert_allclose(
+        np.asarray(agg.aggregate_plane_sharded(mesh, plane, w)),
+        np.asarray(want), rtol=1e-6)
+    g = plane[0]
+    np.testing.assert_allclose(
+        np.asarray(agg.fedavg_delta_plane_sharded(mesh, g, plane, w)),
+        np.asarray(want - g), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(agg.merge_buffered_plane_sharded(
+            mesh, want * 0.5, plane, w * 0.5)),
+        np.asarray(want), rtol=1e-5, atol=1e-6)
+    # zero-total guard carries over to the sharded delta
+    dz = agg.fedavg_delta_plane_sharded(mesh, g, plane, jnp.zeros((5,)))
+    np.testing.assert_array_equal(np.asarray(dz), 0.0)
+
+
+def test_dispatch_mesh_1device_matches_unsharded():
+    """The mesh-wrapped dispatch block program on a 1-device mesh reproduces
+    the unsharded program's params and recorded history."""
+    outs = {}
+    for mesh in (None, make_sim_mesh(1)):
+        eng, testb = _setup(mesh)
+        m = list(eng.assignment.members[0])
+        p0 = eng.family.init(jax.random.PRNGKey(0), 0)
+        p, hist = eng._train_cluster_dispatch(0, m, 4, testb, p0,
+                                              record_every=2)
+        outs[mesh is None] = (p, hist)
+    _allclose_trees(outs[True][0], outs[False][0])
+    assert outs[True][1] == outs[False][1]
+
+
+def test_mesh_requires_dispatch_pipeline():
+    with pytest.raises(ValueError, match="rounds_per_dispatch"):
+        _setup(make_sim_mesh(1), rounds_per_dispatch=1)
+
+
+# ------------------------------------------------------- 8-way (in-process)
+@eightway
+def test_plane_sharded_ops_eightway_non_divisible():
+    """13 member rows on an 8-way mesh: zero-weight padding (not a
+    divisibility assert) keeps the sharded plane ops equal to the
+    single-device contraction — and the pytree aggregate_sharded accepts
+    the same non-divisible client count."""
+    mesh = make_sim_mesh(8)
+    key = jax.random.PRNGKey(2)
+    C = 13
+    plane = jax.random.normal(key, (C, 384))
+    w = agg.normalized_weights(np.arange(1, C + 1))
+    want = agg.aggregate_plane(plane, w)
+    np.testing.assert_allclose(
+        np.asarray(agg.aggregate_plane_sharded(mesh, plane, w)),
+        np.asarray(want), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(agg.merge_buffered_plane_sharded(
+            mesh, want * 0.25, plane, w * 0.75)),
+        np.asarray(want), rtol=1e-5, atol=1e-6)
+    stack = {"w": jax.random.normal(key, (C, 33)),
+             "b": jax.random.normal(key, (C, 5, 3))}
+    _allclose_trees(agg.aggregate_sharded(mesh, stack, w),
+                    agg.aggregate(stack, w), rtol=1e-5)
+
+
+@eightway
+def test_dispatch_mesh_eightway_matches_unsharded():
+    """A 6-member cluster (capacity 8 on the mesh — non-divisible C) fused
+    over 8 rounds: mesh-sharded dispatch == unsharded dispatch, history
+    exact, donation preserved (the input plane buffer dies)."""
+    outs = {}
+    for tag, mesh in (("plain", None), ("mesh", make_sim_mesh(8))):
+        eng, testb = _setup(mesh, pad_clusters=False)
+        m = list(eng.assignment.members[0])
+        assert len(m) == 6 and eng._capacity(len(m)) == (8 if mesh else 6)
+        p0 = eng.family.init(jax.random.PRNGKey(0), 0)
+        p, hist = eng._train_cluster_dispatch(0, m, 8, testb, p0,
+                                              record_every=4)
+        plane = eng.plane_of(0, eng.family.init(jax.random.PRNGKey(3), 0))
+        out = eng.dispatch_rounds(0, m, plane, 0, 2)
+        assert plane.is_deleted(), "donated plane must die on the mesh too"
+        assert not out.plane.is_deleted()
+        outs[tag] = (p, hist)
+    _allclose_trees(outs["plain"][0], outs["mesh"][0])
+    assert outs["plain"][1] == outs["mesh"][1]
+
+
+@eightway
+def test_dispatch_mesh_eightway_buffered_bank():
+    """Buffered async aggregation on the mesh: an all-violator cluster banks
+    every update (live weight sum 0 — the zero-total guard), the bank rides
+    the sharded scan carry, and telemetry + final params match the
+    unsharded engine."""
+    tel = {}
+    for tag, mesh in (("plain", None), ("mesh", make_sim_mesh(8))):
+        eng, testb = _setup(mesh, aggregation="buffered")
+        eng.specs[0].mar = 1e-9                    # everyone banks
+        sim = HeterogeneitySim(eng, make_trace("stable", 6, 4),
+                               SimConfig(rounds=4, mar_policy="buffer"))
+        rep = sim.run(testb)
+        tel[tag] = ([(r.round, [(c.level, sorted(c.banked), c.flushed)
+                                for c in r.clusters]) for r in rep.rows],
+                    sim.params[0])
+        for leaf in jax.tree.leaves(sim.params[0]):
+            assert np.isfinite(np.asarray(leaf)).all()
+    assert tel["plain"][0] == tel["mesh"][0]
+    _allclose_trees(tel["plain"][1], tel["mesh"][1])
+
+
+# ------------------------------------------------------ subprocess (tier-1)
+@pytest.mark.slow
+def test_mesh_suite_under_forced_host_devices():
+    """Tier-1 multi-device coverage: rerun the ``_eightway`` tests above in
+    a subprocess with 8 forced host devices (this process keeps 1)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["JAX_PLATFORMS"] = "cpu"
+    r = subprocess.run(
+        [sys.executable, "-m", "pytest", "-x", "-q",
+         os.path.abspath(__file__), "-k", "eightway"],
+        capture_output=True, text=True, timeout=560, env=env, cwd=REPO)
+    assert r.returncode == 0, r.stdout + "\n" + r.stderr[-3000:]
+    assert "3 passed" in r.stdout, r.stdout

@@ -47,6 +47,13 @@ the legacy one-round path and the unsharded fused path on the MLP family.
 Headline: sharded-R=8 vs legacy ≥1.2× on this container (the 8 virtual
 host devices share 2 physical cores, so the sharding itself is ~neutral
 here; the row pins the scaling machinery, real meshes supply the compute).
+
+``--mode mesh2d`` is the same comparison on a ``4x2`` (data × model) mesh:
+member rows split 4-way AND every plane-shaped buffer (global plane,
+buffered bank, teacher/history stacks) splits its COLUMNS 2-way along
+``model`` — the layout for member models too large to replicate per
+device.  Parameters all-gather transiently per round; aggregation stays
+one local (rows × columns) contraction + one psum over ``data``.
 """
 from __future__ import annotations
 
@@ -231,26 +238,34 @@ def run_dispatch_bench(n: int = 12, R: int = 8, reps: int = 4,
 
 # ------------------------------------------------------------ mesh bench
 def run_mesh_bench(n: int = 24, R: int = 8, reps: int = 3, seed: int = 0,
-                   mesh_n: int = 8, rounds: int = 64, steps: int = 2) -> dict:
+                   mesh_shape: str = "8", rounds: int = 64,
+                   steps: int = 2) -> dict:
     """Plane-sharded multi-device dispatch on the dispatch-bound MLP family:
-    the member axis of the fused R-round program splits over a ``mesh_n``-way
-    ``data`` mesh (per-round aggregation = local fedagg contraction + one
-    psum).  Reports median client-steps/s for the legacy one-round path, the
-    unsharded fused path, and the mesh-sharded fused path — the headline is
-    mesh vs legacy (≥1.2× on this container's 2-core CPU, where 8 virtual
-    devices add no compute; on real multi-host meshes the sharding itself
-    scales the fleet).  Requires ≥ ``mesh_n`` devices: run via ``--mode
-    mesh`` (subprocess sets XLA_FLAGS) or force host devices yourself."""
-    if jax.device_count() < mesh_n:
+    the member axis of the fused R-round program splits over the mesh
+    ``data`` axis (per-round aggregation = local fedagg contraction + one
+    psum over ``data``), and a 2D ``mesh_shape`` like ``"4x2"``
+    additionally column-shards the plane/bank/teacher buffers along
+    ``model`` (each device stores D/model_size plane columns; parameters
+    all-gather transiently per round — the ``--mode mesh2d`` row).  Reports
+    median client-steps/s for the legacy one-round path, the unsharded
+    fused path, and the mesh-sharded fused path — the headline is mesh vs
+    legacy (≥1.2× on this container's 2-core CPU, where the virtual devices
+    add no compute; on real multi-host meshes the sharding itself scales
+    the fleet and the 2D split divides per-device plane memory).  Requires
+    ≥ prod(mesh_shape) devices: run via ``--mode mesh``/``--mode mesh2d``
+    (subprocess sets XLA_FLAGS) or force host devices yourself."""
+    from repro.launch.mesh import make_sim_mesh, parse_sim_mesh_shape
+    shape = parse_sim_mesh_shape(mesh_shape)
+    n_dev = int(np.prod(shape))
+    if jax.device_count() < n_dev:
         raise RuntimeError(
-            f"mesh bench needs ≥{mesh_n} devices (have {jax.device_count()});"
-            " use --mode mesh, which re-executes under XLA_FLAGS="
-            f"--xla_force_host_platform_device_count={mesh_n}")
-    from repro.launch.mesh import make_sim_mesh
+            f"mesh bench needs ≥{n_dev} devices (have {jax.device_count()});"
+            " use --mode mesh/mesh2d, which re-execute under XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={n_dev}")
     engs = {"legacy_r1": build_micro_mlp(n, steps, seed, 1),
             "fused_r8": build_micro_mlp(n, steps, seed, R),
             "mesh_r8": build_micro_mlp(n, steps, seed, R,
-                                       mesh=make_sim_mesh(mesh_n))}
+                                       mesh=make_sim_mesh(shape))}
     members = {k: list(e.assignment.members[0]) for k, e in engs.items()}
     for k, e in engs.items():                        # compile all paths
         e._train_cluster(0, members[k], max(R, 2), None, record_every=10**9)
@@ -264,7 +279,7 @@ def run_mesh_bench(n: int = 24, R: int = 8, reps: int = 3, seed: int = 0,
             sps[k].append(n * steps * rounds / t.dt)
     med = {k: statistics.median(v) for k, v in sps.items()}
     return {"members": n, "rounds": rounds, "R": R, "steps": steps,
-            "devices": mesh_n,
+            "devices": n_dev, "mesh_shape": "x".join(map(str, shape)),
             "legacy_steps_per_s": round(med["legacy_r1"], 1),
             "fused_steps_per_s": round(med["fused_r8"], 1),
             "mesh_steps_per_s": round(med["mesh_r8"], 1),
@@ -273,22 +288,24 @@ def run_mesh_bench(n: int = 24, R: int = 8, reps: int = 3, seed: int = 0,
 
 
 def run_mesh_bench_subprocess(n: int = 24, R: int = 8, reps: int = 3,
-                              seed: int = 0, mesh_n: int = 8) -> dict:
+                              seed: int = 0, mesh_shape: str = "8") -> dict:
     """Re-execute this file with forced host devices (XLA_FLAGS must be set
     BEFORE jax initializes its backend, which importing this module already
     did in the calling process) and collect the mesh-bench JSON."""
+    from repro.launch.mesh import parse_sim_mesh_shape
+    n_dev = int(np.prod(parse_sim_mesh_shape(mesh_shape)))
     fd, out = tempfile.mkstemp(suffix=".json")
     os.close(fd)
     out = pathlib.Path(out)
     env = dict(os.environ)
-    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={mesh_n} "
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={n_dev} "
                         + env.get("XLA_FLAGS", "")).strip()
     env["JAX_PLATFORMS"] = "cpu"
     try:
         r = subprocess.run(
             [sys.executable, os.path.abspath(__file__), "--mode", "mesh-inner",
              "--members", str(n), "--dispatch-r", str(R), "--reps", str(reps),
-             "--seed", str(seed), "--mesh-devices", str(mesh_n),
+             "--seed", str(seed), "--mesh-shape", str(mesh_shape),
              "--json", str(out)],
             capture_output=True, text=True, timeout=560, env=env)
         if r.returncode != 0:
@@ -406,6 +423,19 @@ def bench_sim_mesh():
                f"sharding_overhead={res['sharding_overhead']}")
 
 
+def bench_sim_mesh2d():
+    """benchmarks/run.py suite: 2D (data × model) plane-sharded dispatch on
+    a forced-host-device ``4x2`` mesh — member rows split 4-way, plane/bank/
+    teacher columns split 2-way (each device stores half the plane)."""
+    res = run_mesh_bench_subprocess(n=24, R=8, reps=3, mesh_shape="4x2")
+    sps = res["mesh_steps_per_s"]
+    yield ("sim/mesh2d_sharded_r8", 1e6 / max(sps, 1e-9),
+           f"client_steps_per_s={sps};devices={res['devices']};"
+           f"mesh_shape={res['mesh_shape']};"
+           f"speedup_vs_legacy={res['speedup_vs_legacy']};"
+           f"sharding_overhead={res['sharding_overhead']}")
+
+
 def bench_sim_dispatch():
     """benchmarks/run.py suite: fused multi-round dispatch vs legacy rounds
     on the dispatch-bound MLP cluster (CPU-budget scale; the micro-LM
@@ -444,14 +474,18 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", default="cluster",
                     choices=["cluster", "padding", "dispatch", "mesh",
-                             "mesh-inner", "all"],
-                    help="'mesh' re-executes itself under 8 forced host "
-                         "devices and times the plane-sharded dispatch "
-                         "('mesh-inner' is that subprocess entry)")
+                             "mesh2d", "mesh-inner", "all"],
+                    help="'mesh' re-executes itself under forced host "
+                         "devices and times the plane-sharded dispatch; "
+                         "'mesh2d' is the same on a 4x2 (data × model) "
+                         "mesh with plane columns sharded 2-way "
+                         "('mesh-inner' is their subprocess entry)")
     ap.add_argument("--dispatch-r", type=int, default=8,
                     help="dispatch mode: rounds fused per program")
-    ap.add_argument("--mesh-devices", type=int, default=8,
-                    help="mesh mode: data-axis size (= forced host devices)")
+    ap.add_argument("--mesh-shape", default=None, metavar="DATA[xMODEL]",
+                    help="mesh modes: mesh shape, e.g. '8' or '4x2' "
+                         "(forced host devices = their product; defaults "
+                         "to '8' for --mode mesh, '4x2' for --mode mesh2d)")
     ap.add_argument("--family", default="lm", choices=["lm", "cnn"])
     ap.add_argument("--members", type=int, default=16)
     ap.add_argument("--rounds", type=int, default=20)
@@ -468,24 +502,26 @@ def main(argv=None):
                     help="also write results as JSON (CI tracks the suite "
                          "via benchmarks/run.py --json BENCH_core.json)")
     args = ap.parse_args(argv)
-    if (args.mode in ("dispatch", "mesh", "mesh-inner", "all")
+    if (args.mode in ("dispatch", "mesh", "mesh2d", "mesh-inner", "all")
             and args.dispatch_r < 2):
         ap.error("--dispatch-r must be ≥ 2 (R=1 IS the legacy baseline)")
+    if args.mesh_shape is None:
+        args.mesh_shape = "4x2" if args.mode == "mesh2d" else "8"
 
     results = {}
-    if args.mode in ("mesh", "mesh-inner"):
-        if args.mode == "mesh":
+    if args.mode in ("mesh", "mesh2d", "mesh-inner"):
+        if args.mode in ("mesh", "mesh2d"):
             res = run_mesh_bench_subprocess(n=args.members, R=args.dispatch_r,
                                             reps=args.reps, seed=args.seed,
-                                            mesh_n=args.mesh_devices)
+                                            mesh_shape=args.mesh_shape)
         else:
             res = run_mesh_bench(n=args.members, R=args.dispatch_r,
                                  reps=args.reps, seed=args.seed,
-                                 mesh_n=args.mesh_devices)
+                                 mesh_shape=args.mesh_shape)
         results["mesh"] = res
         print(f"mlp cluster of C={res['members']} members, "
               f"{res['steps']} local steps × {res['rounds']} rounds, "
-              f"{res['devices']}-way data mesh")
+              f"{res['mesh_shape']} (data × model) mesh")
         print(f"  legacy (R=1, 1 dev) : {res['legacy_steps_per_s']:10.1f} "
               f"client-steps/s")
         print(f"  fused  (R={res['R']}, 1 dev) : "

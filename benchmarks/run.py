@@ -32,6 +32,7 @@ def _suites(fast: bool):
         ("sim/padding", bench_sim.bench_sim_padding),
         ("sim/dispatch", bench_sim.bench_sim_dispatch),
         ("sim/mesh", bench_sim.bench_sim_mesh),
+        ("sim/mesh2d", bench_sim.bench_sim_mesh2d),
     ]
     if not fast:
         suites += [

@@ -145,45 +145,74 @@ def _plane_rows_for_mesh(mesh, C: int, axis: str) -> int:
 
 
 def aggregate_plane_sharded(mesh, plane, weights, *, axis: str = "data",
+                            model_axis: str | None = None,
                             use_kernel: bool | None = None):
-    """plane: (C, D) fp32 sharded along ``axis``; weights: (C,) raw or
-    normalized → replicated (D,) Σ w_i p_i.  One local contraction per
-    device + one psum."""
+    """plane: (C, D) fp32 sharded along ``axis`` (and, with ``model_axis``,
+    column-sharded along it); weights: (C,) raw or normalized → (D,)
+    Σ w_i p_i, data-replicated (column-sharded along ``model_axis`` when
+    given).  Each device contracts its LOCAL (data, model) subgrid and ONE
+    psum over ``axis`` finishes the job — columns never need reduction, so
+    the model axis contributes no collective at all."""
     from repro.core.plane import pad_member_rows
 
     plane, w = pad_member_rows(
         plane, jnp.asarray(weights, jnp.float32),
         _plane_rows_for_mesh(mesh, plane.shape[0], axis))
+    D = plane.shape[1]
+    m = mesh.shape[model_axis] if model_axis else 1
+    pad_d = (-D) % m
+    if pad_d:
+        # zero columns contract to zero columns — sliced back off below
+        plane = jnp.concatenate(
+            [plane, jnp.zeros((plane.shape[0], pad_d), plane.dtype)], axis=1)
 
     def local_agg(p, wl):
         return jax.lax.psum(
             aggregate_plane(p, wl, use_kernel=use_kernel), axis)
 
     fn = _shard_map(local_agg, mesh=mesh,
-                    in_specs=(P(axis, None), P(axis)), out_specs=P())
-    return fn(plane, w)
+                    in_specs=(P(axis, model_axis), P(axis)),
+                    out_specs=P(model_axis))
+    out = fn(plane, w)
+    return out[:D] if pad_d else out
 
 
 def fedavg_delta_plane_sharded(mesh, global_plane, plane, weights, *,
-                               axis: str = "data"):
+                               axis: str = "data",
+                               model_axis: str | None = None):
     """Sharded server update as an aggregated delta on the plane.  A zero
     total weight yields a zero delta (same guard as ``fedavg_delta``)."""
     w = jnp.asarray(weights, jnp.float32)
-    agg = aggregate_plane_sharded(mesh, plane, w, axis=axis)
+    agg = aggregate_plane_sharded(mesh, plane, w, axis=axis,
+                                  model_axis=model_axis)
     return jnp.where(jnp.sum(w) > 0.0, agg - global_plane,
                      jnp.zeros_like(global_plane))
 
 
 def merge_buffered_plane_sharded(mesh, partial_plane, bank_plane,
-                                 bank_weights, *, axis: str = "data"):
+                                 bank_weights, *, axis: str = "data",
+                                 model_axis: str | None = None):
     """Sharded ``merge_buffered_plane``: the banked rows live on the same
-    mesh axis as the member plane; their discounted contraction joins the
-    partial sum through the same local-reduce + psum path."""
+    mesh axes as the member plane; their discounted contraction joins the
+    partial sum through the same local-reduce + psum-over-``axis`` path."""
     return partial_plane + aggregate_plane_sharded(
-        mesh, bank_plane, bank_weights, axis=axis)
+        mesh, bank_plane, bank_weights, axis=axis, model_axis=model_axis)
 
 
 # ------------------------------------------------------------ buffered async
+def compress_bank_rows(rows: list, us: list, cap: int):
+    """Fit a banked backlog into ``cap`` carry slots: when membership shrank
+    below the backlog (event between dispatch blocks), ALL rows compress
+    into ONE weighted-average row.  Σu and Σu·p are preserved exactly, so
+    the round-0 bank merge — which only ever sees the products u·p and the
+    total — is unchanged.  Returns (rows, us) untouched when they fit."""
+    if len(rows) <= cap:
+        return rows, us
+    u = jnp.asarray(us, jnp.float32)
+    total = float(u.sum())
+    return ([aggregate_plane(jnp.stack(rows), u / total)], [total])
+
+
 def staleness_weights(n_list, age_list, discount: float) -> list[float]:
     """Raw weights for banked (late) contributions: the member's data weight
     n_b geometrically discounted by how many rounds its update sat in the

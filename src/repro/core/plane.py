@@ -17,6 +17,7 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 from jax.flatten_util import ravel_pytree
+from jax.sharding import PartitionSpec as P
 
 # Multiple every plane length is padded to: keeps the Pallas fedagg block
 # grid divisible without per-call padding, and matches the 128-lane TPU
@@ -45,11 +46,40 @@ class PlaneSpec:
         return self.unravel(plane[:self.d])
 
 
-def make_plane_spec(params_template) -> PlaneSpec:
+def make_plane_spec(params_template, *, model_size: int = 1) -> PlaneSpec:
+    """``model_size`` > 1 column-shards the plane over a mesh ``model``
+    axis: D is padded to a multiple of ``model_size × PLANE_ALIGN`` so every
+    device's column slice is itself PLANE_ALIGN-aligned and the Pallas
+    ``fedagg`` tile grid stays divisible per device."""
     flat, unravel = ravel_pytree(params_template)
     d = flat.shape[0]
-    d_pad = -(-d // PLANE_ALIGN) * PLANE_ALIGN
+    align = PLANE_ALIGN * max(1, int(model_size))
+    d_pad = -(-d // align) * align
     return PlaneSpec(d=d, d_pad=d_pad, unravel=unravel)
+
+
+def plane_specs(data_axis: str = "data", model_axis: str | None = None):
+    """PartitionSpecs for every plane-shaped buffer of the dispatch path.
+
+    Mirrors ``launch/sharding.param_specs``' role for the FL plane world:
+    one place decides how each buffer splits over the (data, model) mesh.
+    Member rows (shard packs, step masks, weights, bank rows) shard along
+    ``data_axis``; plane COLUMNS shard along ``model_axis`` when given (the
+    2D mesh for member models too large to replicate per device) — the
+    global (D,) plane, the (capacity, D) member/bank planes, and (R, D)
+    teacher/history stacks all split column-wise, and aggregation contracts
+    per-device on the (data, model) subgrid with a psum over ``data`` only
+    (columns never need reduction).  ``model_axis=None`` degenerates to the
+    1D member-sharded layout (plane replicated)."""
+    m = model_axis
+    return {
+        "plane": P(m) if m else P(),      # (D,) global parameter plane
+        "members": P(data_axis, m),       # (capacity, D) member/bank planes
+        "stack": P(None, m),              # (R, D) teacher/history stacks
+        "rows": P(data_axis),             # (capacity,) weights/gains
+        "masks": P(data_axis, None),      # (capacity, S) step masks
+        "losses": P(None, data_axis),     # (R, capacity) per-round losses
+    }
 
 
 def pad_member_rows(plane: jnp.ndarray, weights: jnp.ndarray, rows: int):

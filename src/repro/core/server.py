@@ -18,7 +18,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core import aggregation, assignment as asg, clustering, compaction
 from repro.core import cost_model, rounds as rnd
 from repro.core.client import local_update, make_cluster_update
-from repro.core.plane import make_plane_spec
+from repro.core.plane import make_plane_spec, plane_specs
 from repro.core.resources import (LAMBDA_PAPER, Participant, resource_matrix,
                                   unit_normalize)
 from repro.data import device_sampler
@@ -117,7 +117,8 @@ class FedRACResult:
 class FedRAC:
     def __init__(self, parts: list[Participant], client_data: list[dict],
                  family: FLModelFamily, cfg: FLConfig, classes: int, *,
-                 mesh=None, mesh_axis: str = "data"):
+                 mesh=None, mesh_axis: str = "data",
+                 mesh_model_axis: str = "model"):
         if cfg.aggregation not in ("sync", "buffered"):
             raise ValueError(f"unknown aggregation {cfg.aggregation!r}")
         if cfg.rounds_per_dispatch > 1 and not cfg.vmap_clusters:
@@ -134,13 +135,26 @@ class FedRAC:
         self.family = family
         self.cfg = cfg
         self.classes = classes
-        # member-sharded execution: the dispatch block program runs under
+        # mesh-sharded execution: the dispatch block program runs under
         # shard_map with the capacity axis split along mesh `mesh_axis` —
-        # each device trains its local member rows and one psum realizes
-        # the §III-B upload as an all-reduce.  None = single-device.
+        # each device trains its local member rows and one psum over that
+        # axis realizes the §III-B upload as an all-reduce.  A 2D
+        # (data × model) mesh additionally splits every plane COLUMN-wise
+        # along `mesh_model_axis`: the global plane, buffered bank and
+        # per-round teacher/history stacks live distributed (member models
+        # too large for one device stop replicating), parameters are
+        # all-gathered transiently for the local forward, and each device
+        # aggregates only its own (member rows × column slice) subgrid —
+        # the model axis needs no reduction at all.  None = single-device.
         self.mesh = mesh
         self.mesh_axis = mesh_axis
         self._mesh_n = int(mesh.shape[mesh_axis]) if mesh is not None else 1
+        self._mesh_m = (int(dict(mesh.shape).get(mesh_model_axis, 1))
+                        if mesh is not None else 1)
+        # None when the model axis is absent or trivial: every 1D code path
+        # (and its compiled programs) is exactly the pre-2D one.
+        self.model_axis = mesh_model_axis if self._mesh_m > 1 else None
+        self._pspecs = plane_specs(mesh_axis, self.model_axis)
         # (level, use_kd, capacity, want_stack, …) -> jitted round programs
         self._programs = {}
         # dispatch-path caches: level -> PlaneSpec; (level, members) ->
@@ -288,23 +302,44 @@ class FedRAC:
     # ------------------------------------------------------------ plane
     def plane_spec(self, level: int):
         """Flat-parameter-plane recipe for one level (cached; the template
-        init is shape-only)."""
+        init is shape-only).  On a 2D mesh D pads to a multiple of
+        ``model_size × PLANE_ALIGN`` so each device's column slice keeps the
+        Pallas fedagg tile grid aligned."""
         if level not in self._plane_specs:
             self._plane_specs[level] = make_plane_spec(
-                self.family.init(jax.random.PRNGKey(0), level))
+                self.family.init(jax.random.PRNGKey(0), level),
+                model_size=self._mesh_m)
         return self._plane_specs[level]
 
     def plane_of(self, level: int, params) -> jnp.ndarray:
-        """Ravel a params pytree into its (D_pad,) fp32 plane (committed
-        replicated on the mesh, so every dispatch call sees one input
-        sharding signature and block programs never retrace)."""
-        return self.place_replicated(self.plane_spec(level).to_plane(params))
+        """Ravel a params pytree into its (D_pad,) fp32 plane (committed to
+        its mesh sharding, so every dispatch call sees one input sharding
+        signature and block programs never retrace)."""
+        return self.place_plane(self.plane_spec(level).to_plane(params))
 
-    def place_replicated(self, x):
-        """Commit an array replicated over the mesh (no-op without one)."""
+    def place_plane(self, x):
+        """Commit a (D,) plane to its mesh sharding: column-sharded along
+        the model axis on a 2D mesh, replicated otherwise."""
         if self.mesh is None:
             return x
-        return jax.device_put(x, NamedSharding(self.mesh, P()))
+        return jax.device_put(x, NamedSharding(self.mesh,
+                                               self._pspecs["plane"]))
+
+    def place_plane_stack(self, x):
+        """Commit an (R, D) teacher/history plane stack (rounds replicated,
+        columns model-sharded on a 2D mesh)."""
+        if self.mesh is None:
+            return x
+        return jax.device_put(x, NamedSharding(self.mesh,
+                                               self._pspecs["stack"]))
+
+    def place_member_plane(self, x):
+        """Commit a (capacity, D) member/bank plane: rows member-sharded,
+        columns model-sharded on a 2D mesh."""
+        if self.mesh is None:
+            return x
+        return jax.device_put(x, NamedSharding(self.mesh,
+                                               self._pspecs["members"]))
 
     def place_member_sharded(self, x):
         """Commit an array sharded along the member axis (no-op without a
@@ -522,15 +557,23 @@ class FedRAC:
         (capacity) axis split along ``mesh_axis``: every device trains its
         local member rows, the per-round aggregation contracts locally
         (``aggregate_plane`` — the Pallas fedagg kernel on TPU) and ONE psum
-        per round completes the §III-B upload all-reduce; the plane and the
-        per-round teacher stack stay replicated, donation is preserved, and
-        the buffered bank rows ride the carry sharded like the members they
-        came from."""
+        per round completes the §III-B upload all-reduce; donation is
+        preserved, and the buffered bank rows ride the carry sharded like
+        the members they came from.  On a 1D mesh the plane and the
+        per-round teacher stack stay replicated.  On a 2D (data × model)
+        mesh they instead split COLUMN-wise along the model axis — each
+        device stores only its D/model_size slice of the plane, bank and
+        teacher/history stacks.  Per round the plane (and teacher) columns
+        are all-gathered transiently for the local forward, each device
+        contracts its (member rows × column slice) subgrid, and the same
+        single psum over ``mesh_axis`` finishes the FedAvg — columns never
+        need reduction, so the model axis adds no collective beyond the
+        gather."""
         cfg = self.cfg
         key = ("dispatch", level, use_kd, capacity, R, balanced, banked,
                want_history, cfg.lr, cfg.kd_T, cfg.kd_alpha, cfg.seed,
                cfg.steps_per_round, cfg.local_batch, cfg.donate_plane,
-               t_per_round, self._mesh_n)
+               t_per_round, self._mesh_n, self._mesh_m)
         if key in self._programs:
             return self._programs[key]
         loss_fn = jax.tree_util.Partial(self.family.loss_and_logits, level)
@@ -541,6 +584,21 @@ class FedRAC:
         t_spec = self.plane_spec(0) if (use_kd and t_per_round) else None
         steps, batch, seed = cfg.steps_per_round, cfg.local_batch, cfg.seed
         axis = self.mesh_axis if self.mesh is not None else None
+        maxis = self.model_axis if self.mesh is not None else None
+
+        def _gather_cols(plane_loc):
+            """Local column slice -> full plane (2D mesh), else identity."""
+            if maxis is None:
+                return plane_loc
+            return jax.lax.all_gather(plane_loc, maxis, tiled=True)
+
+        def _local_cols(plane_full):
+            """(C, D_full) member plane -> this device's column slice."""
+            if maxis is None:
+                return plane_full
+            d_loc = plane_full.shape[1] // self._mesh_m
+            return jax.lax.dynamic_slice_in_dim(
+                plane_full, jax.lax.axis_index(maxis) * d_loc, d_loc, axis=1)
 
         def one_round(g, bank_p, bank_w, r, shards, n_i, tables,
                       counts, step_masks, weights, teacher, offset):
@@ -555,18 +613,21 @@ class FedRAC:
                                                      offset=offset)
             batches = jax.vmap(lambda sh, ix: self._batch_from_gathered(
                 jax.tree.map(lambda a: a[ix], sh)))(shards, idx)
-            params = spec.to_params(g)
+            params = spec.to_params(_gather_cols(g))
             p_stack = jax.tree.map(
                 lambda x: jnp.broadcast_to(x[None], (C_loc,) + x.shape),
                 params)
             teachers = None
             if use_kd:
-                t_params = (t_spec.to_params(teacher) if t_per_round
-                            else teacher)
+                t_params = (t_spec.to_params(_gather_cols(teacher))
+                            if t_per_round else teacher)
                 teachers = jax.vmap(
                     jax.vmap(lambda b: t_loss_fn(t_params, b)[1]))(batches)
             new_stack, losses = update(p_stack, batches, step_masks, teachers)
-            new_plane = jax.vmap(spec.to_plane)(new_stack)
+            # keep only this device's column slice of the updated members:
+            # the carry plane, bank rows and aggregate all live column-
+            # sharded, so the full-width member plane is transient
+            new_plane = _local_cols(jax.vmap(spec.to_plane)(new_stack))
             total = jnp.sum(weights) + (jnp.sum(bank_w) if banked else 0.0)
             if axis is not None:
                 total = jax.lax.psum(total, axis)
@@ -577,6 +638,12 @@ class FedRAC:
                                                          bank_w / denom)
             agg = jax.lax.psum(local, axis) if axis is not None else local
             g_next = jnp.where(total > 0.0, agg, g)
+            if maxis is not None:
+                # every model column computes identical losses (same batches,
+                # same gathered params); the pmean is numerically a no-op
+                # that PROVES the model-axis replication the losses
+                # out_spec demands
+                losses = jax.lax.pmean(losses, maxis)
             return g_next, new_plane, losses
 
         def _offset(step_masks):
@@ -625,21 +692,24 @@ class FedRAC:
 
         fn = block_fn
         if axis is not None:
-            Pm, Pr = P(axis), P()
+            sp = self._pspecs
+            Pm, Pr = sp["rows"], P()
+            Pg, Pmm = sp["plane"], sp["members"]
             t_in = None
             if use_kd:
-                t_in = (Pr if t_per_round
+                t_in = (sp["stack"] if t_per_round
                         else replicated_specs(teacher_example))
             tail = (member_specs(pack["shards"], axis), Pm,
                     member_specs(pack["tables"], axis),
-                    member_specs(pack["counts"], axis), Pr, Pm, Pm)
-            ys_specs = (P(None, axis),) + ((Pr,) if want_history else ())
+                    member_specs(pack["counts"], axis), Pr, sp["masks"], Pm)
+            ys_specs = (sp["losses"],) + ((sp["stack"],)
+                                          if want_history else ())
             if banked:
-                in_specs = (Pr, Pm, Pm) + tail + (Pm, t_in)
-                out_specs = (Pr, Pm, Pm) + ys_specs
+                in_specs = (Pg, Pmm, Pm) + tail + (Pm, t_in)
+                out_specs = (Pg, Pmm, Pm) + ys_specs
             else:
-                in_specs = (Pr,) + tail + (t_in,)
-                out_specs = (Pr,) + ys_specs
+                in_specs = (Pg,) + tail + (t_in,)
+                out_specs = (Pg,) + ys_specs
             fn = aggregation._shard_map(block_fn, mesh=self.mesh,
                                         in_specs=in_specs,
                                         out_specs=out_specs)

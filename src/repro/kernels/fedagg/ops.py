@@ -36,8 +36,12 @@ def aggregate_plane(plane, weights, *, block_d: int = 2048,
     plane aggregation (``aggregation.aggregate_plane_sharded`` and the
     mesh-sharded dispatch program): C is then the device's LOCAL member-row
     count — the zero-weight padding rows that make C divisible by the mesh
-    axis contract to nothing — and one psum outside completes the
-    all-reduce."""
+    axis contract to nothing — and one psum over ``data`` outside completes
+    the all-reduce.  On a 2D (data × model) mesh D is the device's LOCAL
+    column slice (``core.plane.make_plane_spec(model_size=…)`` pads the
+    global plane to a multiple of ``model_size × PLANE_ALIGN`` precisely so
+    this per-device grid stays block-divisible); column slices never need
+    reducing, so no collective is added."""
     interpret = _interpret_default() if interpret is None else interpret
     bd = _pick_block(plane.shape[1], block_d)
     return weighted_aggregate(plane.astype(jnp.float32),

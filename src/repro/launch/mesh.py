@@ -23,11 +23,9 @@ def make_host_mesh(n_data: int = 1, n_model: int = 1):
     return jax.make_mesh((n_data, n_model), ("data", "model"))
 
 
-def make_sim_mesh(shape):
-    """Mesh for member-sharded FL simulation (``sim_run --mesh-shape``):
-    the ``data`` axis shards the cluster member axis of the dispatch-path
-    plane programs.  ``shape`` is an int (data-axis size), an ``"8"`` /
-    ``"8x1"`` string, or a tuple ``(data[, model])``."""
+def parse_sim_mesh_shape(shape) -> tuple:
+    """Normalize a sim-mesh shape — int, ``"8"``/``"8x1"``/``"4x2"`` string,
+    or tuple — to a validated ``(data, model)`` pair."""
     if isinstance(shape, str):
         shape = tuple(int(s) for s in shape.lower().replace("×", "x")
                       .split("x"))
@@ -40,4 +38,14 @@ def make_sim_mesh(shape):
     n_model = int(shape[1]) if len(shape) > 1 else 1
     if n_data < 1 or n_model < 1:
         raise ValueError(f"mesh axes must be ≥ 1, got {shape}")
-    return make_host_mesh(n_data, n_model)
+    return n_data, n_model
+
+
+def make_sim_mesh(shape):
+    """Mesh for mesh-sharded FL simulation (``sim_run --mesh-shape``): the
+    ``data`` axis shards the cluster member axis of the dispatch-path plane
+    programs, and a non-trivial ``model`` axis column-shards the parameter
+    plane / bank / teacher stacks (2D dispatch for member models too large
+    to replicate per device).  ``shape`` is an int (data-axis size), an
+    ``"8"`` / ``"8x1"`` / ``"4x2"`` string, or a tuple ``(data[, model])``."""
+    return make_host_mesh(*parse_sim_mesh_shape(shape))

@@ -174,9 +174,13 @@ def to_named(mesh, specs):
 # ---------------------------------------------------- FL member-axis planes
 # Specs for the mesh-sharded dispatch path (core/server.py): cluster members
 # shard along `data` on every leading axis — shard packs (capacity, N, …),
-# step masks (capacity, S), weights (capacity,), the bank plane
-# (capacity, D) — while the flat parameter plane (D,) stays replicated and
-# leaves the program through a psum.
+# step masks (capacity, S), weights (capacity,).  The plane-shaped buffers
+# (global plane (D,), member/bank planes (capacity, D), teacher/history
+# stacks (R, D)) get their split from ``core.plane.plane_specs`` — the
+# param_specs analogue for the FL plane world: on a 1D mesh the plane is
+# replicated; on a 2D (data × model) mesh its COLUMNS shard along `model`.
+# (Import it from ``repro.core.plane``: a re-export here would close the
+# sharding → core package → server → sharding import cycle.)
 
 
 def member_specs(tree, axis: str = "data"):

@@ -61,8 +61,10 @@ def run(args):
           f"MAR(master)={eng.specs[0].mar:.2f}s "
           f"members={ {l: len(v) for l, v in eng.assignment.members.items()} }")
     if eng.mesh is not None:
+        plane_txt = (f", plane columns sharded {eng._mesh_m}-way"
+                     if eng._mesh_m > 1 else "")
         print(f"mesh={dict(eng.mesh.shape)} "
-              f"(member axis sharded {eng._mesh_n}-way)")
+              f"(member axis sharded {eng._mesh_n}-way{plane_txt})")
     trace = make_trace(args.trace, args.participants, args.rounds,
                        seed=args.seed, dropout_rate=args.dropout_rate,
                        drift_rate=args.drift_rate, spike_rate=args.spike_rate)
@@ -100,12 +102,15 @@ def main(argv=None):
                          "program between events (in-program sampling, "
                          "flat-plane aggregation, donated buffers)")
     ap.add_argument("--mesh-shape", default=None, metavar="DATA[xMODEL]",
-                    help="shard the dispatch-path member axis over a device "
-                         "mesh, e.g. '8' or '8x1' (requires "
-                         "--rounds-per-dispatch >1; per-round plane "
-                         "aggregation becomes local-reduce + one psum; on "
-                         "CPU force devices with XLA_FLAGS="
-                         "--xla_force_host_platform_device_count=8)")
+                    help="shard the dispatch path over a device mesh, e.g. "
+                         "'8', '8x1' (member axis only) or '4x2' (members "
+                         "along data AND plane/bank/teacher columns along "
+                         "model — for member models too large to replicate "
+                         "per device).  Requires --rounds-per-dispatch >1; "
+                         "per-round plane aggregation becomes local "
+                         "(data × model)-subgrid reduce + one psum over "
+                         "data; on CPU force devices with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=8")
     ap.add_argument("--schedule", default="parallel",
                     choices=["parallel", "sequential"])
     ap.add_argument("--dropout-rate", type=float, default=0.15)

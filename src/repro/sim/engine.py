@@ -458,11 +458,11 @@ class HeterogeneitySim:
         per-round behaviour."""
         if hist is not None:
             if self.cfg.schedule == "parallel":
-                return self.fl.place_replicated(
+                return self.fl.place_plane_stack(
                     jnp.concatenate([start[None], hist[:-1]]))
             return hist
         t = start if self.cfg.schedule == "parallel" else cur
-        return self.fl.place_replicated(jnp.broadcast_to(t, (L,) + t.shape))
+        return self.fl.place_plane_stack(jnp.broadcast_to(t, (L,) + t.shape))
 
     @staticmethod
     def _clone_stats(s: ClusterRoundStats) -> ClusterRoundStats:
@@ -484,16 +484,10 @@ class HeterogeneitySim:
         us = aggregation.staleness_weights(
             [b["n_eff"] for b in ripe], [r - b["round"] for b in ripe],
             fl.cfg.staleness_discount)
-        rows = [b["plane"] for b in ripe]
-        if len(rows) > cap:
-            # membership shrank below the banked backlog (event between
-            # blocks): compress everything into ONE weighted-average row —
-            # Σu and Σu·p are preserved exactly, so the round-0 merge is
-            # unchanged
-            u = jnp.asarray(us, jnp.float32)
-            rows = [aggregation.aggregate_plane(jnp.stack(rows),
-                                                u / float(u.sum()))]
-            us = [float(u.sum())]
+        # membership may have shrunk below the banked backlog (event between
+        # blocks): Σu-preserving compression fits it into the carry slots
+        rows, us = aggregation.compress_bank_rows(
+            [b["plane"] for b in ripe], us, cap)
         bank_plane = jnp.zeros((cap, dp), jnp.float32)
         bank_w = np.zeros(cap, np.float32)
         if rows:
@@ -505,7 +499,7 @@ class HeterogeneitySim:
         for pid in banked_pids:
             bank_gain[members.index(pid)] = (
                 fl.assignment.n_eff.get(pid, 1) * fl.cfg.staleness_discount)
-        return (fl.place_member_sharded(bank_plane),
+        return (fl.place_member_plane(bank_plane),
                 fl.place_member_sharded(jnp.asarray(bank_w)),
                 fl.place_member_sharded(jnp.asarray(bank_gain)))
 
@@ -532,11 +526,14 @@ class HeterogeneitySim:
             anchored, [b["params"] for b in entries], us)
 
     def _anchored_merge_plane(self, cur, entries: list, r: int, lvl: int):
-        """Anchored flush over the flat parameter plane (dispatch engine)."""
+        """Anchored flush over the flat parameter plane (dispatch engine).
+        The result is re-committed to the plane's mesh sharding so the next
+        dispatch block sees the one input signature it compiled for."""
         wa, us = self._anchor_weights(entries, r, lvl)
-        return wa * cur + aggregation.aggregate_plane(
-            jnp.stack([b["plane"] for b in entries]),
-            jnp.asarray(us, jnp.float32))
+        return self.fl.place_plane(
+            wa * cur + aggregation.aggregate_plane(
+                jnp.stack([b["plane"] for b in entries]),
+                jnp.asarray(us, jnp.float32)))
 
     def _terminal_flush(self, params: dict, rounds: int, report,
                         merge=None) -> None:

@@ -1,7 +1,8 @@
-"""Device-resident round pipeline (FLConfig.rounds_per_dispatch): R-block
-numerical invariance, donation semantics, compile stability under
-Procedure-2 churn, flat-plane aggregation, and the padded-label dtype
-regression."""
+"""Device-resident round pipeline (FLConfig.rounds_per_dispatch): simulator
+telemetry/KD/buffered R-invariance, donation semantics, compile stability
+under Procedure-2 churn, flat-plane aggregation, and the padded-label dtype
+regression.  The cross-path numerical equivalence (loop/vmap/dispatch ×
+mesh shapes) moved to ``tests/test_equivalence_matrix.py``."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -43,30 +44,6 @@ def _allclose_trees(a, b, rtol=2e-4, atol=1e-5):
 
 
 # ------------------------------------------------------------ R-invariance
-def test_dispatch_r4_matches_single_round_blocks():
-    """The fast-lane equivalence check: rounds_per_dispatch=4 reproduces the
-    same training as single-round dispatch blocks (batch streams depend
-    only on the absolute round index), for the balanced master AND a KD
-    slave cluster — params and recorded history both match."""
-    out = {}
-    for R in (1, 4):
-        eng, testb = _setup(n=6, compact_to=2, rounds_per_dispatch=R)
-        m0 = list(eng.assignment.members[0])
-        p0 = eng.family.init(jax.random.PRNGKey(0), 0)
-        p, hist = eng._train_cluster_dispatch(0, m0, 4, testb, p0,
-                                              record_every=2)
-        teach = eng.family.init(jax.random.PRNGKey(42), 0)
-        m1 = list(eng.assignment.members[1])
-        p1 = eng.family.init(jax.random.PRNGKey(1), 1)
-        pk, _ = eng._train_cluster_dispatch(1, m1, 4, testb, p1,
-                                            teacher=teach,
-                                            record_every=10 ** 9)
-        out[R] = (p, hist, pk)
-    _allclose_trees(out[1][0], out[4][0])
-    _allclose_trees(out[1][2], out[4][2])
-    assert out[1][1] == out[4][1]
-
-
 def test_dispatch_intra_block_history_is_exact():
     """A record boundary strictly inside a block is served from the
     scan-stacked per-round planes — identical history to unfused blocks."""

@@ -1,0 +1,365 @@
+"""Cross-path equivalence matrix: ONE golden suite for the five execution
+paths × mesh shapes × aggregation schedules.
+
+The paths under test:
+  * ``loop``      — an independent per-pid reference loop (host FedAvg);
+  * ``vmap``      — ``FedRAC.cluster_round`` (batched one-round program);
+  * ``dispatch``  — scan-fused blocks (``FedRAC.dispatch_rounds``) at block
+                    widths R ∈ {1, 8};
+  * dispatch on a mesh — 1D member-sharded (``8x1``) and 2D
+    (data × model) plane-column-sharded (``4x2``, ``2x4``) shard_map
+    programs, plus the degenerate ``1x1``.
+
+Historically the legacy paths drew batches from a host numpy stream and the
+dispatch path from the in-program ``data/device_sampler`` stream, so
+cross-path comparisons were only statistical.  ``StreamBridgedFedRAC``
+closes that gap: its ``_client_batches`` replays the device-sampler draws
+(keyed on absolute round × global member slot) on the host, so EVERY path
+sees bit-identical batches and the whole matrix must agree to rtol 2e-4 on
+the final parameters AND the per-round per-member losses — replacing the
+scattered pairwise checks that previously lived in ``test_dispatch.py`` /
+``test_mesh_plane.py``.
+
+Coverage tiers (same scheme as ``test_mesh_plane.py``): the no-mesh and
+``1x1`` columns always run; the 8-device columns run in-process when the
+backend has ≥8 devices (CI mesh/mesh2d lanes) and through one slow
+subprocess wrapper for tier-1.
+"""
+import functools
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import aggregation
+from repro.core import server as srv
+from repro.core.client import local_update
+from repro.core.families import mlp_family
+from repro.core.resources import participants_from_matrix
+from repro.data import device_sampler
+from repro.data.partition import dirichlet_partition
+from repro.data.synthetic import make_classification, train_test_split
+from repro.launch.mesh import make_sim_mesh
+from repro.sim import HeterogeneitySim, SimConfig, make_trace, sample_profiles
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+RTOL, ATOL = 2e-4, 1e-5
+ROUNDS = 6
+
+eightway = pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="needs 8 forced host devices (CI mesh lanes or the slow "
+           "subprocess wrapper below)")
+
+
+class StreamBridgedFedRAC(srv.FedRAC):
+    """FedRAC whose legacy host batching replays the dispatch path's
+    device-sampler stream, keyed on (absolute round, global member slot) —
+    the bridge that makes loop/vmap/dispatch numerically comparable."""
+
+    def _client_batches(self, pid, r, balanced):
+        d = self.client_data[pid]
+        slot = self._member_slot(pid)
+        key = device_sampler.round_key(self.cfg.seed, r)
+        steps, batch = self.cfg.steps_per_round, self.cfg.local_batch
+        if balanced:
+            table, counts = self._class_table(pid)
+            idx = device_sampler.balanced_indices(
+                key, steps, batch, jnp.asarray(table)[None],
+                jnp.asarray(counts)[None], offset=slot)
+        else:
+            idx = device_sampler.uniform_indices(
+                key, steps, batch,
+                jnp.asarray([len(d["y"])], jnp.int32), offset=slot)
+        idx = np.asarray(idx)[0]
+        return {"x": d["x"][idx], "y": d["y"][idx]}
+
+    def _member_slot(self, pid: int) -> int:
+        for members in self.assignment.members.values():
+            if pid in members:
+                return list(members).index(pid)
+        raise KeyError(pid)
+
+
+def _build(mesh_shape=None, n=8, seed=0, **cfg_kw):
+    ds = make_classification("synth-mnist", 400, seed=seed)
+    train, test = train_test_split(ds)
+    idx = dirichlet_partition(train.y, n, alpha=2.0, seed=seed)
+    parts = participants_from_matrix(sample_profiles(n, seed=seed),
+                                     n_data=[len(p) for p in idx])
+    cd = [{"x": train.x[p], "y": train.y[p]} for p in idx]
+    # auto-calibrated MAR splits the 8 participants ~3 master / ~5 slave,
+    # so the KD column trains a real slave cluster (and C=3/5 exercises the
+    # zero-row padding on every mesh width)
+    cfg = srv.FLConfig(steps_per_round=3, lr=0.08, seed=seed, local_batch=8,
+                       **({"compact_to": 2,
+                           "rounds_per_dispatch": 8} | cfg_kw))
+    mesh = make_sim_mesh(mesh_shape) if mesh_shape else None
+    eng = StreamBridgedFedRAC(parts, cd, mlp_family(), cfg, classes=10,
+                              mesh=mesh).setup()
+    testb = {"x": jnp.asarray(test.x), "y": jnp.asarray(test.y)}
+    return eng, testb
+
+
+def _teacher(eng):
+    return eng.family.init(jax.random.PRNGKey(42), 0)
+
+
+# ------------------------------------------------------------ the five paths
+def _run_loop(eng, level, members, rounds, teacher=None):
+    """Independent golden reference: per-pid local_update + host FedAvg."""
+    cfg = eng.cfg
+    loss_fn = jax.tree_util.Partial(eng.family.loss_and_logits, level)
+    t_loss_fn = jax.tree_util.Partial(eng.family.loss_and_logits, 0)
+    params = eng.family.init(jax.random.PRNGKey(cfg.seed + level), level)
+    weights = aggregation.normalized_weights(
+        [eng.assignment.n_eff.get(p, 1) for p in members])
+    losses_all = []
+    for r in range(rounds):
+        new_params, losses = [], []
+        for pid in members:
+            batches = jax.tree.map(jnp.asarray, eng._client_batches(
+                pid, r, cfg.class_balanced and level == 0))
+            tl = None
+            if teacher is not None and cfg.use_kd:
+                tl = jax.vmap(lambda b: t_loss_fn(teacher, b)[1])(batches)
+            p_new, loss = local_update(loss_fn, params, batches, cfg.lr,
+                                       teacher_logits=tl, kd_T=cfg.kd_T,
+                                       kd_alpha=cfg.kd_alpha)
+            new_params.append(p_new)
+            losses.append(float(loss))
+        stack = jax.tree.map(lambda *xs: jnp.stack(xs), *new_params)
+        params = aggregation.aggregate(stack, weights)
+        losses_all.append(losses)
+    return params, np.asarray(losses_all, np.float32)
+
+
+def _run_vmap(eng, level, members, rounds, teacher=None):
+    """One batched cluster_round program per round (the legacy fast path)."""
+    params = eng.family.init(
+        jax.random.PRNGKey(eng.cfg.seed + level), level)
+    weights = [eng.assignment.n_eff.get(p, 1) for p in members]
+    losses = []
+    for r in range(rounds):
+        params, l = eng.cluster_round(level, members, params, r,
+                                      teacher=teacher, weights=weights)
+        losses.append(np.asarray(l))
+    return params, np.stack(losses)
+
+
+def _run_dispatch(eng, level, members, rounds, R, teacher=None):
+    """Scan-fused blocks of width R (on whatever mesh ``eng`` carries)."""
+    plane = eng.plane_of(level, eng.family.init(
+        jax.random.PRNGKey(eng.cfg.seed + level), level))
+    losses, r = [], 0
+    while r < rounds:
+        L = min(R, rounds - r)
+        out = eng.dispatch_rounds(level, members, plane, r, L,
+                                  teacher=teacher)
+        plane = out.plane
+        losses.append(np.asarray(out.losses))
+        r += L
+    return eng.params_of(level, plane), np.concatenate(losses)
+
+
+def _assert_cell(golden, got, tag):
+    gp, gl = golden
+    p, l = got
+    for x, y in zip(jax.tree.leaves(gp), jax.tree.leaves(p)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), rtol=RTOL,
+                                   atol=ATOL, err_msg=f"params[{tag}]")
+    np.testing.assert_allclose(gl, l, rtol=RTOL, atol=ATOL,
+                               err_msg=f"losses[{tag}]")
+
+
+@functools.lru_cache(maxsize=None)
+def _golden(scenario):
+    """Golden column: the independent loop on the no-mesh engine (cached —
+    every matrix cell compares against the same one reference run)."""
+    eng, _ = _build()
+    level = 0 if scenario == "fedavg" else 1
+    members = list(eng.assignment.members[level])
+    teacher = _teacher(eng) if scenario == "kd" else None
+    return _run_loop(eng, level, members, ROUNDS, teacher), level, members
+
+
+# ----------------------------------------------------------- sync schedules
+@pytest.mark.parametrize("scenario", ["fedavg", "kd"])
+def test_matrix_sync_fast(scenario):
+    """Always-on subset: {loop, vmap, dispatch R∈{1,8}} unsharded plus the
+    degenerate 1x1 mesh, for the balanced FedAvg master and the KD slave."""
+    golden, level, members = _golden(scenario)
+    for tag, run in (
+            ("vmap", lambda e, t: _run_vmap(e, level, members, ROUNDS, t)),
+            ("disp-r1", lambda e, t: _run_dispatch(e, level, members,
+                                                   ROUNDS, 1, t)),
+            ("disp-r8", lambda e, t: _run_dispatch(e, level, members,
+                                                   ROUNDS, 8, t))):
+        eng, _ = _build()
+        teacher = _teacher(eng) if scenario == "kd" else None
+        _assert_cell(golden, run(eng, teacher), f"{scenario}/{tag}")
+    eng, _ = _build(mesh_shape="1x1")
+    teacher = _teacher(eng) if scenario == "kd" else None
+    _assert_cell(golden, _run_dispatch(eng, level, members, ROUNDS, 8,
+                                       teacher), f"{scenario}/1x1-r8")
+
+
+@eightway
+@pytest.mark.parametrize("mesh_shape", ["8x1", "4x2", "2x4"])
+@pytest.mark.parametrize("scenario", ["fedavg", "kd"])
+def test_matrix_sync_eightway(scenario, mesh_shape):
+    """8-device columns: member-sharded (8x1) and 2D plane-column-sharded
+    (4x2 / 2x4) dispatch at R ∈ {1, 8} against the unsharded golden loop —
+    with one compile per program and donation still enforced."""
+    golden, level, members = _golden(scenario)
+    eng, _ = _build(mesh_shape=mesh_shape)
+    teacher = _teacher(eng) if scenario == "kd" else None
+    for R in (1, 8):
+        _assert_cell(golden, _run_dispatch(eng, level, members, ROUNDS, R,
+                                           teacher),
+                     f"{scenario}/{mesh_shape}-r{R}")
+    stats = eng.compile_stats()
+    retraced = {k: v for k, v in stats.items() if v != 1}
+    assert not retraced, f"programs retraced on {mesh_shape}: {retraced}"
+    # donated-plane reuse must still raise on the 2D mesh
+    plane = eng.plane_of(level, eng.family.init(jax.random.PRNGKey(7), level))
+    out = eng.dispatch_rounds(level, members, plane, 0, 2, teacher=teacher)
+    assert plane.is_deleted() and not out.plane.is_deleted()
+    with pytest.raises(RuntimeError, match="deleted"):
+        np.asarray(plane)
+
+
+@eightway
+@pytest.mark.parametrize("mesh_shape", ["8x1", "4x2", "2x4"])
+def test_matrix_kd_sim_eightway(mesh_shape):
+    """KD at simulator granularity on 8 devices: fused blocks return the
+    master's per-round ``want_history`` plane stack and scan the slaves'
+    per-round ``teacher_planes`` — both column-sharded on the 2D meshes
+    (the ``sp["stack"]`` specs and the teacher column gather) — and the
+    result matches the unsharded dispatch engine."""
+    outs = {}
+    for shape in (None, mesh_shape):
+        eng, testb = _build(mesh_shape=shape)
+        sim = HeterogeneitySim(eng, make_trace("stable", 8, ROUNDS),
+                               SimConfig(rounds=ROUNDS))
+        sim._run_dispatch(testb)
+        outs[shape] = sim.params
+    assert len(outs[None]) > 1, "no slave cluster — teacher stacks unused"
+    for lvl in outs[None]:
+        for x, y in zip(jax.tree.leaves(outs[None][lvl]),
+                        jax.tree.leaves(outs[mesh_shape][lvl])):
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                       rtol=RTOL, atol=ATOL,
+                                       err_msg=f"kd-sim/{mesh_shape}/L{lvl}")
+
+
+# ------------------------------------------------------------ buffered async
+def _run_buffered_sim(mesh_shape, R, rounds=5, seed=0):
+    """Buffered schedule under a straggling cluster (the slower half misses
+    the deadline every round → banks, flushes next round).  Returns
+    (final params, structural telemetry, per-round mean losses).  The
+    stream bridge makes the comparison numeric, not just structural."""
+    from repro.core import cost_model
+    eng, testb = _build(mesh_shape=mesh_shape, seed=seed, compact_to=1,
+                        aggregation="buffered", rounds_per_dispatch=R)
+    spec = eng.specs[0]
+    t = sorted(cost_model.round_time(
+        p, spec.flops_per_sample, spec.model_bytes, spec.E,
+        eng.assignment.n_eff.get(p.pid, p.n_data)) for p in eng.parts)
+    spec.mar = 0.5 * (t[len(t) // 2 - 1] + t[len(t) // 2])
+    sim = HeterogeneitySim(eng, make_trace("stable", len(eng.parts), rounds),
+                           SimConfig(rounds=rounds, mar_policy="buffer"))
+    rep = sim.run(testb)
+    tel = [(r.round, [(c.level, sorted(c.active), sorted(c.banked),
+                       c.flushed) for c in r.clusters]) for r in rep.rows]
+    losses = np.asarray([[c.mean_loss for c in r.clusters]
+                         for r in rep.rows], np.float32)
+    return sim.params, tel, losses
+
+
+@functools.lru_cache(maxsize=None)
+def _buffered_golden():
+    """Legacy-engine buffered run (cached golden for all buffered cells)."""
+    return _run_buffered_sim(None, 1)
+
+
+def _assert_buffered_cell(golden, got, tag):
+    gp, gtel, gl = golden
+    p, tel, l = got
+    assert tel == gtel, f"telemetry[{tag}]"
+    banked = sum(len(b) for _, cs in gtel for _, _, b, _ in cs)
+    assert banked > 0, "straggler setup never banked — matrix cell vacuous"
+    np.testing.assert_allclose(gl, l, rtol=RTOL, atol=ATOL,
+                               err_msg=f"mean_losses[{tag}]")
+    for lvl in gp:
+        for x, y in zip(jax.tree.leaves(gp[lvl]), jax.tree.leaves(p[lvl])):
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                       rtol=RTOL, atol=ATOL,
+                                       err_msg=f"params[{tag}]")
+
+
+@pytest.mark.parametrize("mesh_shape,R", [(None, 8), ("1x1", 8)])
+def test_matrix_buffered_fast(mesh_shape, R):
+    """Buffered column, always-on subset: legacy engine (golden) vs fused
+    dispatch and the degenerate 1x1 mesh — same bank/flush telemetry, same
+    mean losses, same final params."""
+    _assert_buffered_cell(_buffered_golden(), _run_buffered_sim(mesh_shape, R),
+                          f"buffered/{mesh_shape}-r{R}")
+
+
+@eightway
+@pytest.mark.parametrize("mesh_shape", ["8x1", "4x2", "2x4"])
+def test_matrix_buffered_eightway(mesh_shape):
+    """Buffered column at 8 devices: the bank rides the sharded scan carry
+    (2D meshes: column-sharded) and still matches the legacy engine."""
+    _assert_buffered_cell(_buffered_golden(), _run_buffered_sim(mesh_shape, 8),
+                          f"buffered/{mesh_shape}-r8")
+
+
+# ------------------------------------------------------- sampler × 2D mesh
+@eightway
+def test_sampler_draws_independent_of_model_axis():
+    """data/device_sampler regression on the 2D mesh: in-program draws are
+    keyed on (absolute round, GLOBAL member slot) only, so a device's draw
+    depends on its ``data`` coordinate alone — every ``model`` column draws
+    bit-identically, and all equal the unsharded draw."""
+    mesh = make_sim_mesh("4x2")
+    from jax.sharding import PartitionSpec as P
+    C, steps, batch = 8, 3, 4
+    n = jnp.arange(5, 5 + C, dtype=jnp.int32) * 7
+    key = device_sampler.round_key(3, 11)
+
+    def draw(n_loc):
+        off = jax.lax.axis_index("data") * n_loc.shape[0]
+        idx = device_sampler.uniform_indices(key, steps, batch, n_loc,
+                                             offset=off)
+        # out_spec P('data', ...) demands model-axis replication: shard_map's
+        # rep check would refuse to stitch draws that varied by model column
+        return jax.lax.pmean(idx.astype(jnp.float32), "model")
+
+    fn = aggregation._shard_map(draw, mesh=mesh, in_specs=(P("data"),),
+                                out_specs=P("data", None, None))
+    sharded = np.asarray(fn(n))
+    full = np.asarray(device_sampler.uniform_indices(key, steps, batch, n))
+    np.testing.assert_array_equal(sharded, full.astype(np.float32))
+
+
+# ------------------------------------------------------ subprocess (tier-1)
+@pytest.mark.slow
+def test_matrix_under_forced_host_devices():
+    """Tier-1 coverage of the 8-device matrix columns: rerun the
+    ``eightway`` cells in a subprocess with 8 forced host devices."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["JAX_PLATFORMS"] = "cpu"
+    r = subprocess.run(
+        [sys.executable, "-m", "pytest", "-x", "-q",
+         os.path.abspath(__file__), "-k", "eightway or model_axis"],
+        capture_output=True, text=True, timeout=560, env=env, cwd=REPO)
+    assert r.returncode == 0, r.stdout + "\n" + r.stderr[-3000:]
+    assert "13 passed" in r.stdout, r.stdout

@@ -1,0 +1,93 @@
+"""Warn-only perf-regression gate: diff a fresh BENCH_core.json against the
+committed baseline (benchmarks/BENCH_baseline.json).
+
+  PYTHONPATH=src python benchmarks/bench_check.py BENCH_core.json
+      [--baseline benchmarks/BENCH_baseline.json] [--tolerance 2.0]
+      [--strict]
+
+Per shared row it compares ``us_per_call`` (lower is faster) and warns when
+the fresh value exceeds ``tolerance ×`` the baseline.  The tolerance is
+deliberately generous (default 2.0×): CI containers are noisy neighbors and
+the goal is catching order-of-magnitude regressions (a retrace storm, an
+accidentally-serialized pipeline), not 5% drift.  Exit code is 0 unless
+``--strict`` is passed AND a row regressed — the gate is advisory by
+default, exactly so flaky containers cannot block merges.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+_DEFAULT_BASELINE = pathlib.Path(__file__).parent / "BENCH_baseline.json"
+
+
+def compare(fresh: dict, baseline: dict, tolerance: float):
+    """Yields (name, fresh_us, base_us, ratio, regressed) per shared row;
+    rows with a HARNESS_ERROR on either side are skipped (reported as
+    status 'error' with ratio None)."""
+    f_rows, b_rows = fresh.get("rows", {}), baseline.get("rows", {})
+    for name in sorted(set(f_rows) & set(b_rows)):
+        f, b = f_rows[name], b_rows[name]
+        if ("HARNESS_ERROR" in str(f.get("derived", ""))
+                or "HARNESS_ERROR" in str(b.get("derived", ""))):
+            yield name, f.get("us_per_call"), b.get("us_per_call"), None, False
+            continue
+        fu, bu = float(f["us_per_call"]), float(b["us_per_call"])
+        if bu <= 0 or fu <= 0:
+            yield name, fu, bu, None, False
+            continue
+        ratio = fu / bu
+        yield name, fu, bu, ratio, ratio > tolerance
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="diff BENCH_core.json vs the committed baseline "
+                    "(warn-only by default)")
+    ap.add_argument("fresh", help="freshly produced BENCH_core.json")
+    ap.add_argument("--baseline", default=str(_DEFAULT_BASELINE))
+    ap.add_argument("--tolerance", type=float, default=2.0,
+                    help="warn when fresh us_per_call > tolerance × "
+                         "baseline (default 2.0 — generous on purpose)")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 on regression instead of warn-only")
+    args = ap.parse_args(argv)
+
+    try:
+        fresh = json.loads(pathlib.Path(args.fresh).read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"bench_check: cannot read {args.fresh}: {e}",
+              file=sys.stderr)
+        return 0 if not args.strict else 1
+    try:
+        baseline = json.loads(pathlib.Path(args.baseline).read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"bench_check: no usable baseline ({e}) — nothing to diff",
+              file=sys.stderr)
+        return 0
+
+    regressed, checked = [], 0
+    for name, fu, bu, ratio, bad in compare(fresh, baseline, args.tolerance):
+        if ratio is None:
+            print(f"  skip  {name}: unusable timing "
+                  f"(fresh={fu} base={bu})")
+            continue
+        checked += 1
+        flag = "WARN" if bad else "  ok"
+        print(f"  {flag}  {name}: {fu:.1f}us vs baseline {bu:.1f}us "
+              f"({ratio:.2f}x)")
+        if bad:
+            regressed.append(name)
+    print(f"bench_check: {checked} rows compared, {len(regressed)} over "
+          f"{args.tolerance:.1f}x tolerance"
+          + (f": {', '.join(regressed)}" if regressed else ""))
+    if regressed and not args.strict:
+        print("bench_check: advisory mode — not failing the build "
+              "(pass --strict to gate)")
+    return 1 if (regressed and args.strict) else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -199,6 +199,36 @@ def build_micro_mlp(n_members: int, steps: int, seed: int, R: int,
                       mesh=mesh).setup()
 
 
+def _phase_breakdown(eng, members, rounds: int, *, fresh: bool = True
+                     ) -> dict:
+    """Per-phase breakdown of an instrumented dispatch run: attach a fenced
+    observability bundle to ``eng`` and re-run ``rounds`` rounds, reading
+    compile wall-time, fenced block execution time, h2d/d2h bytes and psum
+    count from the registry/tracer.  With ``fresh=True`` the engine must not
+    have compiled its dispatch programs yet (compile_s lands in the
+    breakdown); pass ``fresh=False`` for an already-warm engine (compile_s
+    reads 0 — the counters are call-site accounting and still fill in).
+    The HEADLINE timings above never run instrumented: fencing serializes
+    the pipeline, so phases come from this separate pass."""
+    from repro.obs import make_observability
+    obs = make_observability(fence=True)
+    eng.obs = obs
+    p, _ = eng._train_cluster(0, members, rounds, None, record_every=10 ** 9)
+    jax.block_until_ready(jax.tree.leaves(p))
+    reg = obs.registry
+    compile_s = (reg.histograms["fl/compile_s"].total
+                 if "fl/compile_s" in reg.histograms else 0.0)
+    exec_s = sum(e["dur"] for e in obs.tracer.events()
+                 if e["name"] == "block_exec") / 1e6
+    return {"compile_s": round(compile_s, 4),
+            # block_exec spans include the first call's compile; subtract
+            "execute_s": round(max(exec_s - compile_s, 0.0), 4),
+            "h2d_bytes": int(reg.counter("fl/h2d_bytes").value),
+            "d2h_bytes": int(reg.counter("fl/d2h_bytes").value),
+            "psum_count": int(reg.counter("fl/psum_count").value),
+            "dispatch_blocks": int(reg.counter("fl/dispatch_blocks").value)}
+
+
 def _time_dispatch_pair(build, n: int, steps: int, seed: int, R: int,
                         rounds: int, reps: int) -> dict:
     engs = {1: build(n, steps, seed, 1), R: build(n, steps, seed, R)}
@@ -278,13 +308,18 @@ def run_mesh_bench(n: int = 24, R: int = 8, reps: int = 3, seed: int = 0,
                 jax.block_until_ready(jax.tree.leaves(p))
             sps[k].append(n * steps * rounds / t.dt)
     med = {k: statistics.median(v) for k, v in sps.items()}
+    # warm-engine instrumented pass: psum/h2d/d2h counters fill in (compile
+    # already happened, so compile_s reads 0 here by design)
+    phases = _phase_breakdown(engs["mesh_r8"], members["mesh_r8"], rounds,
+                              fresh=False)
     return {"members": n, "rounds": rounds, "R": R, "steps": steps,
             "devices": n_dev, "mesh_shape": "x".join(map(str, shape)),
             "legacy_steps_per_s": round(med["legacy_r1"], 1),
             "fused_steps_per_s": round(med["fused_r8"], 1),
             "mesh_steps_per_s": round(med["mesh_r8"], 1),
             "speedup_vs_legacy": round(med["mesh_r8"] / med["legacy_r1"], 3),
-            "sharding_overhead": round(med["mesh_r8"] / med["fused_r8"], 3)}
+            "sharding_overhead": round(med["mesh_r8"] / med["fused_r8"], 3),
+            "phases": phases}
 
 
 def run_mesh_bench_subprocess(n: int = 24, R: int = 8, reps: int = 3,
@@ -417,10 +452,12 @@ def bench_sim_mesh():
                      ("fused_r8", "fused_steps_per_s"),
                      ("sharded_r8", "mesh_steps_per_s")):
         sps = res[key]
-        yield (f"sim/mesh_{tag}", 1e6 / max(sps, 1e-9),
+        row = (f"sim/mesh_{tag}", 1e6 / max(sps, 1e-9),
                f"client_steps_per_s={sps};devices={res['devices']};"
                f"speedup_vs_legacy={res['speedup_vs_legacy']};"
                f"sharding_overhead={res['sharding_overhead']}")
+        yield row + ((res["phases"],) if tag == "sharded_r8"
+                     and res.get("phases") else ())
 
 
 def bench_sim_mesh2d():
@@ -433,7 +470,8 @@ def bench_sim_mesh2d():
            f"client_steps_per_s={sps};devices={res['devices']};"
            f"mesh_shape={res['mesh_shape']};"
            f"speedup_vs_legacy={res['speedup_vs_legacy']};"
-           f"sharding_overhead={res['sharding_overhead']}")
+           f"sharding_overhead={res['sharding_overhead']}"
+           ) + ((res["phases"],) if res.get("phases") else ())
 
 
 def bench_sim_dispatch():
@@ -441,11 +479,17 @@ def bench_sim_dispatch():
     on the dispatch-bound MLP cluster (CPU-budget scale; the micro-LM
     context row stays CLI-only)."""
     res = run_dispatch_bench(n=12, R=8, reps=3, with_lm=False)["mlp"]
+    # fresh instrumented engine so compile_s lands in the breakdown; the
+    # headline medians above stay un-instrumented (fencing serializes)
+    eng = build_micro_mlp(12, 2, 0, 8)
+    phases = _phase_breakdown(eng, list(eng.assignment.members[0]),
+                              rounds=64)
     for tag, key in (("r1", "legacy_steps_per_s"),
                      ("r8", "dispatch_steps_per_s")):
         sps = res[key]
-        yield (f"sim/dispatch_{tag}", 1e6 / max(sps, 1e-9),
+        row = (f"sim/dispatch_{tag}", 1e6 / max(sps, 1e-9),
                f"client_steps_per_s={sps};speedup={res['speedup']}")
+        yield row + ((phases,) if tag == "r8" else ())
 
 
 def bench_sim_padding():

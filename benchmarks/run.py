@@ -65,11 +65,17 @@ def main() -> None:
         if args.only and args.only not in name:
             continue
         try:
-            for row, us, derived in fn():
+            # rows are (name, us, derived[, phases]) — the optional 4th
+            # element is a per-phase breakdown dict (compile_s, execute_s,
+            # h2d/d2h bytes, psum count) embedded in the JSON artifact
+            for out in fn():
+                row, us, derived = out[0], out[1], out[2]
                 print(f"{row},{us:.1f},{str(derived).replace(',', ';')}",
                       flush=True)
                 rows[row] = {"us_per_call": round(float(us), 3),
                              "derived": str(derived)}
+                if len(out) > 3 and out[3]:
+                    rows[row]["phases"] = out[3]
         except Exception:
             err = traceback.format_exc().splitlines()[-1]
             print(f"{name},0.0,HARNESS_ERROR:{err}", flush=True)

@@ -7,6 +7,7 @@ backbones both plug in); per-cluster client training runs through
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 from typing import Callable
 
@@ -25,6 +26,7 @@ from repro.data import device_sampler
 from repro.data.sampler import class_balanced_batches, sample_batches
 from repro.launch.sharding import (member_specs, replicated_specs,
                                    shard_member_tree)
+from repro.obs import NULL_OBS
 
 
 @dataclass
@@ -64,6 +66,12 @@ class FLConfig:
     # step masks).  False falls back to the per-pid Python loop — kept for
     # equivalence testing and benchmarks/bench_sim.py.
     vmap_clusters: bool = True
+    # opt-in: let a vmap_clusters=False engine still use the scan-fused
+    # dispatch path when rounds_per_dispatch>1 (the per-pid loop itself
+    # cannot be fused, so training routes through dispatch_rounds) — the
+    # hook that lets the equivalence matrix run its independent-loop
+    # column fused as well.
+    allow_loop_dispatch: bool = False
     # compile-stable padding: round every cluster's member count up to a
     # capacity bucket (next power of two, then multiples of pad_max) and pad
     # batches/masks/weights with zero rows, so Procedure-2 migrations and
@@ -101,6 +109,43 @@ class DispatchOut:
     history: object | None      # (R, D_pad) per-round planes (want_history)
 
 
+class _TimedProgram:
+    """Transparent wrapper around one jitted program that detects fresh XLA
+    compiles (jit cache-size delta across a call) and records them in the
+    metrics registry — a per-program compile counter and wall-time gauge
+    (``fl/compiles/<label>`` / ``fl/compile_s/<label>``), fleet-wide
+    ``fl/compile_total`` and ``fl/compile_s`` aggregates — plus a
+    ``compile`` span on the tracer.  Only installed when observability is
+    enabled; the disabled path stores the raw jitted callable."""
+    __slots__ = ("fn", "_obs", "_label")
+
+    def __init__(self, fn, obs, label: str):
+        self.fn = fn
+        self._obs = obs
+        self._label = label
+
+    def _cache_size(self):               # compile_stats() delegate
+        return self.fn._cache_size()
+
+    def __call__(self, *args, **kw):
+        before = self.fn._cache_size()
+        t0 = time.perf_counter_ns()
+        out = self.fn(*args, **kw)
+        if self.fn._cache_size() > before:
+            # a fresh trace+compile happened inside this call: make the
+            # measured wall time cover it honestly
+            jax.block_until_ready(out)
+            dt_ns = time.perf_counter_ns() - t0
+            reg = self._obs.registry
+            reg.counter(f"fl/compiles/{self._label}").inc()
+            reg.gauge(f"fl/compile_s/{self._label}").set(dt_ns / 1e9)
+            reg.counter("fl/compile_total").inc()
+            reg.histogram("fl/compile_s").observe(dt_ns / 1e9)
+            self._obs.tracer.complete("compile", t0, dt_ns, cat="fl",
+                                      program=self._label)
+        return out
+
+
 @dataclass
 class FedRACResult:
     k_optimal: int
@@ -121,10 +166,13 @@ class FedRAC:
                  mesh_model_axis: str = "model"):
         if cfg.aggregation not in ("sync", "buffered"):
             raise ValueError(f"unknown aggregation {cfg.aggregation!r}")
-        if cfg.rounds_per_dispatch > 1 and not cfg.vmap_clusters:
+        if (cfg.rounds_per_dispatch > 1 and not cfg.vmap_clusters
+                and not cfg.allow_loop_dispatch):
             raise ValueError(
                 "rounds_per_dispatch>1 (device-resident pipeline) requires "
-                "vmap_clusters=True — the per-pid loop cannot be scan-fused")
+                "vmap_clusters=True — the per-pid loop cannot be scan-fused "
+                "(set allow_loop_dispatch=True to route a loop-configured "
+                "engine through the fused dispatch path anyway)")
         if mesh is not None and cfg.rounds_per_dispatch == 1:
             raise ValueError(
                 "a mesh shards the device-resident dispatch path — set "
@@ -135,6 +183,9 @@ class FedRAC:
         self.family = family
         self.cfg = cfg
         self.classes = classes
+        # observability bundle (metrics registry + tracer); NULL_OBS keeps
+        # every instrumented site on its single-branch no-op fast path
+        self.obs = NULL_OBS
         # mesh-sharded execution: the dispatch block program runs under
         # shard_map with the capacity axis split along mesh `mesh_axis` —
         # each device trains its local member rows and one psum over that
@@ -297,7 +348,11 @@ class FedRAC:
                     [arr, np.zeros((pad,) + arr.shape[1:], arr.dtype)])
             return jnp.asarray(arr)
 
-        return jax.tree.map(stack, *per)
+        out = jax.tree.map(stack, *per)
+        if self.obs.on:
+            self.obs.registry.counter("fl/h2d_bytes").inc(
+                sum(x.nbytes for x in jax.tree.leaves(out)))
+        return out
 
     # ------------------------------------------------------------ plane
     def plane_spec(self, level: int):
@@ -368,6 +423,7 @@ class FedRAC:
             pack = self._shard_packs.pop(key)      # LRU: refresh on hit
             self._shard_packs[key] = pack
             return pack
+        t0 = time.perf_counter_ns()
         if self._shard_len_pad is None:
             n_max = max(max((jax.tree.leaves(self._member_shard(q))[0].shape[0]
                              for q in range(len(self.parts))), default=1), 1)
@@ -405,6 +461,14 @@ class FedRAC:
         if len(self._shard_packs) >= 16:               # bound device memory
             self._shard_packs.pop(next(iter(self._shard_packs)))
         self._shard_packs[key] = pack
+        if self.obs.on:
+            nbytes = sum(x.nbytes for x in jax.tree.leaves(pack))
+            reg = self.obs.registry
+            reg.counter("fl/h2d_bytes").inc(nbytes)
+            reg.counter("fl/pack_builds").inc()
+            self.obs.tracer.complete(
+                "pack_h2d", t0, time.perf_counter_ns() - t0, cat="fl",
+                level=level, bytes=nbytes)
         return pack
 
     def _cluster_programs(self, level: int, use_kd: bool, capacity: int,
@@ -444,7 +508,14 @@ class FedRAC:
                     return agg, losses, new_stack
                 return agg, losses
 
-            self._programs[key] = jax.jit(round_fn)
+            prog = jax.jit(round_fn)
+            if self.obs.on:
+                prog = _TimedProgram(
+                    prog, self.obs,
+                    f"round_L{level}_cap{capacity}_R1"
+                    + ("_kd" if use_kd else "")
+                    + ("_stack" if want_stack else ""))
+            self._programs[key] = prog
         return self._programs[key]
 
     def compile_stats(self) -> dict:
@@ -713,7 +784,13 @@ class FedRAC:
             fn = aggregation._shard_map(block_fn, mesh=self.mesh,
                                         in_specs=in_specs,
                                         out_specs=out_specs)
-        self._programs[key] = jax.jit(fn, donate_argnums=donate)
+        prog = jax.jit(fn, donate_argnums=donate)
+        if self.obs.on:
+            prog = _TimedProgram(
+                prog, self.obs,
+                f"dispatch_L{level}_cap{capacity}_R{R}"
+                + ("_kd" if use_kd else "") + ("_bank" if banked else ""))
+        self._programs[key] = prog
         return self._programs[key]
 
     def dispatch_rounds(self, level: int, members: list[int], plane, r0: int,
@@ -752,6 +829,7 @@ class FedRAC:
         banked = bank is not None
         pack = self._shard_pack(level, members, cap, balanced)
         S = cfg.steps_per_round
+        h2d = 0
         if isinstance(weights, jax.Array) and weights.shape == (cap,):
             w = weights                   # pre-padded device array: no copy
         else:
@@ -760,6 +838,7 @@ class FedRAC:
                            for pid in members]
             w = np.zeros(cap, np.float32)
             w[:C] = np.asarray(weights, np.float32)
+            h2d += w.nbytes
             w = self.place_member_sharded(jnp.asarray(w))
         if isinstance(step_masks, jax.Array) and step_masks.shape == (cap, S):
             masks = step_masks            # pre-padded device array: no copy
@@ -767,6 +846,7 @@ class FedRAC:
             masks = np.zeros((cap, S), np.float32)
             masks[:C] = (np.ones((C, S), np.float32) if step_masks is None
                          else np.asarray(step_masks, np.float32))
+            h2d += masks.nbytes
             masks = self.place_member_sharded(jnp.asarray(masks))
         prog = self._dispatch_programs(level, use_kd, cap, n_rounds,
                                        balanced, banked, want_history,
@@ -775,18 +855,36 @@ class FedRAC:
         t_arg = teacher_planes if t_per_round else teacher
         tail = (pack["shards"], pack["n"], pack["tables"], pack["counts"],
                 jnp.asarray(r0, jnp.int32), masks, w)
-        if banked:
-            bank_plane, bank_w, bank_gain = bank
-            out = prog(plane, bank_plane, bank_w, *tail,
-                       jnp.asarray(bank_gain, jnp.float32), t_arg)
-            new_plane, bank_out = out[0], (out[1], out[2])
-            rest = out[3:]
-        else:
-            out = prog(plane, *tail, t_arg)
-            new_plane, bank_out = out[0], None
-            rest = out[1:]
+        with self.obs.tracer.span("block_exec", cat="fl", level=level,
+                                  R=n_rounds, capacity=cap):
+            if banked:
+                bank_plane, bank_w, bank_gain = bank
+                out = prog(plane, bank_plane, bank_w, *tail,
+                           jnp.asarray(bank_gain, jnp.float32), t_arg)
+                new_plane, bank_out = out[0], (out[1], out[2])
+                rest = out[3:]
+            else:
+                out = prog(plane, *tail, t_arg)
+                new_plane, bank_out = out[0], None
+                rest = out[1:]
+            self.obs.tracer.fence(new_plane)
         losses = rest[0][:, :C]
         history = rest[1] if want_history else None
+        if self.obs.on:
+            reg = self.obs.registry
+            reg.counter("fl/dispatch_blocks").inc()
+            reg.counter("fl/dispatch_rounds").inc(n_rounds)
+            if h2d:
+                reg.counter("fl/h2d_bytes").inc(h2d)
+            # per-round member losses are the block's host-bound output
+            reg.counter("fl/d2h_bytes").inc(
+                losses.size * losses.dtype.itemsize)
+            if self.mesh is not None:
+                # one psum over the data axis per fused round (see
+                # _dispatch_programs) — accounted analytically, since
+                # runtime collectives are invisible from inside jit; the
+                # HLO cross-check lives in launch/hlo_analysis
+                reg.counter("fl/psum_count").inc(n_rounds)
         return DispatchOut(plane=new_plane, losses=losses, bank=bank_out,
                            history=history)
 
@@ -797,7 +895,8 @@ class FedRAC:
         params = self.family.init(key, level)
         if not members:
             return params, []
-        if not cfg.vmap_clusters:
+        if not cfg.vmap_clusters and not (cfg.allow_loop_dispatch
+                                          and cfg.rounds_per_dispatch > 1):
             return self._train_cluster_loop(level, members, n_rounds, test,
                                             params, teacher, record_every)
         if cfg.rounds_per_dispatch > 1:

@@ -10,6 +10,7 @@ cluster — the serving-side analogue of §IV-A2 (used by examples/serve_demo).
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -19,9 +20,10 @@ import numpy as np
 from repro.configs import get_config, list_archs
 from repro.core.scaling import compress_config
 from repro.models import registry, transformer
+from repro.obs import NULL_OBS, make_observability
 
 
-def prefill_into_cache(cfg, params, tokens, max_len):
+def prefill_into_cache(cfg, params, tokens, max_len, obs=NULL_OBS):
     """Run the full prompt through decode steps to fill the cache.
 
     (Production prefill computes the cache in one forward; the step-by-step
@@ -31,24 +33,42 @@ def prefill_into_cache(cfg, params, tokens, max_len):
     cache = registry.init_cache(cfg, B, max_len)
     step = jax.jit(lambda p, c, t, i: registry.decode_step(cfg, p, c, t, i))
     logits = None
-    for t in range(S):
-        logits, cache = step(params, cache, tokens[:, t:t + 1], jnp.asarray(t))
+    with obs.tracer.span("serve.prefill", cat="serve", batch=B,
+                         prompt_len=S):
+        for t in range(S):
+            logits, cache = step(params, cache, tokens[:, t:t + 1],
+                                 jnp.asarray(t))
+        obs.tracer.fence(logits)
+    if obs.on:
+        obs.registry.counter("serve/prefill_tokens").inc(B * S)
     return logits, cache
 
 
-def generate(cfg, params, prompts, gen_len):
+def generate(cfg, params, prompts, gen_len, obs=NULL_OBS):
     B, S = prompts.shape
     max_len = S + gen_len
-    logits, cache = prefill_into_cache(cfg, params, prompts, max_len)
+    logits, cache = prefill_into_cache(cfg, params, prompts, max_len, obs)
     step = jax.jit(lambda p, c, t, i: registry.decode_step(cfg, p, c, t, i))
     out = []
     vmask = transformer.vocab_mask(cfg)
     tok = jnp.argmax(jnp.where(vmask, logits[:, -1], -jnp.inf), -1)[:, None]
-    for i in range(gen_len):
-        out.append(np.asarray(tok))
-        logits, cache = step(params, cache, tok.astype(jnp.int32),
-                             jnp.asarray(S + i))
-        tok = jnp.argmax(jnp.where(vmask, logits[:, -1], -jnp.inf), -1)[:, None]
+    t0 = time.perf_counter()
+    with obs.tracer.span("serve.decode", cat="serve", batch=B,
+                         gen_len=gen_len):
+        for i in range(gen_len):
+            out.append(np.asarray(tok))
+            logits, cache = step(params, cache, tok.astype(jnp.int32),
+                                 jnp.asarray(S + i))
+            tok = jnp.argmax(jnp.where(vmask, logits[:, -1], -jnp.inf),
+                             -1)[:, None]
+    if obs.on:
+        dt = time.perf_counter() - t0
+        obs.registry.counter("serve/decode_steps").inc(gen_len)
+        obs.registry.counter("serve/generated_tokens").inc(B * gen_len)
+        if dt > 0:
+            obs.registry.gauge("serve/decode_tok_per_s").set(B * gen_len / dt)
+        obs.registry.histogram("serve/decode_step_s").observe(
+            dt / max(gen_len, 1))
     return np.concatenate(out, axis=1)
 
 
@@ -63,8 +83,16 @@ def main(argv=None):
                     help="Fed-RAC cluster level (α-compressed model)")
     ap.add_argument("--alpha", type=float, default=0.5)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--metrics-text", action="store_true",
+                    help="print a Prometheus-style /metrics text snapshot "
+                         "after the run")
+    ap.add_argument("--metrics-json", default=None, metavar="PATH",
+                    help="write the registry snapshot as JSON ('-' for "
+                         "stdout)")
     args = ap.parse_args(argv)
 
+    obs = (make_observability(trace=False)
+           if args.metrics_text or args.metrics_json else NULL_OBS)
     cfg = get_config(args.arch, smoke=args.smoke)
     cfg = compress_config(cfg, args.alpha, args.cluster_level)
     key = jax.random.PRNGKey(args.seed)
@@ -72,12 +100,24 @@ def main(argv=None):
     prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
                                  cfg.vocab_size)
     t0 = time.time()
-    toks = generate(cfg, params, prompts, args.gen)
+    toks = generate(cfg, params, prompts, args.gen, obs=obs)
     dt = time.time() - t0
+    if obs.on:
+        obs.registry.gauge("serve/wall_clock_s").set(dt)
+        obs.registry.counter("serve/requests").inc(args.batch)
     print(f"arch={cfg.name} level={args.cluster_level} "
           f"generated {toks.shape} in {dt:.1f}s "
           f"({args.batch * args.gen / dt:.1f} tok/s)")
     print("sample:", toks[0, :16])
+    if args.metrics_text:
+        print(obs.registry.render_text(), end="")
+    if args.metrics_json:
+        snap = json.dumps(obs.registry.snapshot(), indent=2)
+        if args.metrics_json == "-":
+            print(snap)
+        else:
+            with open(args.metrics_json, "w") as f:
+                f.write(snap + "\n")
     return toks
 
 

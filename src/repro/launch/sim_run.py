@@ -23,6 +23,7 @@ from repro.core.resources import (LAMBDA_EQUAL, LAMBDA_PAPER,
 from repro.launch.mesh import make_sim_mesh
 from repro.data.partition import dirichlet_partition
 from repro.data.synthetic import SPECS, make_classification, train_test_split
+from repro.obs import make_observability
 from repro.sim import (SCENARIOS, HeterogeneitySim, SimConfig, make_trace,
                        sample_profiles)
 
@@ -68,9 +69,12 @@ def run(args):
     trace = make_trace(args.trace, args.participants, args.rounds,
                        seed=args.seed, dropout_rate=args.dropout_rate,
                        drift_rate=args.drift_rate, spike_rate=args.spike_rate)
+    obs = None
+    if args.metrics_out or args.trace_out or args.fence:
+        obs = make_observability(fence=args.fence)
     sim = HeterogeneitySim(eng, trace, SimConfig(
         rounds=args.rounds, mar_policy=args.mar_policy,
-        schedule=args.schedule, eval_every=args.eval_every))
+        schedule=args.schedule, eval_every=args.eval_every), obs=obs)
     report = sim.run(testb)
     print(report.timeline())
     try:
@@ -80,6 +84,18 @@ def run(args):
               f"(padding {'on' if eng.cfg.pad_clusters else 'off'})")
     except RuntimeError:
         print("# compile telemetry unavailable on this jax build")
+    if args.metrics_out:
+        n = obs.registry.to_jsonl(args.metrics_out)
+        print(f"# metrics: {n} lines -> {args.metrics_out}")
+    if args.trace_out:
+        obs.tracer.write(args.trace_out)
+        print(f"# trace: {len(obs.tracer.events())} spans -> "
+              f"{args.trace_out}"
+              + (" (fenced timings)" if args.fence else ""))
+    if args.report_out:
+        with open(args.report_out, "w") as f:
+            json.dump(report.to_dict(), f, default=float)
+        print(f"# report -> {args.report_out}")
     if args.json:
         print(json.dumps(report.to_dict(), default=float))
     return report
@@ -133,6 +149,20 @@ def main(argv=None):
     ap.add_argument("--kappa", type=float, default=0.7)
     ap.add_argument("--eval-every", type=int, default=2)
     ap.add_argument("--json", action="store_true")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="export the metrics registry (counters, gauges, "
+                         "per-round tables) as JSON Lines")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="export a Chrome-trace/Perfetto JSON of the round "
+                         "pipeline (engine rounds, dispatch blocks, "
+                         "compiles, transfers)")
+    ap.add_argument("--fence", action="store_true",
+                    help="block_until_ready inside spans so timings cover "
+                         "device execution, not just dispatch (serializes "
+                         "the pipeline — measurement mode)")
+    ap.add_argument("--report-out", default=None, metavar="PATH",
+                    help="write report.to_dict() JSON (summary + rows) — "
+                         "pairs with repro.obs.validate --report")
     ap.add_argument("--seed", type=int, default=3)
     args = ap.parse_args(argv)
     return run(args)

@@ -34,6 +34,7 @@ import numpy as np
 
 from repro.core import aggregation, cost_model
 from repro.core.server import FedRAC
+from repro.obs import NULL_OBS
 from repro.sim.clock import EventQueue, SimClock
 from repro.sim.events import (Arrival, Departure, ResourceDrift, SpikeEnd,
                               StragglerSpike)
@@ -55,7 +56,8 @@ class SimConfig:
 class HeterogeneitySim:
     """Couples a set-up ``FedRAC`` with a ``Trace`` and runs the event loop."""
 
-    def __init__(self, fedrac: FedRAC, trace: Trace, cfg: SimConfig):
+    def __init__(self, fedrac: FedRAC, trace: Trace, cfg: SimConfig,
+                 obs=None):
         if cfg.mar_policy not in ("drop", "mask", "wait", "buffer"):
             raise ValueError(f"unknown mar_policy {cfg.mar_policy!r}")
         if cfg.schedule not in ("parallel", "sequential"):
@@ -66,6 +68,9 @@ class HeterogeneitySim:
         self.fl = fedrac
         self.trace = trace
         self.cfg = cfg
+        self.obs = obs if obs is not None else NULL_OBS
+        if obs is not None and getattr(fedrac, "obs", NULL_OBS) is NULL_OBS:
+            fedrac.obs = obs     # share one registry/tracer across the stack
         self.clock = SimClock()
         self.queue = EventQueue()
         for t, ev in trace.events:
@@ -217,17 +222,43 @@ class HeterogeneitySim:
     def run(self, test) -> SimReport:
         if self.fl.cfg.rounds_per_dispatch > 1:
             return self._run_dispatch(test)
-        fl, cfg = self.fl, self.cfg
+        fl, cfg, tr = self.fl, self.cfg, self.obs.tracer
         report = SimReport(scenario=self.trace.name,
-                           mar_policy=cfg.mar_policy, schedule=cfg.schedule)
-        params = {lvl: fl.family.init(jax.random.PRNGKey(fl.cfg.seed + lvl),
-                                      lvl)
-                  for lvl in range(fl.m)}
-        for r in range(cfg.rounds):
-            ev_log = self._apply_events(r)
-            master_before = params[0]
-            clusters, times = [], []
-            for lvl in range(fl.m):
+                           mar_policy=cfg.mar_policy, schedule=cfg.schedule,
+                           obs=self.obs if self.obs.on else None)
+        with tr.span("sim.run", cat="engine", mode="legacy",
+                     rounds=cfg.rounds):
+            with tr.span("init_params", cat="engine"):
+                params = {lvl: fl.family.init(
+                    jax.random.PRNGKey(fl.cfg.seed + lvl), lvl)
+                    for lvl in range(fl.m)}
+                tr.fence(params)
+            for r in range(cfg.rounds):
+                with tr.span("round", cat="engine", round=r):
+                    self._legacy_round(r, params, report, test)
+            with tr.span("terminal_flush", cat="engine"):
+                self._terminal_flush(params, cfg.rounds, report)
+            with tr.span("final_eval", cat="engine"):
+                for lvl in range(fl.m):
+                    if not fl.assignment.members.get(lvl):
+                        continue
+                    last = (report.rows[-1].clusters[lvl].acc
+                            if report.rows else None)
+                    report.final_acc[lvl] = (
+                        last if last is not None
+                        else fl.evaluate(lvl, params[lvl], test))
+        self.params = params
+        return report
+
+    def _legacy_round(self, r: int, params: dict, report: SimReport,
+                      test) -> None:
+        """One legacy (per-round jit) communication round: MAR decisions,
+        per-cluster vmap update, bank bookkeeping, record append."""
+        fl, cfg, tr = self.fl, self.cfg, self.obs.tracer
+        ev_log = self._apply_events(r)
+        master_before = params[0]
+        clusters, times = [], []
+        for lvl in range(fl.m):
                 members = list(fl.assignment.members.get(lvl, []))
                 if not members:
                     clusters.append(ClusterRoundStats(level=lvl, time=0.0))
@@ -266,10 +297,13 @@ class HeterogeneitySim:
                         # jitted program serves rounds with and without
                         # violators
                         want_stack = fl.cfg.aggregation == "buffered"
-                        out = fl.cluster_round(
-                            lvl, members, params[lvl], r, teacher=teacher,
-                            step_masks=masks, weights=weights,
-                            buffered=buffered, return_stack=want_stack)
+                        with tr.span("cluster_round", cat="engine",
+                                     level=lvl, round=r):
+                            out = fl.cluster_round(
+                                lvl, members, params[lvl], r, teacher=teacher,
+                                step_masks=masks, weights=weights,
+                                buffered=buffered, return_stack=want_stack)
+                            tr.fence(out[0])
                         params[lvl], losses = out[0], out[1]
                         if stats.banked:
                             stack = out[2]
@@ -287,21 +321,12 @@ class HeterogeneitySim:
                     stats.acc = fl.evaluate(lvl, params[lvl], test)
                 clusters.append(stats)
                 times.append(t_cluster)
-            duration = (max(times, default=0.0) if cfg.schedule == "parallel"
-                        else sum(times))
-            report.add(RoundRecord(round=r, t_start=self.clock.now,
-                                   duration=duration, clusters=clusters,
-                                   events=ev_log))
-            self.clock.advance(duration)
-        self._terminal_flush(params, cfg.rounds, report)
-        for lvl in range(fl.m):
-            if not fl.assignment.members.get(lvl):
-                continue
-            last = report.rows[-1].clusters[lvl].acc if report.rows else None
-            report.final_acc[lvl] = (last if last is not None else
-                                     fl.evaluate(lvl, params[lvl], test))
-        self.params = params
-        return report
+        duration = (max(times, default=0.0) if cfg.schedule == "parallel"
+                    else sum(times))
+        report.add(RoundRecord(round=r, t_start=self.clock.now,
+                               duration=duration, clusters=clusters,
+                               events=ev_log))
+        self.clock.advance(duration)
 
     # ------------------------------------------------------------ dispatch
     def _block_len(self, r: int) -> int:
@@ -331,15 +356,46 @@ class HeterogeneitySim:
         per-round planes, and each slave block scans a per-round teacher
         stack at the schedule's cadence (``_teacher_planes``), so R=1 and
         R>1 are semantically interchangeable under both schedules."""
-        fl, cfg = self.fl, self.cfg
+        fl, cfg, tr = self.fl, self.cfg, self.obs.tracer
         report = SimReport(scenario=self.trace.name,
-                           mar_policy=cfg.mar_policy, schedule=cfg.schedule)
+                           mar_policy=cfg.mar_policy, schedule=cfg.schedule,
+                           obs=self.obs if self.obs.on else None)
         buffered = fl.cfg.aggregation == "buffered"
-        planes = {lvl: fl.plane_of(lvl, fl.family.init(
-            jax.random.PRNGKey(fl.cfg.seed + lvl), lvl))
-            for lvl in range(fl.m)}
-        r = 0
-        while r < cfg.rounds:
+        with tr.span("sim.run", cat="engine", mode="dispatch",
+                     rounds=cfg.rounds):
+            with tr.span("init_params", cat="engine"):
+                planes = {lvl: fl.plane_of(lvl, fl.family.init(
+                    jax.random.PRNGKey(fl.cfg.seed + lvl), lvl))
+                    for lvl in range(fl.m)}
+                tr.fence(planes)
+            r = 0
+            while r < cfg.rounds:
+                with tr.span("round_block", cat="engine", round=r):
+                    r = self._dispatch_block(r, planes, report, test,
+                                             buffered)
+            with tr.span("terminal_flush", cat="engine"):
+                self._terminal_flush(planes, cfg.rounds, report,
+                                     merge=self._anchored_merge_plane)
+            with tr.span("final_eval", cat="engine"):
+                for lvl in range(fl.m):
+                    if not fl.assignment.members.get(lvl):
+                        continue
+                    last = (report.rows[-1].clusters[lvl].acc
+                            if report.rows else None)
+                    report.final_acc[lvl] = (
+                        last if last is not None
+                        else fl.evaluate(lvl, fl.params_of(lvl, planes[lvl]),
+                                         test))
+                self.params = {lvl: fl.params_of(lvl, planes[lvl])
+                               for lvl in range(fl.m)}
+        return report
+
+    def _dispatch_block(self, r: int, planes: dict, report: SimReport,
+                        test, buffered: bool) -> int:
+        """One fused block starting at round ``r``; returns the next round
+        index (``r`` advanced by the realized block length)."""
+        fl, cfg, tr = self.fl, self.cfg, self.obs.tracer
+        with tr.span("mar_decisions", cat="engine", round=r):
             ev_log = self._apply_events(r)
             L = self._block_len(r)
             decisions = {}
@@ -357,93 +413,91 @@ class HeterogeneitySim:
                     L = 1
                 decisions[lvl] = (members, stats, masks, weights,
                                   t_cluster, ripe, live)
-            kd = fl.m > 1 and fl.cfg.use_kd
-            # pre-flush, pre-block master plane; copied because the master's
-            # own dispatch DONATES planes[0] and the parallel-cadence teacher
-            # stack still needs the block-start value afterwards (the
-            # sequential cadence reads only post-round planes — no copy)
-            master_start = (jnp.copy(planes[0])
-                            if kd and cfg.schedule == "parallel" else None)
-            master_hist = None                         # (L, D0) post-round
-            rows = [[] for _ in range(L)]
-            times = []
-            for lvl in range(fl.m):
-                if lvl not in decisions:
-                    for j in range(L):
-                        rows[j].append(ClusterRoundStats(level=lvl, time=0.0))
-                    times.append(0.0)
-                    continue
-                members, stats, masks, weights, t_cluster, ripe, live = \
-                    decisions[lvl]
-                losses = None
-                if live or stats.banked or ripe:
-                    if ripe:
-                        self._bank[lvl] = [b for b in self._bank[lvl]
-                                           if b["round"] >= r]
-                        if not live:
+        kd = fl.m > 1 and fl.cfg.use_kd
+        # pre-flush, pre-block master plane; copied because the master's
+        # own dispatch DONATES planes[0] and the parallel-cadence teacher
+        # stack still needs the block-start value afterwards (the
+        # sequential cadence reads only post-round planes — no copy)
+        master_start = (jnp.copy(planes[0])
+                        if kd and cfg.schedule == "parallel" else None)
+        master_hist = None                         # (L, D0) post-round
+        rows = [[] for _ in range(L)]
+        times = []
+        for lvl in range(fl.m):
+            if lvl not in decisions:
+                for j in range(L):
+                    rows[j].append(ClusterRoundStats(level=lvl, time=0.0))
+                times.append(0.0)
+                continue
+            members, stats, masks, weights, t_cluster, ripe, live = \
+                decisions[lvl]
+            losses = None
+            if live or stats.banked or ripe:
+                if ripe:
+                    self._bank[lvl] = [b for b in self._bank[lvl]
+                                       if b["round"] >= r]
+                    if not live:
+                        with tr.span("bank_flush", cat="engine", level=lvl,
+                                     entries=len(ripe)):
                             planes[lvl] = self._anchored_merge_plane(
                                 planes[lvl], ripe, r, lvl)
-                    if live or stats.banked:
-                        bank = (self._bank_carry(lvl, members,
-                                                 ripe if live else [],
-                                                 stats.banked, r)
-                                if buffered else None)
-                        kw = {}
-                        if lvl == 0:
-                            # per-round master planes feed the slaves'
-                            # teacher stacks (only needed for fused blocks)
-                            kw["want_history"] = kd and L > 1
-                        elif kd:
+                            tr.fence(planes[lvl])
+                if live or stats.banked:
+                    bank = (self._bank_carry(lvl, members,
+                                             ripe if live else [],
+                                             stats.banked, r)
+                            if buffered else None)
+                    kw = {}
+                    if lvl == 0:
+                        # per-round master planes feed the slaves'
+                        # teacher stacks (only needed for fused blocks)
+                        kw["want_history"] = kd and L > 1
+                    elif kd:
+                        with tr.span("kd_teacher", cat="engine",
+                                     level=lvl):
                             kw["teacher_planes"] = self._teacher_planes(
                                 L, master_start, master_hist, planes[0])
+                    with tr.span("dispatch", cat="engine", level=lvl,
+                                 round=r, block_len=L):
                         out = fl.dispatch_rounds(
                             lvl, members, planes[lvl], r, L,
                             step_masks=masks, weights=weights, bank=bank,
                             **kw)
-                        planes[lvl] = out.plane
-                        if lvl == 0 and kw.get("want_history"):
-                            master_hist = out.history
-                        losses = np.asarray(out.losses)
-                        if stats.banked:
-                            bank_rows = out.bank[0]
-                            for pid in stats.banked:
-                                i = members.index(pid)
-                                self._bank[lvl].append({
-                                    "pid": pid, "round": r + L - 1,
-                                    "n_eff": fl.assignment.n_eff.get(pid, 1),
-                                    "plane": bank_rows[i]})
-                contributing = weights > 0
-                for j in range(L):
-                    s = self._clone_stats(stats)
-                    s.flushed = (len(ripe) if j == 0
-                                 else len(stats.banked) if live else 0)
-                    if losses is not None and contributing.any():
-                        s.mean_loss = float(np.mean(losses[j][contributing]))
-                    rows[j].append(s)
-                if (cfg.eval_every and (r + L) % cfg.eval_every == 0):
+                        tr.fence(out.plane)
+                    planes[lvl] = out.plane
+                    if lvl == 0 and kw.get("want_history"):
+                        master_hist = out.history
+                    losses = np.asarray(out.losses)
+                    if stats.banked:
+                        bank_rows = out.bank[0]
+                        for pid in stats.banked:
+                            i = members.index(pid)
+                            self._bank[lvl].append({
+                                "pid": pid, "round": r + L - 1,
+                                "n_eff": fl.assignment.n_eff.get(pid, 1),
+                                "plane": bank_rows[i]})
+            contributing = weights > 0
+            for j in range(L):
+                s = self._clone_stats(stats)
+                s.flushed = (len(ripe) if j == 0
+                             else len(stats.banked) if live else 0)
+                if losses is not None and contributing.any():
+                    s.mean_loss = float(np.mean(losses[j][contributing]))
+                rows[j].append(s)
+            if (cfg.eval_every and (r + L) % cfg.eval_every == 0):
+                with tr.span("eval", cat="engine", level=lvl):
                     rows[L - 1][-1].acc = fl.evaluate(
                         lvl, fl.params_of(lvl, planes[lvl]), test)
-                times.append(t_cluster)
-            duration = (max(times, default=0.0) if cfg.schedule == "parallel"
-                        else sum(times))
+            times.append(t_cluster)
+        with tr.span("record_rounds", cat="engine", round=r, block_len=L):
+            duration = (max(times, default=0.0)
+                        if cfg.schedule == "parallel" else sum(times))
             for j in range(L):
                 report.add(RoundRecord(round=r + j, t_start=self.clock.now,
                                        duration=duration, clusters=rows[j],
                                        events=ev_log if j == 0 else []))
                 self.clock.advance(duration)
-            r += L
-        self._terminal_flush(planes, cfg.rounds, report,
-                             merge=self._anchored_merge_plane)
-        for lvl in range(fl.m):
-            if not fl.assignment.members.get(lvl):
-                continue
-            last = report.rows[-1].clusters[lvl].acc if report.rows else None
-            report.final_acc[lvl] = (
-                last if last is not None
-                else fl.evaluate(lvl, fl.params_of(lvl, planes[lvl]), test))
-        self.params = {lvl: fl.params_of(lvl, planes[lvl])
-                       for lvl in range(fl.m)}
-        return report
+        return r + L
 
     def _teacher_planes(self, L: int, start, hist, cur):
         """Per-round KD teacher planes for a slave block, at the schedule's
@@ -487,7 +541,7 @@ class HeterogeneitySim:
         # membership may have shrunk below the banked backlog (event between
         # blocks): Σu-preserving compression fits it into the carry slots
         rows, us = aggregation.compress_bank_rows(
-            [b["plane"] for b in ripe], us, cap)
+            [b["plane"] for b in ripe], us, cap, obs=self.obs)
         bank_plane = jnp.zeros((cap, dp), jnp.float32)
         bank_w = np.zeros(cap, np.float32)
         if rows:
@@ -523,7 +577,7 @@ class HeterogeneitySim:
         wa, us = self._anchor_weights(entries, r, lvl)
         anchored = jax.tree.map(lambda x: wa * x, cur)
         return aggregation.merge_buffered(
-            anchored, [b["params"] for b in entries], us)
+            anchored, [b["params"] for b in entries], us, obs=self.obs)
 
     def _anchored_merge_plane(self, cur, entries: list, r: int, lvl: int):
         """Anchored flush over the flat parameter plane (dispatch engine).
@@ -547,6 +601,5 @@ class HeterogeneitySim:
             if not entries:
                 continue
             params[lvl] = merge(params[lvl], entries, rounds, lvl)
-            if report.rows:
-                report.rows[-1].clusters[lvl].flushed += len(entries)
+            report.bump_flushed(lvl, len(entries))
             self._bank[lvl] = []

@@ -3,10 +3,32 @@
 One ``RoundRecord`` per communication round, holding per-cluster
 ``ClusterRoundStats``; ``SimReport`` aggregates the timeline, renders it as
 text (the CLI/example output) and summarizes totals.
+
+``SimReport`` is now a thin view over the obs metrics registry: ``add()``
+appends one columnar row per cluster-round to the ``sim/cluster_rounds``
+table (struct-of-arrays ring buffer) and one per round to ``sim/rounds``,
+and ``summary()`` derives its numeric totals from those columns rather than
+iterating Python objects — the registry is the sink that scales to fleet
+sizes, the dataclasses remain for text/timeline rendering and per-pid sets.
+Passing an ``Observability`` bundle shares the registry with the engine so
+``--metrics-out`` exports reproduce ``summary()`` exactly.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import asdict, dataclass, field
+
+from ..obs import MetricsRegistry
+
+_CLUSTER_COLS = {
+    "round": "int64", "level": "int64", "time": "float64",
+    "bytes": "float64", "active": "int64", "masked": "int64",
+    "dropped": "int64", "offline": "int64", "banked": "int64",
+    "violations": "int64", "flushed": "int64",
+    "mean_loss": "float64", "acc": "float64",
+}
+_ROUND_COLS = {"round": "int64", "t_start": "float64",
+               "duration": "float64", "events": "int64"}
 
 
 @dataclass
@@ -23,6 +45,14 @@ class ClusterRoundStats:
     bytes: float = 0.0
     mean_loss: float = float("nan")
     acc: float | None = None
+
+    @property
+    def participating(self) -> set:
+        """Pids that contributed an update this round: fully active ones
+        plus masked members (partial ⌊S·(MAR−T_c)/T_a⌋-step updates still
+        reach the aggregate, whether or not the engine also listed them in
+        ``active``)."""
+        return set(self.active) | set(self.masked)
 
 
 @dataclass
@@ -57,37 +87,82 @@ class SimReport:
     schedule: str
     rows: list = field(default_factory=list)       # [RoundRecord]
     final_acc: dict = field(default_factory=dict)  # level -> accuracy
+    obs: object = None             # Observability bundle (shared registry)
+
+    def __post_init__(self):
+        reg = self.obs.registry if self.obs is not None else MetricsRegistry()
+        self._registry = reg
+        self._t_clusters = reg.table("sim/cluster_rounds", _CLUSTER_COLS,
+                                     defaults={"acc": math.nan,
+                                               "mean_loss": math.nan})
+        self._t_rounds = reg.table("sim/rounds", _ROUND_COLS)
+        # a report's lifetime is one run: never mix rows from a prior run
+        # that shared the same registry
+        self._t_clusters.reset()
+        self._t_rounds.reset()
+
+    @property
+    def registry(self) -> MetricsRegistry:
+        return self._registry
 
     def add(self, row: RoundRecord) -> None:
         self.rows.append(row)
+        self._t_rounds.append(round=row.round, t_start=row.t_start,
+                              duration=row.duration, events=len(row.events))
+        for c in row.clusters:
+            self._t_clusters.append(
+                round=row.round, level=c.level, time=c.time, bytes=c.bytes,
+                active=len(c.participating), masked=len(c.masked),
+                dropped=len(c.dropped), offline=len(c.offline),
+                banked=len(c.banked), violations=len(c.violations),
+                flushed=c.flushed, mean_loss=c.mean_loss,
+                acc=math.nan if c.acc is None else c.acc)
+
+    def bump_flushed(self, level: int, delta: int) -> None:
+        """Credit ``delta`` terminal bank flushes to the newest recorded
+        round for ``level`` — in both the dataclass view and the registry
+        table, keeping summary/export parity."""
+        if not self.rows:
+            return
+        for c in self.rows[-1].clusters:
+            if c.level == level:
+                c.flushed += delta
+                break
+        self._t_clusters.bump_last(
+            "flushed", delta,
+            match={"round": self.rows[-1].round, "level": level})
 
     # ------------------------------------------------------------ summaries
     def summary(self) -> dict:
         n_parts = {p for r in self.rows for c in r.clusters
-                   for p in (c.active + c.dropped + c.offline + c.banked)}
-        total_slots = sum(
-            len(c.active) + len(c.dropped) + len(c.offline) + len(c.banked)
-            for r in self.rows for c in r.clusters)
+                   for p in (list(c.participating) + c.dropped
+                             + c.offline + c.banked)}
+        t = self._t_clusters
+        col = t.column
+        # Python sum over .tolist() keeps the sequential summation order the
+        # JSONL validator uses, so recomputed totals match bit-exactly.
+        active = int(sum(col("active").tolist()))
+        banked = int(sum(col("banked").tolist()))
+        total_slots = (active + banked + int(sum(col("dropped").tolist()))
+                       + int(sum(col("offline").tolist())))
         # banked members participate — their (late) update reaches the next
         # round's aggregate
-        active_slots = sum(len(c.active) + len(c.banked)
-                           for r in self.rows for c in r.clusters)
+        active_slots = active + banked
         return {
             "scenario": self.scenario,
             "mar_policy": self.mar_policy,
             "schedule": self.schedule,
-            "rounds": len(self.rows),
-            "wall_clock_s": round(sum(r.duration for r in self.rows), 3),
-            "total_bytes": float(sum(r.bytes for r in self.rows)),
+            "rounds": len(self._t_rounds),
+            "wall_clock_s": round(
+                float(sum(self._t_rounds.column("duration").tolist())), 3),
+            "total_bytes": float(sum(col("bytes").tolist())),
             "participants": len(n_parts),
             "participation_rate": round(active_slots / total_slots, 4)
                                   if total_slots else 0.0,
-            "mar_violations": sum(len(r.violations) for r in self.rows),
-            "dropped_total": sum(len(r.dropped) for r in self.rows),
-            "banked_total": sum(len(c.banked) for r in self.rows
-                                for c in r.clusters),
-            "flushed_total": sum(c.flushed for r in self.rows
-                                 for c in r.clusters),
+            "mar_violations": int(sum(col("violations").tolist())),
+            "dropped_total": int(sum(col("dropped").tolist())),
+            "banked_total": banked,
+            "flushed_total": int(sum(col("flushed").tolist())),
             "final_acc": {k: round(v, 4) for k, v in self.final_acc.items()},
         }
 

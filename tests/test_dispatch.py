@@ -307,7 +307,11 @@ def test_donated_plane_is_consumed():
 def test_dispatch_compile_stable_under_churn():
     """Procedure-2 churn (≥5 drift migrations) in dispatch mode reuses the
     per-(level, capacity, R) block programs: every jitted program compiles
-    exactly once."""
+    exactly once — checked both through ``compile_stats()`` and through the
+    obs registry's per-program ``fl/compiles/*`` counters, which must stay
+    in lockstep (the registry is the surfaced view of the same drift
+    invariant)."""
+    from repro.obs import make_observability
     eng, testb = _setup(n=10, samples=500, compact_to=2,
                         rounds_per_dispatch=4)
     trace = make_trace("stable", 10, 8)
@@ -316,7 +320,8 @@ def test_dispatch_compile_stable_under_churn():
         mult = 0.02 if r % 2 == 0 else 50.0
         trace.events.append((float(r), ResourceDrift(
             pid, s_mult=mult, r_mult=mult, a_mult=1.0)))
-    sim = HeterogeneitySim(eng, trace, SimConfig(rounds=8))
+    obs = make_observability(trace=False)
+    sim = HeterogeneitySim(eng, trace, SimConfig(rounds=8), obs=obs)
     rep = sim.run(testb)
     migrations = sum(ev.count("→") for r in rep.rows for ev in r.events)
     assert migrations >= 5, f"only {migrations} migrations in trace"
@@ -328,6 +333,16 @@ def test_dispatch_compile_stable_under_churn():
     # one program per (level, capacity, R) triple
     triples = [(k[1], k[3], k[4]) for k in dispatch_keys]
     assert len(triples) == len(set(triples))
+    # registry view: one fl/compiles/dispatch_* counter per triple, each 1,
+    # with a positive wall-time gauge beside it
+    compiles = {k: c.value for k, c in obs.registry.counters.items()
+                if k.startswith("fl/compiles/dispatch_")}
+    assert len(compiles) == len(triples), (compiles, triples)
+    assert all(v == 1 for v in compiles.values()), compiles
+    for label in compiles:
+        g = obs.registry.gauges["fl/compile_s/" + label.split("/")[-1]]
+        assert g.value > 0
+    assert obs.registry.histograms["fl/compile_s"].count >= len(triples)
 
 
 # ------------------------------------------------------------ dtype hazard

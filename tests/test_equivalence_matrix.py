@@ -208,6 +208,31 @@ def test_matrix_sync_fast(scenario):
                                        teacher), f"{scenario}/1x1-r8")
 
 
+@pytest.mark.parametrize("scenario", ["fedavg", "kd"])
+def test_matrix_loop_engine_runs_fused(scenario):
+    """The independent-loop column can opt into the fused path: a
+    ``vmap_clusters=False`` engine with ``allow_loop_dispatch=True`` builds
+    the same scan-fused block programs and matches the golden loop — so
+    loop-mode debugging configs no longer pay one program per member per
+    round when they only want the legacy batching semantics elsewhere."""
+    golden, level, members = _golden(scenario)
+    eng, _ = _build(vmap_clusters=False, allow_loop_dispatch=True)
+    teacher = _teacher(eng) if scenario == "kd" else None
+    _assert_cell(golden, _run_dispatch(eng, level, members, ROUNDS, 8,
+                                       teacher),
+                 f"{scenario}/loop-fused-r8")
+
+
+def test_loop_dispatch_requires_opt_in():
+    """R>1 on a loop engine stays an explicit contract: the engine ctor
+    rejects it unless ``allow_loop_dispatch`` opts in (the error message
+    names the escape hatch)."""
+    with pytest.raises(ValueError, match="allow_loop_dispatch"):
+        _build(vmap_clusters=False)
+    eng, _ = _build(vmap_clusters=False, allow_loop_dispatch=True)
+    assert not eng.cfg.vmap_clusters and eng.cfg.rounds_per_dispatch == 8
+
+
 @eightway
 @pytest.mark.parametrize("mesh_shape", ["8x1", "4x2", "2x4"])
 @pytest.mark.parametrize("scenario", ["fedavg", "kd"])

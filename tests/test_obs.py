@@ -1,0 +1,310 @@
+"""Observability layer: metrics registry primitives (counter/gauge/
+histogram/ring-buffer tables), span tracer + Chrome-trace export, the JSONL
+schema validator, SimReport's registry-backed summary (including the
+masked-participation regression), and one small end-to-end sim run
+asserting the acceptance contract: ≥95% span coverage and bit-exact
+summary parity between ``--metrics-out`` and ``report.summary()``."""
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.obs import (NULL_OBS, NULL_TRACER, MetricsRegistry, Tracer,
+                       make_observability, span_coverage)
+from repro.obs.registry import Table
+from repro.obs.validate import (check_summary_parity, validate_metrics_jsonl,
+                                validate_trace)
+from repro.sim.report import ClusterRoundStats, RoundRecord, SimReport
+
+
+# ------------------------------------------------------------ registry
+def test_counter_gauge_histogram():
+    reg = MetricsRegistry()
+    c = reg.counter("a/b")
+    c.inc()
+    c.inc(2.5)
+    assert c.value == 3.5
+    assert reg.counter("a/b") is c                # get-or-create identity
+    g = reg.gauge("g")
+    assert math.isnan(g.value)
+    g.set(4)
+    g.set(7.0)
+    assert g.value == 7.0
+    h = reg.histogram("h")
+    for v in (1e-3, 2e-3, 5.0):
+        h.observe(v)
+    s = h.summary()
+    assert s["count"] == 3
+    assert s["sum"] == pytest.approx(5.003)
+    assert s["min"] == 1e-3 and s["max"] == 5.0
+    assert sum(n for _, n in s["buckets"]) == 3
+
+
+def test_table_append_growth_and_order():
+    t = Table("t", {"a": "int64", "b": "float64"}, capacity=2, max_rows=64)
+    for i in range(10):
+        t.append(a=i, b=i * 0.5)
+    assert len(t) == 10 and t.dropped == 0        # grew past capacity=2
+    np.testing.assert_array_equal(t.column("a"), np.arange(10))
+    assert [r["b"] for r in t.rows()] == [i * 0.5 for i in range(10)]
+
+
+def test_table_ring_wrap_counts_dropped():
+    t = Table("t", {"a": "int64"}, capacity=4, max_rows=4)
+    for i in range(7):
+        t.append(a=i)
+    assert len(t) == 4 and t.dropped == 3
+    # oldest retained first
+    np.testing.assert_array_equal(t.column("a"), [3, 4, 5, 6])
+
+
+def test_table_bump_last_and_reset():
+    t = Table("t", {"round": "int64", "level": "int64", "flushed": "int64"})
+    t.append(round=0, level=0, flushed=0)
+    t.append(round=0, level=1, flushed=0)
+    t.append(round=1, level=0, flushed=1)
+    assert t.bump_last("flushed", 2, match={"round": 0, "level": 1})
+    assert not t.bump_last("flushed", 9, match={"round": 5, "level": 0})
+    assert t.column("flushed").tolist() == [0, 2, 1]
+    t.reset()
+    assert len(t) == 0 and t.dropped == 0
+    t.append(round=7, level=0, flushed=0)
+    assert t.column("round").tolist() == [7]
+
+
+def test_table_defaults_fill_missing_fields():
+    t = Table("t", {"x": "int64", "acc": "float64"},
+              defaults={"acc": math.nan})
+    t.append(x=1)
+    t.append(x=2, acc=0.5)
+    acc = t.column("acc")
+    assert math.isnan(acc[0]) and acc[1] == 0.5
+
+
+def test_registry_text_and_snapshot():
+    reg = MetricsRegistry()
+    reg.counter("fl/compiles/p0").inc(2)
+    reg.gauge("fl/compile_s/p0").set(0.25)
+    reg.histogram("fl/compile_s").observe(0.25)
+    txt = reg.render_text()
+    assert "# TYPE fl_compiles_p0 counter" in txt
+    assert "fl_compiles_p0 2" in txt
+    assert 'fl_compile_s_bucket{le="1"} 1' in txt
+    assert "fl_compile_s_count 1" in txt
+    snap = reg.snapshot()
+    assert snap["counters"]["fl/compiles/p0"] == 2
+    assert snap["gauges"]["fl/compile_s/p0"] == 0.25
+    assert snap["histograms"]["fl/compile_s"]["count"] == 1
+
+
+def test_jsonl_roundtrip_through_validator(tmp_path):
+    reg = MetricsRegistry()
+    reg.counter("c").inc(3)
+    reg.gauge("nanned").set(float("nan"))         # NaN → null, not a crash
+    t = reg.table("tab", {"a": "int64", "b": "float64"})
+    t.append(a=1, b=0.1)
+    t.append(a=2, b=0.2)
+    p = tmp_path / "m.jsonl"
+    n = reg.to_jsonl(p)
+    assert n == 2 + 1 + 2                         # counter+gauge, meta, rows
+    out = validate_metrics_jsonl(p)
+    assert out["counters"]["c"] == 3
+    assert out["gauges"]["nanned"] is None
+    assert [r["a"] for r in out["tables"]["tab"]] == [1, 2]
+    assert out["dropped"] == {"tab": 0}
+
+
+def test_validator_rejects_schema_drift(tmp_path):
+    p = tmp_path / "bad.jsonl"
+    p.write_text(
+        json.dumps({"kind": "table", "name": "t", "columns": ["a"],
+                    "rows": 1, "dropped": 0}) + "\n"
+        + json.dumps({"kind": "row", "table": "t", "a": 1, "EXTRA": 2}) + "\n")
+    with pytest.raises(ValueError, match="column"):
+        validate_metrics_jsonl(p)
+
+
+# ------------------------------------------------------------ tracer
+def test_tracer_spans_nest_and_export(tmp_path):
+    tr = Tracer()
+    with tr.span("root", cat="engine", mode="x"):
+        with tr.span("child_a"):
+            pass
+        with tr.span("child_b"):
+            pass
+    tr.instant("marker")
+    evs = tr.events()
+    names = [e["name"] for e in evs]
+    assert set(names) == {"root", "child_a", "child_b", "marker"}
+    root = next(e for e in evs if e["name"] == "root")
+    assert root["args"] == {"mode": "x"}
+    for e in evs:
+        if e["name"].startswith("child"):
+            assert e["ts"] >= root["ts"]
+            assert e["ts"] + e["dur"] <= root["ts"] + root["dur"] + 1e-6
+    doc = tr.to_chrome()
+    assert doc["traceEvents"][0]["ph"] == "M"     # process_name metadata
+    p = tmp_path / "trace.json"
+    tr.write(p)
+    assert json.loads(p.read_text())["displayTimeUnit"] == "ms"
+    validate_trace(p)                             # loadable, well-formed
+
+
+def test_tracer_complete_is_retroactive():
+    tr = Tracer()
+    with tr.span("root"):
+        pass
+    import time
+    t0 = time.perf_counter_ns()
+    tr.complete("compile", t0 - 10_000, 10_000, cat="fl", level=0)
+    ev = next(e for e in tr.events() if e["name"] == "compile")
+    assert ev["dur"] == pytest.approx(10.0)       # ns → µs
+    assert ev["args"]["level"] == 0
+
+
+def test_span_coverage_math():
+    # hand-built events: root [0, 100], children covering [0,60]+[50,90]
+    mk = lambda n, ts, dur: {"name": n, "ph": "X", "ts": ts, "dur": dur}
+    evs = [mk("root", 0, 100), mk("a", 0, 60), mk("b", 50, 40)]
+    assert span_coverage(evs, "root") == pytest.approx(0.9)
+    with pytest.raises(ValueError, match="no 'nope' span"):
+        span_coverage(evs, "nope")
+
+
+def test_null_tracer_is_inert():
+    with NULL_TRACER.span("x", cat="y", z=1):
+        pass
+    NULL_TRACER.instant("x")
+    NULL_TRACER.complete("x", 0, 1)
+    obj = object()
+    assert NULL_TRACER.fence(obj) is obj          # identity, no jax import
+    assert NULL_TRACER.events() == []
+    assert not NULL_OBS.on
+    assert NULL_OBS.tracer is NULL_TRACER
+
+
+# ------------------------------------------------------------ SimReport
+def _mk_report(obs=None):
+    rep = SimReport(scenario="t", mar_policy="mask", schedule="sync",
+                    obs=obs)
+    rep.add(RoundRecord(round=0, t_start=0.0, duration=2.0, clusters=[
+        ClusterRoundStats(level=0, time=2.0, active=[0, 1], bytes=100.0,
+                          mean_loss=1.0, masked={2: 1},  # 2 NOT in active
+                          violations=[2]),
+        ClusterRoundStats(level=1, time=1.0, active=[3], bytes=50.0,
+                          mean_loss=2.0, dropped=[4]),
+    ]))
+    rep.add(RoundRecord(round=1, t_start=2.0, duration=3.0, clusters=[
+        ClusterRoundStats(level=0, time=3.0, active=[0, 1, 2], bytes=100.0,
+                          mean_loss=0.5, acc=0.9),
+        ClusterRoundStats(level=1, time=1.0, active=[3], bytes=50.0,
+                          mean_loss=1.5, banked=[4]),
+    ]))
+    return rep
+
+
+def test_summary_counts_masked_participants():
+    """Regression: a member masked to a partial-step update (and not listed
+    in ``active``) still participated — it must appear in the participant
+    set, the active-slot numerator, and the registry's ``active`` column."""
+    rep = _mk_report()
+    s = rep.summary()
+    assert s["participants"] == 5                 # pids 0..4; 2 via masked
+    # slots: r0 (2a+1mask)+(1a+1drop), r1 3a+(1a+1bank) = active 8, bank 1,
+    # drop 1 → rate (8+1)/(8+1+1)
+    assert s["participation_rate"] == pytest.approx(9 / 10)
+    assert s["mar_violations"] == 1
+    assert s["dropped_total"] == 1 and s["banked_total"] == 1
+    assert s["total_bytes"] == 300.0
+    # the columnar row for r0/L0 counted the masked pid as active
+    tab = rep.registry.tables["sim/cluster_rounds"]
+    assert tab.column("active").tolist() == [3, 1, 3, 1]
+    assert tab.column("masked").tolist() == [1, 0, 0, 0]
+
+
+def test_bump_flushed_keeps_view_and_table_in_sync():
+    rep = _mk_report()
+    rep.bump_flushed(1, 2)
+    assert rep.rows[-1].clusters[1].flushed == 2
+    tab = rep.registry.tables["sim/cluster_rounds"]
+    assert tab.column("flushed").tolist() == [0, 0, 0, 2]
+    assert rep.summary()["flushed_total"] == 2
+
+
+def test_shared_registry_resets_between_reports():
+    obs = make_observability(trace=False)
+    _mk_report(obs=obs)
+    rep2 = _mk_report(obs=obs)                    # same registry, new run
+    assert len(obs.registry.tables["sim/cluster_rounds"]) == 4
+    assert rep2.summary()["rounds"] == 2
+
+
+def test_summary_parity_with_jsonl_export(tmp_path):
+    obs = make_observability(trace=False)
+    rep = _mk_report(obs=obs)
+    rep.bump_flushed(0, 1)
+    m = tmp_path / "metrics.jsonl"
+    r = tmp_path / "report.json"
+    obs.registry.to_jsonl(m)
+    r.write_text(json.dumps(rep.to_dict()))
+    parity = check_summary_parity(validate_metrics_jsonl(m), r)
+    assert parity["total_bytes"] == 300.0
+
+
+# ------------------------------------------------------ end-to-end (small)
+def test_sim_obs_end_to_end(tmp_path):
+    """A 4-round dispatch-mode sim with observability on: the trace loads,
+    round blocks cover ≥95% of ``sim.run``, compile counters are all 1 and
+    agree with ``compile_stats()``, and the exported JSONL reproduces
+    ``summary()`` exactly."""
+    import jax.numpy as jnp
+
+    from repro.core import server as srv
+    from repro.core.families import mlp_family
+    from repro.core.resources import participants_from_matrix
+    from repro.data.partition import dirichlet_partition
+    from repro.data.synthetic import make_classification, train_test_split
+    from repro.sim import (HeterogeneitySim, SimConfig, make_trace,
+                           sample_profiles)
+
+    ds = make_classification("synth-mnist", 160, seed=0)
+    train, test = train_test_split(ds)
+    idx = dirichlet_partition(train.y, 4, alpha=2.0, seed=0)
+    parts = participants_from_matrix(sample_profiles(4, seed=0),
+                                     n_data=[len(p) for p in idx])
+    cd = [{"x": train.x[p], "y": train.y[p]} for p in idx]
+    cfg = srv.FLConfig(steps_per_round=2, lr=0.08, seed=0, local_batch=8,
+                       rounds_per_dispatch=2)
+    eng = srv.FedRAC(parts, cd, mlp_family(), cfg, classes=10).setup()
+    obs = make_observability(fence=True)
+    sim = HeterogeneitySim(eng, make_trace("stable", 4, 4),
+                           SimConfig(rounds=4), obs=obs)
+    rep = sim.run({"x": jnp.asarray(test.x), "y": jnp.asarray(test.y)})
+
+    # --- trace: loadable + coverage
+    tp = tmp_path / "trace.json"
+    obs.tracer.write(tp)
+    stats = validate_trace(tp, coverage_root="sim.run", min_coverage=0.95)
+    assert stats["coverage"] >= 0.95
+    names = {e["name"] for e in obs.tracer.events()}
+    for expected in ("sim.run", "round_block", "dispatch", "compile"):
+        assert expected in names, f"missing {expected!r} span"
+
+    # --- compile accounting through the registry matches compile_stats()
+    snap = obs.registry.snapshot()
+    compiles = {k: v for k, v in snap["counters"].items()
+                if k.startswith("fl/compiles/")}
+    assert compiles and all(v == 1 for v in compiles.values()), compiles
+    assert snap["counters"]["fl/compile_total"] == sum(compiles.values())
+    stats = eng.compile_stats()
+    assert sum(compiles.values()) <= sum(stats.values())
+    assert snap["counters"]["fl/dispatch_blocks"] >= 2
+    assert snap["counters"]["fl/h2d_bytes"] > 0
+
+    # --- metrics JSONL reproduces summary() bit-exactly
+    mp, rp = tmp_path / "m.jsonl", tmp_path / "r.json"
+    obs.registry.to_jsonl(mp)
+    rp.write_text(json.dumps(rep.to_dict()))
+    parity = check_summary_parity(validate_metrics_jsonl(mp), rp)
+    assert parity["total_bytes"] == rep.summary()["total_bytes"]

@@ -9,7 +9,12 @@ hand — randomized statements of what used to be single-example regressions:
   * bank-overflow compression (``aggregation.compress_bank_rows``)
     preserves Σu and Σu·p exactly;
   * plane flatten/unflatten round-trips bit-exactly across every model
-    family and 2D-mesh column count (``make_plane_spec(model_size=…)``).
+    family and 2D-mesh column count (``make_plane_spec(model_size=…)``);
+  * the class-balanced sampler (``device_sampler.balanced_indices`` over
+    ``build_class_table`` tables) realizes the round-robin quota scheme of
+    the host-side numpy reference under arbitrary class skew: every batch
+    slot draws from exactly the class the reference assigns it, and narrow
+    tables never leak out-of-class or out-of-window indices.
 
 Runs through the optional-hypothesis shim: with hypothesis installed (the
 ``[dev]`` extra — CI), each property fuzzes; without it the ``@given``
@@ -26,6 +31,8 @@ from repro.configs.base import ModelConfig
 from repro.core import aggregation as agg
 from repro.core.families import cnn_family, lm_family, mlp_family
 from repro.core.plane import PLANE_ALIGN, make_plane_spec, pad_member_rows
+from repro.data.device_sampler import (balanced_indices, build_class_table,
+                                       round_key)
 
 
 # ------------------------------------------------------------ checkers
@@ -91,6 +98,49 @@ FAMILIES = {
 }
 
 
+def check_balanced_sampler_quota(seed, C, classes, batch, steps, m):
+    """``balanced_indices`` vs the numpy reference quota scheme, under a
+    random class skew per member: (1) slot b of member i draws from class
+    ``present_i[b % |present_i|]`` (present classes ascending — the
+    round-robin ⌈batch/n⌉ quota split), verified by mapping drawn indices
+    back through each member's labels; (2) every drawn index lies in the
+    class's first ``min(count, m)`` sample positions (the narrow-table
+    uniformity window), so table padding is never drawn."""
+    rng = np.random.default_rng(seed)
+    ys = []
+    for _ in range(C):
+        present = rng.permutation(classes)[:int(rng.integers(1, classes + 1))]
+        # skewed populations: some present classes rare, some dominant
+        ys.append(np.asarray(rng.choice(
+            present, size=int(rng.integers(3, 40)),
+            p=rng.dirichlet(np.full(len(present), 0.5)))))
+    if m is None:  # shared cluster-wide width, like FedRAC's table build
+        m = max(1, max(int((y == c).sum()) for y in ys
+                       for c in range(classes)))
+    tables, counts = map(np.stack, zip(*(build_class_table(y, classes, m)
+                                         for y in ys)))
+    idx = np.asarray(balanced_indices(round_key(seed, 0), steps, batch,
+                                      jnp.asarray(tables),
+                                      jnp.asarray(counts)))
+    assert idx.shape == (C, steps, batch)
+    width = tables.shape[-1]
+    for i in range(C):
+        y = ys[i]
+        present = np.where(counts[i] > 0)[0]            # ascending order
+        ref_cls = present[np.arange(batch) % len(present)]   # numpy quota
+        # (1) drawn sample's label == reference class, every slot and step
+        np.testing.assert_array_equal(
+            y[idx[i]], np.broadcast_to(ref_cls, (steps, batch)),
+            err_msg=f"member {i}: quota/class assignment diverged")
+        # (2) draws stay inside each class's uniform window
+        for cls in np.unique(ref_cls):
+            window = np.where(y == cls)[0][:min(int(counts[i][cls]), width)]
+            drawn = idx[i][:, ref_cls == cls].ravel()
+            assert np.isin(drawn, window).all(), \
+                f"member {i} class {cls}: draw outside first-{len(window)} " \
+                f"window"
+
+
 def check_plane_roundtrip(family_name, level, model_size, seed):
     """to_params(to_plane(p)) is bit-exact for every family/level, and the
     padded length divides by model_size × PLANE_ALIGN (the 2D-mesh column
@@ -147,6 +197,14 @@ def test_prop_plane_roundtrip(family_name, level, model_size, seed):
     check_plane_roundtrip(family_name, level, model_size, seed)
 
 
+@given(st.integers(0, 9999), st.integers(1, 5), st.integers(2, 8),
+       st.integers(1, 12), st.integers(1, 3),
+       st.one_of(st.none(), st.integers(1, 6)))
+@settings(max_examples=20, deadline=None)
+def test_prop_balanced_sampler_quota(seed, C, classes, batch, steps, m):
+    check_balanced_sampler_quota(seed, C, classes, batch, steps, m)
+
+
 # ---------------------------------------------------- seeded smoke paths
 # Executable without hypothesis (the shim skips the @given tests): a few
 # seeded draws through the same checkers keep the invariants enforced on
@@ -183,3 +241,10 @@ def test_compress_examples(cap, n_rows):
 @pytest.mark.parametrize("model_size", [1, 2, 8])
 def test_plane_roundtrip_examples(family_name, model_size):
     check_plane_roundtrip(family_name, 1, model_size, seed=3)
+
+
+@pytest.mark.parametrize("seed,m", [(0, None), (1, 2), (2, 4), (3, 1)])
+def test_balanced_sampler_examples(seed, m):
+    # m=1 and m=2 force narrow tables (< most class populations); m=None
+    # lets build_class_table size the table to the largest class
+    check_balanced_sampler_quota(seed, C=3, classes=6, batch=8, steps=2, m=m)

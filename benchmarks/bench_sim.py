@@ -48,6 +48,13 @@ Headline: sharded-R=8 vs legacy ≥1.2× on this container (the 8 virtual
 host devices share 2 physical cores, so the sharding itself is ~neutral
 here; the row pins the scaling machinery, real meshes supply the compute).
 
+``--mode fleet`` benchmarks the vectorized fleet-scale stack (no model
+training): columnar trace generation (legacy scalar loops vs batched draws
+at n=10⁵ — same seeds, bit-identical events, ≥50× target) and the full
+trace + sampled-Dunn Procedure 1 + 3-round ``FleetSim`` pipeline at
+10⁴/10⁵/10⁶ participants.  No O(n²) arrays anywhere, so 10⁶ runs in
+container memory.
+
 ``--mode mesh2d`` is the same comparison on a ``4x2`` (data × model) mesh:
 member rows split 4-way AND every plane-shaped buffer (global plane,
 buffered bank, teacher/history stacks) splits its COLUMNS 2-way along
@@ -442,6 +449,57 @@ def run_cluster_bench(args) -> dict:
     return {"looped": looped, "vmapped": vmapped}
 
 
+# ------------------------------------------------------------ fleet bench
+def run_fleet_bench(sizes=(10_000, 100_000, 1_000_000), rounds: int = 3,
+                    seed: int = 0, legacy_n: int = 100_000) -> dict:
+    """Vectorized fleet stack end-to-end: columnar trace build + sampled-Dunn
+    Procedure 1 + ``rounds`` FleetSim rounds at each fleet size, plus the
+    trace-generation speedup row (scalar legacy loops vs batched draws on the
+    mixed scenario's three generators, identical seeds → identical events).
+    No step ever materializes an O(n²) array, so 10⁶ fits CPU memory."""
+    from repro.core.resources import Fleet
+    from repro.sim import FleetSim, FleetSimConfig, make_fleet_trace
+    from repro.sim.traces import (legacy_drift_events, legacy_dropout_events,
+                                  legacy_straggler_events)
+    out = {}
+    legacy_s, vec_s = 1e9, 1e9
+    for _ in range(2):                       # mixed-scenario defaults/seeds;
+        with Timer() as t:                   # min-of-reps beats 1-core noise
+            legacy_dropout_events(legacy_n, rounds, 0.08, seed)
+            legacy_drift_events(legacy_n, rounds, 0.05, seed + 1)
+            legacy_straggler_events(legacy_n, rounds, 0.08, seed + 2)
+        legacy_s = min(legacy_s, t.dt)
+    for _ in range(5):
+        with Timer() as t:
+            make_fleet_trace("mixed", legacy_n, rounds, seed=seed)
+        vec_s = min(vec_s, t.dt)
+    out["trace"] = {"n": legacy_n, "rounds": rounds,
+                    "legacy_s": round(legacy_s, 4),
+                    "vectorized_s": round(vec_s, 5),
+                    "speedup": round(legacy_s / vec_s, 1)}
+    for n in sizes:
+        fleet = Fleet.from_matrix(sample_profiles(n, seed=seed))
+        with Timer() as t:
+            trace = make_fleet_trace("mixed", n, rounds, seed=seed)
+        trace_s = t.dt
+        with Timer() as t:                   # Procedure 1 + MAR calibration
+            sim = FleetSim(fleet, trace, FleetSimConfig(
+                rounds=rounds, select="fedcs", seed=seed))
+        cluster_s = t.dt
+        with Timer() as t:
+            rep = sim.run()
+        sim_s = t.dt
+        s = rep.summary()
+        out[f"fleet_{n}"] = {
+            "n": n, "rounds": rounds, "k": rep.k,
+            "events": sum(r.events for r in rep.rows),
+            "trace_s": round(trace_s, 4), "cluster_s": round(cluster_s, 4),
+            "sim_s": round(sim_s, 4),
+            "rounds_per_s": round(rounds / sim_s, 2),
+            "participation": s["participation_rate"]}
+    return out
+
+
 # ------------------------------------------------------------ run.py hooks
 def bench_sim_mesh():
     """benchmarks/run.py suite: plane-sharded dispatch at 8 forced host
@@ -502,6 +560,25 @@ def bench_sim_padding():
                f"migrations={r['migrations']}")
 
 
+def bench_sim_fleet():
+    """benchmarks/run.py suite: million-participant vectorized fleet rows —
+    trace-generation speedup at 10⁵ (legacy scalar loops vs batched draws)
+    and trace+Procedure-1+3-round FleetSim wall time at 10⁴/10⁵/10⁶."""
+    res = run_fleet_bench()
+    tr = res["trace"]
+    yield ("sim/fleet_trace", tr["vectorized_s"] * 1e6,
+           f"n={tr['n']};legacy_s={tr['legacy_s']};"
+           f"vectorized_s={tr['vectorized_s']};speedup={tr['speedup']}")
+    for n in (10_000, 100_000, 1_000_000):
+        r = res[f"fleet_{n}"]
+        total = r["trace_s"] + r["cluster_s"] + r["sim_s"]
+        yield (f"sim/fleet_{n}", total * 1e6,
+               f"rounds_per_s={r['rounds_per_s']};k={r['k']};"
+               f"events={r['events']};trace_s={r['trace_s']};"
+               f"cluster_s={r['cluster_s']};sim_s={r['sim_s']};"
+               f"participation={r['participation']}")
+
+
 def bench_sim_cluster():
     """benchmarks/run.py suite: looped vs vmapped cluster execution (CNN at
     CPU-budget scale; the lm regime stays CLI-only)."""
@@ -518,7 +595,7 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", default="cluster",
                     choices=["cluster", "padding", "dispatch", "mesh",
-                             "mesh2d", "mesh-inner", "all"],
+                             "mesh2d", "mesh-inner", "fleet", "all"],
                     help="'mesh' re-executes itself under forced host "
                          "devices and times the plane-sharded dispatch; "
                          "'mesh2d' is the same on a 4x2 (data × model) "
@@ -540,6 +617,8 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--sim-rounds", type=int, default=8,
                     help="padding mode: simulated rounds per path")
+    ap.add_argument("--fleet-rounds", type=int, default=3,
+                    help="fleet mode: FleetSim rounds per size")
     ap.add_argument("--participants", type=int, default=10,
                     help="padding mode: fleet size")
     ap.add_argument("--json", default=None, metavar="PATH",
@@ -588,6 +667,24 @@ def main(argv=None):
             print(f"  fused  (R={d['R']})  : "
                   f"{d['dispatch_steps_per_s']:10.1f} client-steps/s "
                   f"({d['speedup']:.2f}× speedup)")
+    if args.mode in ("fleet", "all"):
+        res = run_fleet_bench(rounds=args.fleet_rounds, seed=args.seed)
+        results["fleet"] = res
+        tr = res["trace"]
+        print(f"trace generation, mixed scenario, n={tr['n']} × "
+              f"{tr['rounds']} rounds")
+        print(f"  legacy loops : {tr['legacy_s']:8.3f}s")
+        print(f"  vectorized   : {tr['vectorized_s']:8.4f}s "
+              f"({tr['speedup']:.0f}× speedup)")
+        for key, r in res.items():
+            if key == "trace":
+                continue
+            print(f"fleet n={r['n']:>9}  k={r['k']}  "
+                  f"trace={r['trace_s']:7.3f}s  "
+                  f"cluster={r['cluster_s']:7.3f}s  "
+                  f"sim={r['sim_s']:7.3f}s  "
+                  f"({r['rounds_per_s']:.2f} rounds/s, "
+                  f"{r['events']} events)")
     if args.mode in ("padding", "all"):
         pad = run_padding_bench(n=args.participants, rounds=args.sim_rounds,
                                 steps=args.steps, seed=args.seed,

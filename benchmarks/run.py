@@ -33,6 +33,7 @@ def _suites(fast: bool):
         ("sim/dispatch", bench_sim.bench_sim_dispatch),
         ("sim/mesh", bench_sim.bench_sim_mesh),
         ("sim/mesh2d", bench_sim.bench_sim_mesh2d),
+        ("sim/fleet", bench_sim.bench_sim_fleet),
     ]
     if not fast:
         suites += [

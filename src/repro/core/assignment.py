@@ -138,6 +138,30 @@ def reassign(p: Participant, current: Assignment,
     return old_level, c.level
 
 
+def reassign_by_centroids(V: np.ndarray, clustering,
+                          level_of_cluster: np.ndarray | None = None
+                          ) -> np.ndarray:
+    """Procedure 2 at fleet scale: re-place (changed) participants with ONE
+    argmin over the setup-time cluster centroids.
+
+    ``clustering`` is a ``FleetClusteringResult`` — its frozen (lo, span, λ)
+    map raw resource rows into the same normalized √λ-scaled space the
+    centroids live in, so a drifted participant lands in whichever resource
+    tier it now resembles, without replaying the per-cluster admission loop
+    (τ/n adjustments happen lazily when the cluster next prices a round).
+    ``level_of_cluster`` optionally maps centroid index → cluster level
+    (after ``order_clusters_by_resources``-style relabeling); identity when
+    omitted.  Returns one level per row of ``V``.
+    """
+    from repro.core.clustering import nearest_centroid
+    V = np.atleast_2d(np.asarray(V, np.float64))
+    Xw = ((V - clustering.lo) / clustering.span) * np.sqrt(clustering.lam)
+    lab = nearest_centroid(Xw, clustering.centroids)
+    if level_of_cluster is not None:
+        lab = np.asarray(level_of_cluster)[lab]
+    return lab
+
+
 def build_cluster_specs(model_family_sizes: list[tuple[float, float]],
                         consts: rounds.ConvergenceConstants,
                         *, E: int = 5, q_target: float = 0.05,

@@ -102,12 +102,123 @@ def dunn_index(S: np.ndarray, labels: np.ndarray) -> float:
     return float(dmin / dia)
 
 
+def nearest_centroid(X: np.ndarray, centers: np.ndarray) -> np.ndarray:
+    """Labels by one argmin over centroids — squared-norm expansion
+    (gemm + two rank-1 broadcasts), never an (n, k, d) temp."""
+    X = np.asarray(X, np.float64)
+    C = np.asarray(centers, np.float64)
+    d2 = ((X * X).sum(1)[:, None] + (C * C).sum(1)[None, :]
+          - 2.0 * (X @ C.T))
+    return np.argmin(d2, axis=1)
+
+
+def sampled_dunn_index(X: np.ndarray, labels: np.ndarray, *,
+                       sample: int = 1024, seed: int = 0) -> float:
+    """Eq. 5 estimated from coordinates — the fleet-scale Dunn path.
+
+    Works on the √λ-scaled coords (where Euclidean distance equals the
+    λ-weighted similarity metric) so the n×n similarity matrix is never
+    materialized.  Diameters are EXACT in O(n·d): the centroid form of
+    Eq. 4 is dia = 2·sqrt(Σ_i ||x_i − c||² / n) by the identity
+    Σ_ij d_ij² = 2n Σ_i ||x_i − c||².  The inter-cluster minimum (Eq. 3)
+    is estimated from ≤``sample`` uniformly drawn members per cluster,
+    pairwise per cluster pair via squared-norm expansion — so the estimate
+    can only MISS the true minimum: sampled Dunn ≥ exact Dunn, with
+    equality when every cluster fits inside ``sample`` (property-tested).
+    """
+    X = np.asarray(X, np.float64)
+    labels = np.asarray(labels)
+    ks = np.unique(labels)
+    if len(ks) < 2:
+        return 0.0
+    rng = np.random.default_rng(seed)
+    dia = 0.0
+    picks = []
+    for f in ks:
+        idx = np.flatnonzero(labels == f)
+        if len(idx) >= 2:
+            c = X[idx].mean(axis=0)
+            dia = max(dia, 2.0 * math.sqrt(
+                float(((X[idx] - c) ** 2).sum(1).mean())))
+        picks.append(idx if len(idx) <= sample
+                     else rng.choice(idx, size=sample, replace=False))
+    if dia == 0.0:
+        return 0.0
+    dmin2 = np.inf
+    for i in range(len(ks)):
+        A = X[picks[i]]
+        aa = (A * A).sum(1)
+        for j in range(i + 1, len(ks)):
+            B = X[picks[j]]
+            d2 = aa[:, None] + (B * B).sum(1)[None, :] - 2.0 * (A @ B.T)
+            dmin2 = min(dmin2, max(float(d2.min()), 0.0))
+    return float(math.sqrt(dmin2) / dia)
+
+
 @dataclass
 class ClusteringResult:
     k: int
     labels: np.ndarray
     di_values: dict          # k -> Dunn index
     normalized: np.ndarray   # the normalized resource matrix used
+
+
+@dataclass
+class FleetClusteringResult:
+    """Procedure-1 output at fleet scale.  Carries the cluster centroids and
+    the frozen normalization (lo, span) so later drift re-placement is one
+    ``nearest_centroid`` call in the same coordinate space (vectorized
+    Procedure 2, see ``core.assignment.reassign_by_centroids``)."""
+    k: int
+    labels: np.ndarray       # (n,) int
+    centroids: np.ndarray    # (k, 3) in √λ-scaled normalized coords
+    di_values: dict          # k -> sampled Dunn index
+    lo: np.ndarray           # (3,) per-column normalization offset
+    span: np.ndarray         # (3,) per-column normalization scale
+    lam: np.ndarray          # (3,) λ weights
+
+
+def fleet_optimal_clusters(V: np.ndarray, lam=(1 / 3, 1 / 3, 1 / 3), *,
+                           seed: int = 0, k_cap: int = 8,
+                           train_sample: int = 4096,
+                           dunn_sample: int = 1024,
+                           restarts: int = 8) -> FleetClusteringResult:
+    """Procedure 1 for 10⁴–10⁶ participants: no O(n²) array, no full-fleet
+    Lloyd.  k-means fits on a ≤``train_sample`` uniform subsample (Lloyd's
+    centroids are means — a few thousand points pin them to the same basins
+    as the full fleet), full-fleet labels come from one ``nearest_centroid``
+    argmin, and each k is scored with ``sampled_dunn_index``.  The k-sweep
+    is capped at ``k_cap`` (⌊√N⌋ at N=10⁶ would sweep to 1000 — the paper's
+    fleets never warrant more than a handful of resource tiers).
+
+    With ``train_sample``/``dunn_sample`` ≥ n this reduces to the exact
+    ``optimal_clusters`` path (same seeding, same restarts, same tiebreak),
+    which is how the Table I/IV anchors validate it.
+    """
+    V = np.asarray(V, np.float64)
+    N = len(V)
+    lam_a = np.asarray(lam, np.float64)
+    lo, hi = V.min(axis=0), V.max(axis=0)
+    span = np.where(hi > lo, hi - lo, 1.0)
+    Xw = ((V - lo) / span) * np.sqrt(lam_a)
+    k_max = min(k_cap, int(math.floor(math.sqrt(N))))
+    if k_max < 2:
+        return FleetClusteringResult(1, np.zeros(N, np.int64),
+                                     Xw.mean(0, keepdims=True),
+                                     {}, lo, span, lam_a)
+    rng = np.random.default_rng(seed)
+    Xfit = (Xw if N <= train_sample
+            else Xw[rng.choice(N, train_sample, replace=False)])
+    di, labs, cents = {}, {}, {}
+    for k in range(2, k_max + 1):
+        _, centers = kmeans(Xfit, k, seed=seed, restarts=restarts)
+        lab = nearest_centroid(Xw, centers)
+        di[k] = sampled_dunn_index(Xw, lab, sample=dunn_sample, seed=seed)
+        labs[k] = lab
+        cents[k] = centers
+    best = min(di, key=lambda k: (-di[k], k))
+    return FleetClusteringResult(best, labs[best], cents[best], di,
+                                 lo, span, lam_a)
 
 
 def optimal_clusters(V: np.ndarray, lam=(1 / 3, 1 / 3, 1 / 3), *,

@@ -39,6 +39,18 @@ def round_time(p: Participant, flops_per_sample: float, model_bytes: float,
             + comm_time(p, model_bytes))
 
 
+def train_time_vec(s: np.ndarray, flops_per_sample, E, n,
+                   compute_slowdown=1.0) -> np.ndarray:
+    """Vectorized T_i^a · E over participant arrays (fleet engine); every
+    argument broadcasts, constants identical to ``train_time``."""
+    return (flops_per_sample * n * E * compute_slowdown
+            / (s * GFLOPS_PER_GHZ * 1e9 * EFFICIENCY))
+
+
+def comm_time_vec(r: np.ndarray, model_bytes) -> np.ndarray:
+    return model_bytes * 8.0 / (r * 1e6)
+
+
 def round_bytes(model_bytes: float, *, download: bool = True,
                 upload: bool = True) -> float:
     """Per-participant traffic in one round: WPM down + WPM up (§III-B).

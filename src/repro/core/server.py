@@ -20,8 +20,8 @@ from repro.core import aggregation, assignment as asg, clustering, compaction
 from repro.core import cost_model, rounds as rnd
 from repro.core.client import local_update, make_cluster_update
 from repro.core.plane import make_plane_spec, plane_specs
-from repro.core.resources import (LAMBDA_PAPER, Participant, resource_matrix,
-                                  unit_normalize)
+from repro.core.resources import (LAMBDA_PAPER, Fleet, Participant,
+                                  resource_matrix, unit_normalize)
 from repro.data import device_sampler
 from repro.data.sampler import class_balanced_batches, sample_batches
 from repro.launch.sharding import (member_specs, replicated_specs,
@@ -160,7 +160,8 @@ class FedRACResult:
 
 
 class FedRAC:
-    def __init__(self, parts: list[Participant], client_data: list[dict],
+    def __init__(self, parts: "list[Participant] | Fleet",
+                 client_data: list[dict],
                  family: FLModelFamily, cfg: FLConfig, classes: int, *,
                  mesh=None, mesh_axis: str = "data",
                  mesh_model_axis: str = "model"):
@@ -178,7 +179,16 @@ class FedRAC:
                 "a mesh shards the device-resident dispatch path — set "
                 "rounds_per_dispatch>1 (the legacy one-round path would "
                 "silently ignore it)")
-        self.parts = parts
+        # a Fleet (struct-of-arrays) is the canonical fleet-scale state;
+        # self.parts stays the object API either way — Fleet rows are
+        # write-through views, so update_resources/sim mutations through
+        # either surface agree by construction
+        if isinstance(parts, Fleet):
+            self.fleet = parts
+            self.parts = parts.participants()
+        else:
+            self.fleet = None
+            self.parts = parts
         self.client_data = client_data        # per pid: {"x": ..., "y": ...}
         self.family = family
         self.cfg = cfg
@@ -212,6 +222,9 @@ class FedRAC:
         # device-resident shard pack; lazily-computed global pad lengths
         self._plane_specs = {}
         self._shard_packs = {}
+        # newest pack per (level, capacity, balanced) — the delta-update
+        # base when membership churns (Procedure-2 migration, sim events)
+        self._pack_prev = {}
         self._shard_len_pad = None
         self._class_m_pad = None
         self._class_tables = {}           # pid -> (table, counts) host arrays
@@ -219,7 +232,8 @@ class FedRAC:
     # ------------------------------------------------------------ setup
     def setup(self):
         cfg = self.cfg
-        V = resource_matrix(self.parts)
+        V = resource_matrix(self.fleet if self.fleet is not None
+                            else self.parts)
         res = clustering.optimal_clusters(V, cfg.lam, seed=cfg.seed)
         labels = clustering.order_clusters_by_resources(res.normalized,
                                                         res.labels, cfg.lam)
@@ -410,6 +424,70 @@ class FedRAC:
         boundary — the only place the dispatch path leaves the plane)."""
         return self.plane_spec(level).to_params(plane)
 
+    def _delta_shards(self, level: int, members: list[int], capacity: int,
+                      balanced: bool):
+        """Delta shard-pack update on membership churn: when a previous pack
+        exists at the same (level, capacity, balanced) signature, surviving
+        member rows are PERMUTED on device (one gather + row-mask) and only
+        genuinely new members' shards are built on host and scattered in —
+        a Procedure-2 migration of one participant moves one row, not the
+        whole (capacity, N_pad, …) stack.  Returns the new shards pytree, or
+        None when a full rebuild is better (no base pack, > half the rows
+        fresh) or a mesh is present (the base is row-sharded; a permutation
+        would reshard — the full build path places rows once, correctly).
+        Sets ``self._delta_h2d`` to the bytes actually transferred."""
+        self._delta_h2d = None
+        if self.mesh is not None:
+            return None
+        prev = self._pack_prev.get((level, capacity, balanced))
+        if prev is None:
+            return None
+        prev_members, prev_shards = prev
+        pos = {pid: i for i, pid in enumerate(prev_members)}
+        src = np.zeros(capacity, np.int64)
+        keep = np.zeros(capacity, bool)
+        fresh = []
+        for i, pid in enumerate(members):
+            j = pos.get(pid)
+            if j is None:
+                fresh.append(i)
+            else:
+                src[i] = j
+                keep[i] = True
+        if len(fresh) > max(1, len(members) // 2):
+            return None
+        srcj, keepj = jnp.asarray(src), jnp.asarray(keep)
+
+        def permute(a):
+            g = a[srcj]
+            mask = keepj.reshape((capacity,) + (1,) * (g.ndim - 1))
+            return jnp.where(mask, g, jnp.zeros((), g.dtype))
+
+        shards_j = jax.tree.map(permute, prev_shards)
+        moved = 0
+        if fresh:
+            N = self._shard_len_pad
+            rows = [self._member_shard(members[i]) for i in fresh]
+
+            def fresh_leaf(*xs):
+                first = np.asarray(xs[0])
+                out = np.zeros((len(fresh), N) + first.shape[1:],
+                               first.dtype)
+                for i, x in enumerate(xs):
+                    x = np.asarray(x)
+                    out[i, :x.shape[0]] = x
+                return out
+
+            host_rows = jax.tree.map(fresh_leaf, *rows)
+            idxj = jnp.asarray(np.asarray(fresh))
+            shards_j = jax.tree.map(
+                lambda a, f: a.at[idxj].set(jnp.asarray(f)),
+                shards_j, host_rows)
+            moved = sum(np.asarray(x).nbytes
+                        for x in jax.tree.leaves(host_rows))
+        self._delta_h2d = moved
+        return shards_j
+
     def _shard_pack(self, level: int, members: list[int], capacity: int,
                     balanced: bool):
         """Device-resident member data for the dispatch path: every member's
@@ -430,16 +508,20 @@ class FedRAC:
             self._shard_len_pad = 1 << (n_max - 1).bit_length()
         N = self._shard_len_pad
         shards = [self._member_shard(pid) for pid in members]
+        shards_j = self._delta_shards(level, members, capacity, balanced)
+        delta = shards_j is not None
+        if not delta:
 
-        def pack_leaf(*xs):
-            first = np.asarray(xs[0])
-            out = np.zeros((capacity, N) + first.shape[1:], first.dtype)
-            for i, x in enumerate(xs):
-                x = np.asarray(x)
-                out[i, :x.shape[0]] = x
-            return jnp.asarray(out)
+            def pack_leaf(*xs):
+                first = np.asarray(xs[0])
+                out = np.zeros((capacity, N) + first.shape[1:], first.dtype)
+                for i, x in enumerate(xs):
+                    x = np.asarray(x)
+                    out[i, :x.shape[0]] = x
+                return jnp.asarray(out)
 
-        pack = {"shards": jax.tree.map(pack_leaf, *shards),
+            shards_j = jax.tree.map(pack_leaf, *shards)
+        pack = {"shards": shards_j,
                 "n": jnp.asarray(np.concatenate(
                     [np.asarray([jax.tree.leaves(s)[0].shape[0]
                                  for s in shards], np.int32),
@@ -461,14 +543,20 @@ class FedRAC:
         if len(self._shard_packs) >= 16:               # bound device memory
             self._shard_packs.pop(next(iter(self._shard_packs)))
         self._shard_packs[key] = pack
+        if self.mesh is None:
+            self._pack_prev[(level, capacity, balanced)] = (
+                tuple(members), pack["shards"])
         if self.obs.on:
-            nbytes = sum(x.nbytes for x in jax.tree.leaves(pack))
+            nbytes = (self._delta_h2d if delta
+                      else sum(x.nbytes for x in jax.tree.leaves(pack)))
             reg = self.obs.registry
             reg.counter("fl/h2d_bytes").inc(nbytes)
             reg.counter("fl/pack_builds").inc()
+            if delta:
+                reg.counter("fl/pack_delta").inc()
             self.obs.tracer.complete(
                 "pack_h2d", t0, time.perf_counter_ns() - t0, cat="fl",
-                level=level, bytes=nbytes)
+                level=level, bytes=nbytes, delta=delta)
         return pack
 
     def _cluster_programs(self, level: int, use_kd: bool, capacity: int,

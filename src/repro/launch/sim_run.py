@@ -8,6 +8,14 @@ assignment) on synthetic federated data, then hands it to
 ``repro.sim.HeterogeneitySim``: per-round MAR deadline enforcement,
 dropouts/arrivals, resource drift through dynamic reassignment, straggler
 spikes — and prints the per-round timeline plus summary (optionally JSON).
+
+``--fleet-size N`` switches to the vectorized orchestration simulator
+(``repro.sim.FleetSim``): N Table-III-resampled participants as a struct-of-
+arrays ``Fleet``, columnar traces, sampled-Dunn Procedure 1, FedCS
+selection — no model training, fleet-scale scheduling/accounting only.
+
+  PYTHONPATH=src python -m repro.launch.sim_run --fleet-size 100000 \
+      --rounds 3 --trace mixed --select fedcs --select-budget 64
 """
 from __future__ import annotations
 
@@ -18,14 +26,31 @@ import jax.numpy as jnp
 
 from repro.core import server as srv
 from repro.core.families import cnn_family
-from repro.core.resources import (LAMBDA_EQUAL, LAMBDA_PAPER,
+from repro.core.resources import (LAMBDA_EQUAL, LAMBDA_PAPER, Fleet,
                                   participants_from_matrix)
 from repro.launch.mesh import make_sim_mesh
 from repro.data.partition import dirichlet_partition
 from repro.data.synthetic import SPECS, make_classification, train_test_split
 from repro.obs import make_observability
-from repro.sim import (SCENARIOS, HeterogeneitySim, SimConfig, make_trace,
-                       sample_profiles)
+from repro.sim import (SCENARIOS, FleetSim, FleetSimConfig, HeterogeneitySim,
+                       SimConfig, make_fleet_trace, make_trace,
+                       sample_profiles, scenario_knobs)
+
+
+def _trace_knobs(args) -> dict:
+    """CLI rate knobs the chosen scenario accepts, only when explicitly set
+    (``make_trace`` rejects unknown knobs — a typo'd ``--dropout-rate`` on a
+    drift trace must fail loudly, not silently no-op)."""
+    knobs = {"dropout_rate": args.dropout_rate, "drift_rate": args.drift_rate,
+             "spike_rate": args.spike_rate}
+    explicit = {k: v for k, v in knobs.items() if v is not None}
+    unknown = set(explicit) - scenario_knobs(args.trace)
+    if unknown:
+        raise SystemExit(
+            f"--{sorted(unknown)[0].replace('_', '-')} does not apply to "
+            f"trace {args.trace!r} (knobs: "
+            f"{sorted(scenario_knobs(args.trace)) or 'none'})")
+    return explicit
 
 
 def build(args):
@@ -56,7 +81,39 @@ def build(args):
     return eng, testb
 
 
+def run_fleet(args):
+    """Vectorized fleet path: Fleet + FleetTrace + FleetSim, no training."""
+    n = args.fleet_size
+    fleet = Fleet.from_matrix(sample_profiles(n, seed=args.seed))
+    trace = make_fleet_trace(args.trace, n, args.rounds, seed=args.seed,
+                             **_trace_knobs(args))
+    lam = LAMBDA_PAPER if args.lam == "paper" else LAMBDA_EQUAL
+    sim = FleetSim(fleet, trace, FleetSimConfig(
+        rounds=args.rounds, mar_policy=args.mar_policy, select=args.select,
+        select_budget=args.select_budget, schedule=args.schedule,
+        mar=args.mar or 0.0, kappa=args.kappa, lam=lam, seed=args.seed))
+    report = sim.run()
+    s = report.summary()
+    print(f"fleet={n} k={report.k} MAR={report.mar} "
+          f"cluster_sizes={s['cluster_sizes']}")
+    for r in report.rows:
+        print(f"r{r.round:03d}  Δ={r.duration:8.3f}s  events={r.events}  "
+              f"active={int(r.active.sum())} masked={int(r.masked.sum())} "
+              f"dropped={int(r.dropped.sum())} off={int(r.offline.sum())} "
+              f"unsel={int(r.unselected.sum())} "
+              f"banked={int(r.banked.sum())} flushed={int(r.flushed.sum())}")
+    if args.json:
+        print(json.dumps(s, default=float))
+    if args.report_out:
+        with open(args.report_out, "w") as f:
+            json.dump(s, f, default=float)
+        print(f"# report -> {args.report_out}")
+    return report
+
+
 def run(args):
+    if args.fleet_size:
+        return run_fleet(args)
     eng, testb = build(args)
     print(f"k_optimal={eng.k_optimal} compacted_to={eng.m} "
           f"MAR(master)={eng.specs[0].mar:.2f}s "
@@ -67,14 +124,14 @@ def run(args):
         print(f"mesh={dict(eng.mesh.shape)} "
               f"(member axis sharded {eng._mesh_n}-way{plane_txt})")
     trace = make_trace(args.trace, args.participants, args.rounds,
-                       seed=args.seed, dropout_rate=args.dropout_rate,
-                       drift_rate=args.drift_rate, spike_rate=args.spike_rate)
+                       seed=args.seed, **_trace_knobs(args))
     obs = None
     if args.metrics_out or args.trace_out or args.fence:
         obs = make_observability(fence=args.fence)
     sim = HeterogeneitySim(eng, trace, SimConfig(
         rounds=args.rounds, mar_policy=args.mar_policy,
-        schedule=args.schedule, eval_every=args.eval_every), obs=obs)
+        schedule=args.schedule, eval_every=args.eval_every,
+        select=args.select, select_budget=args.select_budget), obs=obs)
     report = sim.run(testb)
     print(report.timeline())
     try:
@@ -129,9 +186,23 @@ def main(argv=None):
                          "--xla_force_host_platform_device_count=8")
     ap.add_argument("--schedule", default="parallel",
                     choices=["parallel", "sequential"])
-    ap.add_argument("--dropout-rate", type=float, default=0.15)
-    ap.add_argument("--drift-rate", type=float, default=0.1)
-    ap.add_argument("--spike-rate", type=float, default=0.15)
+    ap.add_argument("--dropout-rate", type=float, default=None,
+                    help="per-round dropout probability (dropout/mixed "
+                         "traces; scenario default when omitted)")
+    ap.add_argument("--drift-rate", type=float, default=None,
+                    help="per-round resource-drift probability (drift/mixed)")
+    ap.add_argument("--spike-rate", type=float, default=None,
+                    help="per-round straggler-spike probability "
+                         "(straggler/mixed)")
+    ap.add_argument("--fleet-size", type=int, default=0, metavar="N",
+                    help="run the vectorized FleetSim over N resampled "
+                         "participants instead of the training simulator")
+    ap.add_argument("--select", default="all", choices=["all", "fedcs"],
+                    help="per-cluster client selection (fedcs: greedy "
+                         "deadline-aware admission, arXiv:1804.08333)")
+    ap.add_argument("--select-budget", type=int, default=0,
+                    help="fedcs: max clients admitted per cluster per round "
+                         "(0 = deadline-bounded only)")
     ap.add_argument("--dataset", default="synth-mnist", choices=list(SPECS))
     ap.add_argument("--participants", type=int, default=16)
     ap.add_argument("--samples", type=int, default=1600)

@@ -12,17 +12,27 @@ wall-clock, stragglers, bytes and MAR violations.
 Straggler and dropout decisions become ``step_mask`` rows of the batched
 vmap cluster update (``core.client.make_cluster_update``), so the simulator
 and the fast training path share one program.
+
+At fleet scale (10⁴–10⁶ participants) the object-per-participant engine
+gives way to the vectorized stack: columnar traces (``FleetTrace`` /
+``make_fleet_trace``) over a struct-of-arrays ``core.resources.Fleet``,
+driven by ``FleetSim`` — same scenarios, same seeds, whole-fleet numpy ops.
 """
 from repro.sim.clock import EventQueue, SimClock
 from repro.sim.engine import HeterogeneitySim, SimConfig
 from repro.sim.events import (Arrival, Departure, Event, ResourceDrift,
                               SpikeEnd, StragglerSpike)
+from repro.sim.fleet import (FleetReport, FleetRoundRecord, FleetSim,
+                             FleetSimConfig)
 from repro.sim.report import ClusterRoundStats, RoundRecord, SimReport
-from repro.sim.traces import SCENARIOS, Trace, make_trace, sample_profiles
+from repro.sim.traces import (SCENARIOS, FleetTrace, Trace, make_fleet_trace,
+                              make_trace, sample_profiles, scenario_knobs)
 
 __all__ = [
     "Arrival", "ClusterRoundStats", "Departure", "Event", "EventQueue",
-    "HeterogeneitySim", "ResourceDrift", "RoundRecord", "SCENARIOS",
-    "SimClock", "SimConfig", "SimReport", "SpikeEnd", "StragglerSpike",
-    "Trace", "make_trace", "sample_profiles",
+    "FleetReport", "FleetRoundRecord", "FleetSim", "FleetSimConfig",
+    "FleetTrace", "HeterogeneitySim", "ResourceDrift", "RoundRecord",
+    "SCENARIOS", "SimClock", "SimConfig", "SimReport", "SpikeEnd",
+    "StragglerSpike", "Trace", "make_fleet_trace", "make_trace",
+    "sample_profiles", "scenario_knobs",
 ]

@@ -51,6 +51,8 @@ class SimConfig:
     min_speed: float = 0.05           # drift clamps (GHz / Mbps / GB floors)
     min_rate: float = 0.1
     min_mem: float = 0.25
+    select: str = "all"               # all | fedcs (per-cluster selection)
+    select_budget: int = 0            # fedcs: max clients/cluster (0 = ∞)
 
 
 class HeterogeneitySim:
@@ -62,6 +64,8 @@ class HeterogeneitySim:
             raise ValueError(f"unknown mar_policy {cfg.mar_policy!r}")
         if cfg.schedule not in ("parallel", "sequential"):
             raise ValueError(f"unknown schedule {cfg.schedule!r}")
+        if cfg.select not in ("all", "fedcs"):
+            raise ValueError(f"unknown select {cfg.select!r}")
         if cfg.mar_policy == "buffer" and fedrac.cfg.aggregation != "buffered":
             raise ValueError(
                 'mar_policy "buffer" needs FLConfig(aggregation="buffered")')
@@ -157,6 +161,32 @@ class HeterogeneitySim:
                 compute_slowdown=self._spikes.get(pid, (1.0, 0))[0])
         return spec, times
 
+    def _fedcs_select(self, spec, members: list[int], times: dict) -> set:
+        """FedCS-style deadline-aware client selection (Nishio & Yonetani,
+        arXiv:1804.08333), adapted to the Eq. 2 cost model: training runs in
+        parallel across the selected set while uploads are sequential, so
+        the estimated cluster round time is Θ(S) = max_i T_train + Σ_i
+        T_comm.  Admission is the longest prefix in ascending round-time
+        order with Θ ≤ MAR (Θ grows monotonically along the prefix —
+        exactly the sort/cumsum form the vectorized fleet engine uses),
+        capped at ``select_budget``.  Every admitted member individually
+        satisfies T_i ≤ Θ ≤ MAR, so a FedCS round never sees MAR
+        violations among the selected."""
+        cand = [pid for pid in members if pid in self.online]
+        if not cand:
+            return set()
+        t_comm = np.array([cost_model.comm_time(self.fl.parts[pid],
+                                                spec.model_bytes)
+                           for pid in cand])
+        t_total = np.array([times[pid] for pid in cand])
+        order = np.lexsort((np.asarray(cand), t_total))
+        theta = (np.maximum.accumulate((t_total - t_comm)[order])
+                 + np.cumsum(t_comm[order]))
+        take = int(np.searchsorted(theta, spec.mar, side="right"))
+        if self.cfg.select_budget:
+            take = min(take, self.cfg.select_budget)
+        return {cand[i] for i in order[:take]}
+
     def _mar_decisions(self, level: int, members: list[int]):
         """Returns (stats, step_masks, weights, cluster_time)."""
         cfg, fl = self.cfg, self.fl
@@ -165,10 +195,17 @@ class HeterogeneitySim:
         stats = ClusterRoundStats(level=level, time=0.0)
         masks = np.zeros((len(members), S), np.float32)
         weights = np.zeros(len(members), np.float32)
+        selected = (self._fedcs_select(spec, members, times)
+                    if cfg.select == "fedcs" else None)
         contrib_times = []
         for i, pid in enumerate(members):
             if pid not in self.online:
                 stats.offline.append(pid)
+                continue
+            if selected is not None and pid not in selected:
+                # not admitted this round: selection precedes distribution,
+                # so no bytes move and no MAR policy applies
+                stats.unselected.append(pid)
                 continue
             n_eff = fl.assignment.n_eff.get(pid, 1)
             t = times[pid]
@@ -524,6 +561,7 @@ class HeterogeneitySim:
         return replace(s, active=list(s.active), dropped=list(s.dropped),
                        offline=list(s.offline), masked=dict(s.masked),
                        violations=list(s.violations), banked=list(s.banked),
+                       unselected=list(s.unselected),
                        flushed=0, mean_loss=float("nan"), acc=None)
 
     def _bank_carry(self, lvl: int, members: list[int], ripe: list,

@@ -24,7 +24,7 @@ _CLUSTER_COLS = {
     "round": "int64", "level": "int64", "time": "float64",
     "bytes": "float64", "active": "int64", "masked": "int64",
     "dropped": "int64", "offline": "int64", "banked": "int64",
-    "violations": "int64", "flushed": "int64",
+    "unselected": "int64", "violations": "int64", "flushed": "int64",
     "mean_loss": "float64", "acc": "float64",
 }
 _ROUND_COLS = {"round": "int64", "t_start": "float64",
@@ -41,6 +41,7 @@ class ClusterRoundStats:
     masked: dict = field(default_factory=dict)     # pid -> steps granted (<S)
     violations: list = field(default_factory=list)  # pids with T_i > MAR
     banked: list = field(default_factory=list)     # late updates buffered
+    unselected: list = field(default_factory=list)  # FedCS left out this round
     flushed: int = 0                               # stale updates merged
     bytes: float = 0.0
     mean_loss: float = float("nan")
@@ -114,7 +115,8 @@ class SimReport:
                 round=row.round, level=c.level, time=c.time, bytes=c.bytes,
                 active=len(c.participating), masked=len(c.masked),
                 dropped=len(c.dropped), offline=len(c.offline),
-                banked=len(c.banked), violations=len(c.violations),
+                banked=len(c.banked), unselected=len(c.unselected),
+                violations=len(c.violations),
                 flushed=c.flushed, mean_loss=c.mean_loss,
                 acc=math.nan if c.acc is None else c.acc)
 
@@ -136,7 +138,7 @@ class SimReport:
     def summary(self) -> dict:
         n_parts = {p for r in self.rows for c in r.clusters
                    for p in (list(c.participating) + c.dropped
-                             + c.offline + c.banked)}
+                             + c.offline + c.banked + c.unselected)}
         t = self._t_clusters
         col = t.column
         # Python sum over .tolist() keeps the sequential summation order the
@@ -144,7 +146,8 @@ class SimReport:
         active = int(sum(col("active").tolist()))
         banked = int(sum(col("banked").tolist()))
         total_slots = (active + banked + int(sum(col("dropped").tolist()))
-                       + int(sum(col("offline").tolist())))
+                       + int(sum(col("offline").tolist()))
+                       + int(sum(col("unselected").tolist())))
         # banked members participate — their (late) update reaches the next
         # round's aggregate
         active_slots = active + banked
@@ -161,6 +164,7 @@ class SimReport:
                                   if total_slots else 0.0,
             "mar_violations": int(sum(col("violations").tolist())),
             "dropped_total": int(sum(col("dropped").tolist())),
+            "unselected_total": int(sum(col("unselected").tolist())),
             "banked_total": banked,
             "flushed_total": int(sum(col("flushed").tolist())),
             "final_acc": {k: round(v, 4) for k, v in self.final_acc.items()},
@@ -179,6 +183,8 @@ class SimReport:
                     bits += f" {len(c.masked)}mask"
                 if c.banked:
                     bits += f" {len(c.banked)}bank"
+                if c.unselected:
+                    bits += f" {len(c.unselected)}unsel"
                 if c.flushed:
                     bits += f" {c.flushed}flush"
                 if c.offline:

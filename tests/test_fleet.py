@@ -1,0 +1,318 @@
+"""Fleet-scale stack: struct-of-arrays state, batched trace equivalence,
+sampled-Dunn Procedure 1, FedCS selection, delta shard-packs.
+
+The contract under test: every vectorized path must reproduce its scalar
+reference bit-for-bit (traces, similarity, delta packs) or provably bound
+it (sampled Dunn ≥ exact Dunn), so fleet scale is a performance mode, not
+a different simulator.
+"""
+import math
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import clustering as C
+from repro.core import resources as R
+from repro.sim import (FleetSim, FleetSimConfig, HeterogeneitySim, SimConfig,
+                       make_fleet_trace, make_trace, sample_profiles)
+from repro.sim import traces as T
+
+
+# -------------------------------------------------- trace equivalence
+@pytest.mark.parametrize("seed", [0, 1, 123])
+@pytest.mark.parametrize("rate", [0.0, 0.08, 0.5, 0.9])
+def test_vectorized_generators_match_legacy_loops(seed, rate):
+    """The batched table builders replay the legacy per-(round, pid) scalar
+    rng loops bit-identically: same seeds → same (time, event) stream, for
+    every generator, including the interleaved gate/value draws."""
+    for n, rounds in [(1, 1), (7, 3), (50, 4)]:
+        assert (T.dropout_events(n, rounds, rate, seed)
+                == T.legacy_dropout_events(n, rounds, rate, seed))
+        assert (T.drift_events(n, rounds, rate, seed)
+                == T.legacy_drift_events(n, rounds, rate, seed))
+        assert (T.straggler_events(n, rounds, rate, seed)
+                == T.legacy_straggler_events(n, rounds, rate, seed))
+
+
+def test_vectorized_arrivals_match_legacy():
+    assert T.late_arrivals(200, 8, 0.4, 3) == T.legacy_late_arrivals(
+        200, 8, 0.4, 3)
+    # permutation order is the FIFO tie-break and must survive batching
+    off, evs = T.late_arrivals(50, 6, 0.5, 0)
+    _, levs = T.legacy_late_arrivals(50, 6, 0.5, 0)
+    assert [e.pid for _, e in evs] == [e.pid for _, e in levs]
+
+
+def test_mixed_scenario_matches_legacy_composition():
+    """make_trace('mixed') = dropout ⊕ drift ⊕ spikes at seed/seed+1/seed+2,
+    exactly as the legacy scenario composed them."""
+    ev = make_trace("mixed", 40, 5, seed=9).events
+    legacy = (T.legacy_dropout_events(40, 5, 0.08, 9)
+              + T.legacy_drift_events(40, 5, 0.05, 10)
+              + T.legacy_straggler_events(40, 5, 0.08, 11))
+    assert ev == legacy
+
+
+def test_fleet_trace_is_columnar_and_scales():
+    tr = make_fleet_trace("mixed", 5000, 3, seed=0)
+    assert tr.n == 5000 and tr.rounds == 3
+    for tab in (tr.dropouts, tr.drifts, tr.spikes):
+        assert set(tab) >= {"time", "pid"}
+        assert all(isinstance(v, np.ndarray) for v in tab.values())
+    # Bernoulli(rate) per slot: event count concentrates around n·rounds·rate
+    n_drop = len(tr.dropouts["time"])
+    assert abs(n_drop - 5000 * 3 * 0.08) < 5 * math.sqrt(5000 * 3 * 0.08)
+
+
+def test_make_trace_rejects_unknown_knobs():
+    with pytest.raises(TypeError, match="does not accept"):
+        make_trace("drift", 8, 4, seed=0, dropout_rate=0.2)
+    with pytest.raises(TypeError, match="does not accept"):
+        make_fleet_trace("stable", 8, 4, seed=0, spike_rate=0.1)
+    with pytest.raises(ValueError, match="unknown scenario"):
+        make_trace("nope", 8, 4)
+    # knobs that DO belong still pass through
+    tr = make_trace("dropout", 30, 4, seed=0, dropout_rate=0.5)
+    assert len(tr.events) > 0
+
+
+# -------------------------------------------------- similarity memory path
+@pytest.mark.parametrize("lam", [R.LAMBDA_EQUAL, R.LAMBDA_PAPER])
+@pytest.mark.parametrize("table", [R.TABLE_I, R.TABLE_III])
+def test_similarity_matrix_bit_compatible_with_einsum(table, lam):
+    """The per-column accumulation (3× lower peak memory) must keep the
+    einsum result bit-for-bit — the Dunn anchors depend on exact ties."""
+    Vb = R.unit_normalize(table)
+    diff = Vb[:, None, :] - Vb[None, :, :]
+    ref = np.sqrt(np.einsum("ijd,d->ij", diff * diff, np.asarray(lam)))
+    got = R.similarity_matrix(Vb, lam)
+    assert np.array_equal(got, ref)
+
+
+# -------------------------------------------------- fleet Procedure 1
+def test_fleet_procedure1_matches_exact_on_table_i():
+    """With full samples, fleet Procedure 1 reduces to the exact path:
+    Table I must give the paper's k=3 with identical labels."""
+    exact = C.optimal_clusters(R.TABLE_I, R.LAMBDA_EQUAL, seed=0)
+    fleet = C.fleet_optimal_clusters(R.TABLE_I, R.LAMBDA_EQUAL, seed=0,
+                                     k_cap=3)
+    assert fleet.k == exact.k == 3
+    assert np.array_equal(fleet.labels, exact.labels)
+
+
+@pytest.mark.parametrize("lam,k_exp", [(R.LAMBDA_EQUAL, 5),
+                                       (R.LAMBDA_PAPER, 6)])
+def test_fleet_procedure1_matches_exact_on_table_iii(lam, k_exp):
+    exact = C.optimal_clusters(R.TABLE_III, lam, seed=0)
+    fleet = C.fleet_optimal_clusters(R.TABLE_III, lam, seed=0, k_cap=6)
+    assert fleet.k == exact.k == k_exp
+    assert np.array_equal(fleet.labels, exact.labels)
+    for k in fleet.di_values:
+        assert fleet.di_values[k] == pytest.approx(exact.di_values[k],
+                                                   abs=1e-9)
+
+
+def test_fleet_procedure1_large_no_quadratic():
+    """20k participants: runs fast, labels cover every cluster, and the
+    frozen (lo, span) lets drift re-placement reproduce the labels."""
+    V = sample_profiles(20_000, seed=1)
+    res = C.fleet_optimal_clusters(V, R.LAMBDA_PAPER, seed=0)
+    assert 2 <= res.k <= 8
+    assert len(res.labels) == 20_000
+    assert set(np.unique(res.labels)) == set(range(res.k))
+    from repro.core.assignment import reassign_by_centroids
+    again = reassign_by_centroids(V, res)
+    assert np.array_equal(again, res.labels)
+
+
+@given(st.integers(0, 10_000), st.integers(2, 5), st.integers(2, 30))
+@settings(max_examples=20, deadline=None)
+def test_sampled_dunn_bounds_exact_dunn(seed, k, sample):
+    """Subsampling the inter-cluster minimum can only MISS the true min, so
+    sampled Dunn ≥ exact Dunn; with every cluster inside ``sample`` the two
+    are equal (diameters are exact either way)."""
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(60, 3))
+    labels = rng.integers(0, k, size=60)
+    if len(np.unique(labels)) < 2:
+        return
+    S = np.sqrt(((X[:, None, :] - X[None, :, :]) ** 2).sum(-1))
+    exact = C.dunn_index(S, labels)
+    sampled = C.sampled_dunn_index(X, labels, sample=sample, seed=seed)
+    assert sampled >= exact - 1e-9
+    full = C.sampled_dunn_index(X, labels, sample=60, seed=seed)
+    assert full == pytest.approx(exact, rel=1e-9, abs=1e-12)
+
+
+@pytest.mark.parametrize("seed,k,sample",
+                         [(0, 3, 4), (1, 2, 2), (7, 4, 10), (123, 5, 25),
+                          (42, 2, 3), (9, 3, 60)])
+def test_sampled_dunn_bounds_exact_dunn_seeded(seed, k, sample):
+    """Seeded instances of the property above — run even without
+    hypothesis installed."""
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(60, 3))
+    labels = rng.integers(0, k, size=60)
+    S = np.sqrt(((X[:, None, :] - X[None, :, :]) ** 2).sum(-1))
+    exact = C.dunn_index(S, labels)
+    sampled = C.sampled_dunn_index(X, labels, sample=sample, seed=seed)
+    assert sampled >= exact - 1e-9
+    full = C.sampled_dunn_index(X, labels, sample=60, seed=seed)
+    assert full == pytest.approx(exact, rel=1e-9, abs=1e-12)
+
+
+# -------------------------------------------------- Fleet views
+def test_fleet_row_views_write_through():
+    fleet = R.Fleet.from_matrix(R.TABLE_I.copy(), n_data=range(10, 20))
+    p = fleet.participant(3)
+    assert (p.pid, p.s, p.n_data) == (3, R.TABLE_I[3, 0], 13)
+    p.s = 999.0
+    p.n_data = 7
+    assert fleet.V[3, 0] == 999.0 and fleet.n_data[3] == 7
+    fleet.V[3, 1] = 123.0                      # array write visible via view
+    assert p.r == 123.0
+    d = p.detach()
+    d.s = 1.0                                  # detached copy doesn't write
+    assert fleet.V[3, 0] == 999.0
+    assert fleet.participant(3) is p           # cached view object
+
+
+def test_fleet_round_trips_through_participants():
+    parts = R.participants_from_matrix(R.TABLE_I, n_data=range(10))
+    fleet = R.Fleet.from_participants(parts)
+    assert np.array_equal(R.resource_matrix(fleet), R.TABLE_I)
+    back = fleet.participants()
+    assert [(q.pid, q.s, q.r, q.a, q.n_data) for q in back] == \
+           [(q.pid, q.s, q.r, q.a, q.n_data) for q in parts]
+
+
+# -------------------------------------------------- FedCS selection
+def _fleet_sim(n=800, rounds=3, **cfg_kw):
+    fleet = R.Fleet.from_matrix(sample_profiles(n, seed=0))
+    trace = make_fleet_trace("mixed", n, rounds, seed=0)
+    return FleetSim(fleet, trace, FleetSimConfig(rounds=rounds, seed=0,
+                                                 **cfg_kw))
+
+
+def test_fedcs_selected_never_violate_mar():
+    """Every FedCS-admitted member satisfies T_i ≤ Θ ≤ MAR, so a fedcs run
+    records zero MAR violations; unconstrained 'all' does not."""
+    rep = _fleet_sim(select="fedcs").run()
+    assert rep.summary()["mar_violations"] == 0
+    assert rep.summary()["unselected_total"] > 0
+    rep_all = _fleet_sim(select="all").run()
+    assert rep_all.summary()["mar_violations"] > 0
+
+
+def test_fedcs_budget_caps_every_cluster_round():
+    budget = 5
+    rep = _fleet_sim(select="fedcs", select_budget=budget).run()
+    for row in rep.rows:
+        sel = row.active + row.masked + row.dropped + row.banked
+        assert (sel <= budget).all()
+    assert rep.summary()["participation_rate"] > 0
+
+
+@pytest.mark.parametrize("policy", ["drop", "mask", "wait", "buffer"])
+def test_fedcs_composes_with_all_mar_policies(policy):
+    rep = _fleet_sim(select="fedcs", select_budget=8,
+                     mar_policy=policy).run()
+    s = rep.summary()
+    assert s["rounds"] == 3 and s["mar_violations"] == 0
+    if policy == "buffer":
+        assert s["banked_total"] == s["flushed_total"]  # terminal flush
+
+
+def test_fedcs_in_training_engine_renormalizes_weights():
+    """HeterogeneitySim + FedCS: unselected members contribute zero weight,
+    the round proceeds on the admitted prefix, and under 'drop' nobody
+    admitted is dropped for the deadline (Θ ≤ MAR ⇒ no violations)."""
+    jnp = pytest.importorskip("jax.numpy")
+    from repro.core import server as srv
+    from repro.core.families import cnn_family
+    from repro.data.partition import dirichlet_partition
+    from repro.data.synthetic import make_classification, train_test_split
+    ds = make_classification("synth-mnist", 400, seed=0)
+    train, test = train_test_split(ds)
+    idx = dirichlet_partition(train.y, 8, alpha=2.0, seed=0)
+    parts = R.participants_from_matrix(sample_profiles(8, seed=0),
+                                       n_data=[len(p) for p in idx])
+    cd = [{"x": train.x[p], "y": train.y[p]} for p in idx]
+    fam = cnn_family(classes=10, in_channels=1, base_width=0.125)
+    eng = srv.FedRAC(parts, cd, fam,
+                     srv.FLConfig(steps_per_round=2, lr=0.08, seed=0,
+                                  local_batch=8, compact_to=2),
+                     classes=10).setup()
+    sim = HeterogeneitySim(eng, make_trace("stable", 8, 2),
+                           SimConfig(rounds=2, select="fedcs",
+                                     select_budget=2, eval_every=10))
+    rep = sim.run({"x": jnp.asarray(test.x), "y": jnp.asarray(test.y)})
+    for row in rep.rows:
+        for c in row.clusters:
+            assert len(c.active) + len(c.masked) <= 2
+            assert not c.dropped               # FedCS ⇒ no deadline drops
+    assert sum(len(c.unselected) for row in rep.rows
+               for c in row.clusters) > 0
+
+
+def test_fleetsim_rejects_bad_config():
+    with pytest.raises(ValueError):
+        _fleet_sim(select="best-effort")
+    with pytest.raises(ValueError):
+        _fleet_sim(mar_policy="retry")
+
+
+# -------------------------------------------------- fleet smoke at 10^5
+def test_fleet_smoke_100k():
+    """10⁵ participants × 3 rounds end-to-end (trace → Procedure 1 → sim):
+    every slot accounted for each round, telemetry self-consistent."""
+    n = 100_000
+    rep = _fleet_sim(n=n, select="fedcs").run()
+    assert rep.n == n and 2 <= rep.k <= 8
+    assert len(rep.levels) == n
+    for row in rep.rows:
+        accounted = (row.active + row.masked + row.dropped + row.offline
+                     + row.unselected + row.banked).sum()
+        assert accounted == n
+        assert row.duration >= 0.0 and row.bytes.sum() >= 0.0
+    assert rep.summary()["mar_violations"] == 0
+
+
+# -------------------------------------------------- delta shard-packs
+def test_delta_shard_pack_matches_full_rebuild():
+    """Membership churn (one member migrates out, one in) must produce a
+    pack byte-identical to a from-scratch build: the delta path permutes
+    surviving rows on device and scatters only the fresh ones."""
+    jax = pytest.importorskip("jax")
+    from repro.core import server as srv
+    from repro.core.families import cnn_family
+    from repro.data.partition import dirichlet_partition
+    from repro.data.synthetic import make_classification, train_test_split
+    ds = make_classification("synth-mnist", 400, seed=0)
+    train, _ = train_test_split(ds)
+    idx = dirichlet_partition(train.y, 8, alpha=2.0, seed=0)
+    parts = R.participants_from_matrix(sample_profiles(8, seed=0),
+                                       n_data=[len(p) for p in idx])
+    cd = [{"x": train.x[p], "y": train.y[p]} for p in idx]
+    fam = cnn_family(classes=10, in_channels=1, base_width=0.125)
+    eng = srv.FedRAC(parts, cd, fam,
+                     srv.FLConfig(steps_per_round=2, lr=0.08, seed=0,
+                                  local_batch=8, compact_to=2),
+                     classes=10).setup()
+    members = list(eng.assignment.members[0])
+    others = [p for p in range(8) if p not in members]
+    assert len(members) >= 2 and others, "need churn material"
+    cap = eng._capacity(len(members))
+    eng._shard_pack(0, members, cap, True)             # seeds _pack_prev
+    churned = [others[0]] + members[1:]                # one out, one in
+    pack_delta = eng._shard_pack(0, churned, cap, True)
+    assert eng._delta_h2d is not None                  # delta path taken
+    eng._shard_packs.clear()                           # force full rebuild
+    eng._pack_prev.clear()
+    pack_full = eng._shard_pack(0, churned, cap, True)
+    for a, b in zip(jax.tree.leaves(pack_delta["shards"]),
+                    jax.tree.leaves(pack_full["shards"])):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    assert np.array_equal(np.asarray(pack_delta["n"]),
+                          np.asarray(pack_full["n"]))

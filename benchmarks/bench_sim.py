@@ -500,7 +500,61 @@ def run_fleet_bench(sizes=(10_000, 100_000, 1_000_000), rounds: int = 3,
     return out
 
 
+# ------------------------------------------------------------ ckpt bench
+def run_ckpt_bench(sizes=(10_000, 100_000), rounds: int = 2, seed: int = 0,
+                   reps: int = 3) -> dict:
+    """Crash-safety overhead: full run-state snapshot save (manifest +
+    CRC32 + atomic rename) and validated restore on a FleetSim at each
+    fleet size — wall time (min-of-``reps``) and payload bytes.  The
+    snapshot is the engine's own ``_capture_state`` (fleet arrays, levels,
+    per-round row columns, bank/selection counters), i.e. exactly what
+    ``sim_run --ckpt-dir`` writes each boundary."""
+    from repro.ckpt.manifest import CheckpointManager
+    from repro.ckpt.run_state import RUN_STATE_VERSION
+    from repro.core.resources import Fleet
+    from repro.sim import FleetSim, FleetSimConfig, make_fleet_trace
+    out = {}
+    for n in sizes:
+        fleet = Fleet.from_matrix(sample_profiles(n, seed=seed))
+        trace = make_fleet_trace("mixed", n, rounds, seed=seed)
+        sim = FleetSim(fleet, trace, FleetSimConfig(rounds=rounds, seed=seed))
+        sim.run()
+        meta, arrays = sim._capture_state(rounds, sim.report.rows)
+        meta["run_state"] = {"version": RUN_STATE_VERSION,
+                             "kind": "fleet-sim"}
+        nbytes = int(sum(a.nbytes for a in arrays.values()))
+        save_s, load_s = 1e9, 1e9
+        with tempfile.TemporaryDirectory() as d:
+            mgr = CheckpointManager(d, keep=2)
+            for i in range(reps):
+                with Timer() as t:
+                    mgr.save(i + 1, meta, arrays)
+                save_s = min(save_s, t.dt)
+            for _ in range(reps):
+                with Timer() as t:
+                    got = mgr.load_latest()
+                load_s = min(load_s, t.dt)
+            assert got is not None
+        out[f"ckpt_{n}"] = {
+            "n": n, "rounds": rounds, "arrays": len(arrays), "bytes": nbytes,
+            "save_s": round(save_s, 5), "restore_s": round(load_s, 5),
+            "save_mb_per_s": round(nbytes / save_s / 1e6, 1),
+            "restore_mb_per_s": round(nbytes / load_s / 1e6, 1)}
+    return out
+
+
 # ------------------------------------------------------------ run.py hooks
+def bench_sim_ckpt():
+    """benchmarks/run.py suite: run-state checkpoint save/validated-restore
+    wall time and payload bytes at fleet sizes 10⁴/10⁵."""
+    res = run_ckpt_bench()
+    for n in (10_000, 100_000):
+        r = res[f"ckpt_{n}"]
+        yield (f"sim/ckpt_{n}", (r["save_s"] + r["restore_s"]) * 1e6,
+               f"save_s={r['save_s']};restore_s={r['restore_s']};"
+               f"bytes={r['bytes']};arrays={r['arrays']};"
+               f"save_mb_per_s={r['save_mb_per_s']};"
+               f"restore_mb_per_s={r['restore_mb_per_s']}")
 def bench_sim_mesh():
     """benchmarks/run.py suite: plane-sharded dispatch at 8 forced host
     devices (subprocess — XLA_FLAGS must precede jax backend init) vs the
@@ -595,7 +649,7 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", default="cluster",
                     choices=["cluster", "padding", "dispatch", "mesh",
-                             "mesh2d", "mesh-inner", "fleet", "all"],
+                             "mesh2d", "mesh-inner", "fleet", "ckpt", "all"],
                     help="'mesh' re-executes itself under forced host "
                          "devices and times the plane-sharded dispatch; "
                          "'mesh2d' is the same on a 4x2 (data × model) "
@@ -685,6 +739,16 @@ def main(argv=None):
                   f"sim={r['sim_s']:7.3f}s  "
                   f"({r['rounds_per_s']:.2f} rounds/s, "
                   f"{r['events']} events)")
+    if args.mode in ("ckpt", "all"):
+        res = run_ckpt_bench(seed=args.seed, reps=args.reps)
+        results["ckpt"] = res
+        for key, r in res.items():
+            print(f"ckpt n={r['n']:>7}  {r['arrays']} arrays, "
+                  f"{r['bytes'] / 1e6:7.2f} MB  "
+                  f"save={r['save_s'] * 1e3:8.2f}ms "
+                  f"({r['save_mb_per_s']:.0f} MB/s)  "
+                  f"restore={r['restore_s'] * 1e3:8.2f}ms "
+                  f"({r['restore_mb_per_s']:.0f} MB/s)")
     if args.mode in ("padding", "all"):
         pad = run_padding_bench(n=args.participants, rounds=args.sim_rounds,
                                 steps=args.steps, seed=args.seed,

@@ -34,6 +34,7 @@ def _suites(fast: bool):
         ("sim/mesh", bench_sim.bench_sim_mesh),
         ("sim/mesh2d", bench_sim.bench_sim_mesh2d),
         ("sim/fleet", bench_sim.bench_sim_fleet),
+        ("sim/ckpt", bench_sim.bench_sim_ckpt),
     ]
     if not fast:
         suites += [

@@ -3,15 +3,29 @@
 Layout: <dir>/step_<n>.ckpt — a msgpack map {path: {dtype, shape, data}}
 using tree paths as stable keys, so restore does not need the live pytree
 (but can verify against one).
+
+Failure handling is deliberately strict: every malformed input — truncated
+file, undecodable msgpack, missing leaf, byte-count/shape mismatch — raises
+``CheckpointError`` (never a bare ``assert``, which vanishes under
+``python -O``).  Restored arrays are WRITABLE copies, never read-only
+``np.frombuffer`` views: callers feed them straight into donated jax
+buffers and in-place numpy state.
 """
 from __future__ import annotations
 
+import math
 import os
 import re
 
 import jax
 import msgpack
 import numpy as np
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint file is missing, truncated, corrupt, or does not match
+    the requested template.  The manifest layer (``repro.ckpt.manifest``)
+    catches this to fall back to an older valid checkpoint."""
 
 
 def _path_str(path) -> str:
@@ -38,23 +52,60 @@ def save(path: str, tree) -> None:
     tmp = path + ".tmp"
     with open(tmp, "wb") as f:
         f.write(msgpack.packb(payload, use_bin_type=True))
+        f.flush()
+        os.fsync(f.fileno())
     os.replace(tmp, path)
 
 
+def _decode_leaf(key: str, rec) -> np.ndarray:
+    """One {dtype, shape, data} record -> a WRITABLE numpy array, with the
+    byte count checked against the declared dtype/shape (a short read — the
+    classic SIGKILL-mid-write artifact — must fail loudly, not reshape)."""
+    if (not isinstance(rec, dict)
+            or not {"dtype", "shape", "data"} <= set(rec)):
+        raise CheckpointError(f"leaf {key!r} is not a {{dtype,shape,data}} "
+                              "record")
+    try:
+        dtype = np.dtype(rec["dtype"])
+    except TypeError as e:
+        raise CheckpointError(f"leaf {key!r} has bad dtype "
+                              f"{rec['dtype']!r}") from e
+    shape = tuple(int(s) for s in rec["shape"])
+    want = int(math.prod(shape)) * dtype.itemsize
+    data = rec["data"]
+    if not isinstance(data, (bytes, bytearray)) or len(data) != want:
+        raise CheckpointError(
+            f"leaf {key!r} truncated/corrupt: {len(data) if data is not None else 0} "
+            f"bytes for dtype={dtype} shape={shape} (want {want})")
+    # .copy() → writable, independently-owned memory (frombuffer alone
+    # returns a read-only view of the msgpack payload)
+    return np.frombuffer(data, dtype=dtype).reshape(shape).copy()
+
+
 def restore(path: str, like=None):
-    with open(path, "rb") as f:
-        payload = msgpack.unpackb(f.read(), raw=False)
-    arrays = {k: np.frombuffer(v["data"], dtype=v["dtype"]).reshape(v["shape"])
-              for k, v in payload.items()}
+    try:
+        with open(path, "rb") as f:
+            payload = msgpack.unpackb(f.read(), raw=False)
+    except OSError as e:
+        raise CheckpointError(f"cannot read checkpoint {path!r}: {e}") from e
+    except Exception as e:   # msgpack's unpack errors are library-specific
+        raise CheckpointError(f"undecodable checkpoint {path!r}: {e}") from e
+    if not isinstance(payload, dict):
+        raise CheckpointError(f"checkpoint {path!r} is not a map")
+    arrays = {k: _decode_leaf(k, v) for k, v in payload.items()}
     if like is None:
         return arrays
     flat, treedef = jax.tree_util.tree_flatten_with_path(like)
     leaves = []
     for p, leaf in flat:
         key = _path_str(p)
-        assert key in arrays, f"checkpoint missing {key}"
+        if key not in arrays:
+            raise CheckpointError(f"checkpoint {path!r} missing leaf {key!r}")
         a = arrays[key]
-        assert list(a.shape) == list(np.shape(leaf)), (key, a.shape, np.shape(leaf))
+        if list(a.shape) != list(np.shape(leaf)):
+            raise CheckpointError(
+                f"leaf {key!r} shape {tuple(a.shape)} != template "
+                f"{tuple(np.shape(leaf))}")
         leaves.append(a.astype(np.asarray(leaf).dtype))
     return jax.tree_util.tree_unflatten(treedef, leaves)
 

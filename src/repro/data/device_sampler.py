@@ -18,9 +18,25 @@ heterogeneous class support runs under one program.
 """
 from __future__ import annotations
 
+import zlib
+
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+def stream_fingerprint(seed: int, r: int, probe: int = 4) -> int:
+    """CRC32 of a canonical probe draw for round ``r`` under ``seed``.
+
+    Because every dispatch-path draw is a pure function of (seed, absolute
+    round, global member slot), this fingerprint written into a run-state
+    checkpoint and recomputed at resume proves the resumed process will
+    generate the *same* sampler stream the checkpoint was trained under —
+    a changed seed or sampler implementation fails loudly instead of
+    silently diverging."""
+    idx = uniform_indices(round_key(seed, r), 2, probe,
+                          np.full(probe, 1 << 20, np.int32))
+    return zlib.crc32(np.asarray(idx, np.int32).tobytes()) & 0xFFFFFFFF
 
 
 def round_key(seed: int, r):

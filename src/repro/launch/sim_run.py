@@ -16,14 +16,27 @@ selection — no model training, fleet-scale scheduling/accounting only.
 
   PYTHONPATH=src python -m repro.launch.sim_run --fleet-size 100000 \
       --rounds 3 --trace mixed --select fedcs --select-budget 64
+
+The crash-safety surface lives here too: ``--ckpt-dir`` arms round-boundary
+run-state checkpoints (cadence ``--ckpt-every``, retention ``--ckpt-keep``),
+``--resume`` continues from the newest *valid* one bit-identically, SIGTERM/
+SIGINT flush telemetry and write a final checkpoint before exiting
+``128+signum``, and the fault-injection knobs (``--kill-at-round``,
+``--kill-mid-block``, ``--corrupt-ckpt``) drive the kill-and-resume CI lane.
 """
 from __future__ import annotations
 
 import argparse
+import contextlib
 import json
+import signal
+import zlib
 
+import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.ckpt.run_state import make_checkpointer
 from repro.core import server as srv
 from repro.core.families import cnn_family
 from repro.core.resources import (LAMBDA_EQUAL, LAMBDA_PAPER, Fleet,
@@ -35,6 +48,8 @@ from repro.obs import make_observability
 from repro.sim import (SCENARIOS, FleetSim, FleetSimConfig, HeterogeneitySim,
                        SimConfig, make_fleet_trace, make_trace,
                        sample_profiles, scenario_knobs)
+from repro.sim.faults import (CORRUPTION_MODES, FaultInjector, FaultPlan,
+                              GracefulShutdown, corrupt_checkpoint)
 
 
 def _trace_knobs(args) -> dict:
@@ -51,6 +66,94 @@ def _trace_knobs(args) -> dict:
             f"trace {args.trace!r} (knobs: "
             f"{sorted(scenario_knobs(args.trace)) or 'none'})")
     return explicit
+
+
+def _crash_harness(args):
+    """(RunCheckpointer | None, FaultInjector | None) from the crash-safety
+    flags; ``--corrupt-ckpt`` damages the newest checkpoint *before* the
+    resume read so the degrade-to-previous-valid path is exercised."""
+    if args.resume and not args.ckpt_dir:
+        raise SystemExit("--resume requires --ckpt-dir")
+    if args.corrupt_ckpt and not args.ckpt_dir:
+        raise SystemExit("--corrupt-ckpt requires --ckpt-dir")
+    if args.kill_mid_block is not None:
+        if args.fleet_size:
+            raise SystemExit("--kill-mid-block does not apply to the fleet "
+                             "simulator (no dispatch blocks)")
+        if args.rounds_per_dispatch <= 1:
+            raise SystemExit("--kill-mid-block needs --rounds-per-dispatch "
+                             ">1 (mid-block faults live inside fused blocks)")
+    if args.corrupt_ckpt:
+        path = corrupt_checkpoint(args.ckpt_dir, args.corrupt_ckpt)
+        print(f"# corrupted newest checkpoint ({args.corrupt_ckpt}): {path}")
+    ckpt = None
+    if args.ckpt_dir:
+        ckpt = make_checkpointer(args.ckpt_dir, every=args.ckpt_every,
+                                 keep=args.ckpt_keep, resume=args.resume)
+    faults = None
+    if args.kill_at_round is not None or args.kill_mid_block is not None:
+        faults = FaultInjector(FaultPlan(kill_at_round=args.kill_at_round,
+                                         kill_mid_block=args.kill_mid_block))
+    return ckpt, faults
+
+
+@contextlib.contextmanager
+def _graceful_signals():
+    """SIGTERM/SIGINT raise ``GracefulShutdown`` inside the run loop so the
+    launcher can flush telemetry and write a final checkpoint; original
+    handlers are restored on exit."""
+    def handler(signum, frame):
+        raise GracefulShutdown(signum)
+    old = {s: signal.signal(s, handler)
+           for s in (signal.SIGTERM, signal.SIGINT)}
+    try:
+        yield
+    finally:
+        for s, h in old.items():
+            signal.signal(s, h)
+
+
+def _params_crc32(params: dict) -> dict:
+    """Per-level CRC32 over the raveled parameter bytes — the report's
+    bit-exactness witness for the kill-and-resume CI comparison."""
+    out = {}
+    for lvl in sorted(params):
+        crc = 0
+        for leaf in jax.tree.leaves(params[lvl]):
+            crc = zlib.crc32(np.ascontiguousarray(leaf).tobytes(), crc)
+        out[str(lvl)] = crc
+    return out
+
+
+def _flush_obs(args, obs) -> None:
+    if obs is None:
+        return
+    if args.metrics_out:
+        n = obs.registry.to_jsonl(args.metrics_out)
+        print(f"# metrics: {n} lines -> {args.metrics_out}")
+    if args.trace_out:
+        obs.tracer.write(args.trace_out)
+        print(f"# trace: {len(obs.tracer.events())} spans -> "
+              f"{args.trace_out}"
+              + (" (fenced timings)" if args.fence else ""))
+
+
+def _graceful_exit(args, sim, obs, signum) -> None:
+    """The SIGTERM/SIGINT path: final checkpoint, telemetry flush, partial
+    report, nonzero exit (128+signum, the shell convention)."""
+    step = sim.save_now()
+    print(f"# signal {signum}: "
+          + (f"final checkpoint at round {step}" if step is not None
+             else "no checkpoint written (none armed or no round done)"))
+    _flush_obs(args, obs)
+    if args.report_out and sim.report is not None:
+        rep = sim.report
+        doc = rep.to_dict() if hasattr(rep, "to_dict") else rep.summary()
+        doc["interrupted"] = signum
+        with open(args.report_out, "w") as f:
+            json.dump(doc, f, default=float)
+        print(f"# partial report -> {args.report_out}")
+    raise SystemExit(128 + signum)
 
 
 def build(args):
@@ -84,6 +187,7 @@ def build(args):
 def run_fleet(args):
     """Vectorized fleet path: Fleet + FleetTrace + FleetSim, no training."""
     n = args.fleet_size
+    ckpt, faults = _crash_harness(args)
     fleet = Fleet.from_matrix(sample_profiles(n, seed=args.seed))
     trace = make_fleet_trace(args.trace, n, args.rounds, seed=args.seed,
                              **_trace_knobs(args))
@@ -91,8 +195,13 @@ def run_fleet(args):
     sim = FleetSim(fleet, trace, FleetSimConfig(
         rounds=args.rounds, mar_policy=args.mar_policy, select=args.select,
         select_budget=args.select_budget, schedule=args.schedule,
-        mar=args.mar or 0.0, kappa=args.kappa, lam=lam, seed=args.seed))
-    report = sim.run()
+        mar=args.mar or 0.0, kappa=args.kappa, lam=lam, seed=args.seed),
+        checkpoint=ckpt, faults=faults)
+    with _graceful_signals():
+        try:
+            report = sim.run()
+        except GracefulShutdown as e:
+            _graceful_exit(args, sim, None, e.signum)
     s = report.summary()
     print(f"fleet={n} k={report.k} MAR={report.mar} "
           f"cluster_sizes={s['cluster_sizes']}")
@@ -114,6 +223,7 @@ def run_fleet(args):
 def run(args):
     if args.fleet_size:
         return run_fleet(args)
+    ckpt, faults = _crash_harness(args)
     eng, testb = build(args)
     print(f"k_optimal={eng.k_optimal} compacted_to={eng.m} "
           f"MAR(master)={eng.specs[0].mar:.2f}s "
@@ -131,8 +241,13 @@ def run(args):
     sim = HeterogeneitySim(eng, trace, SimConfig(
         rounds=args.rounds, mar_policy=args.mar_policy,
         schedule=args.schedule, eval_every=args.eval_every,
-        select=args.select, select_budget=args.select_budget), obs=obs)
-    report = sim.run(testb)
+        select=args.select, select_budget=args.select_budget), obs=obs,
+        checkpoint=ckpt, faults=faults)
+    with _graceful_signals():
+        try:
+            report = sim.run(testb)
+        except GracefulShutdown as e:
+            _graceful_exit(args, sim, obs, e.signum)
     print(report.timeline())
     try:
         stats = eng.compile_stats()
@@ -141,17 +256,12 @@ def run(args):
               f"(padding {'on' if eng.cfg.pad_clusters else 'off'})")
     except RuntimeError:
         print("# compile telemetry unavailable on this jax build")
-    if args.metrics_out:
-        n = obs.registry.to_jsonl(args.metrics_out)
-        print(f"# metrics: {n} lines -> {args.metrics_out}")
-    if args.trace_out:
-        obs.tracer.write(args.trace_out)
-        print(f"# trace: {len(obs.tracer.events())} spans -> "
-              f"{args.trace_out}"
-              + (" (fenced timings)" if args.fence else ""))
+    _flush_obs(args, obs)
     if args.report_out:
+        doc = report.to_dict()
+        doc["params_crc32"] = _params_crc32(sim.params)
         with open(args.report_out, "w") as f:
-            json.dump(report.to_dict(), f, default=float)
+            json.dump(doc, f, default=float)
         print(f"# report -> {args.report_out}")
     if args.json:
         print(json.dumps(report.to_dict(), default=float))
@@ -235,6 +345,31 @@ def main(argv=None):
                     help="write report.to_dict() JSON (summary + rows) — "
                          "pairs with repro.obs.validate --report")
     ap.add_argument("--seed", type=int, default=3)
+    ap.add_argument("--ckpt-dir", default=None, metavar="DIR",
+                    help="arm crash-safe run-state checkpoints: versioned "
+                         "manifest + CRC32 snapshots of planes, bank, "
+                         "sampler position, event queue, fleet arrays and "
+                         "metrics tables at round boundaries")
+    ap.add_argument("--ckpt-every", type=int, default=1, metavar="R",
+                    help="checkpoint cadence in rounds (default 1)")
+    ap.add_argument("--ckpt-keep", type=int, default=3, metavar="K",
+                    help="retain the last K checkpoints (default 3)")
+    ap.add_argument("--resume", action="store_true",
+                    help="continue from the newest VALID checkpoint under "
+                         "--ckpt-dir (corrupt/truncated ones are skipped "
+                         "with a warning); bit-identical to the "
+                         "uninterrupted run")
+    ap.add_argument("--kill-at-round", type=int, default=None, metavar="R",
+                    help="fault injection: SIGKILL this process at the "
+                         "first round boundary >= R (after the boundary "
+                         "checkpoint)")
+    ap.add_argument("--kill-mid-block", type=int, default=None, metavar="R",
+                    help="fault injection: SIGKILL inside the dispatch "
+                         "block covering round R, after the fused program "
+                         "ran but before its rounds are recorded")
+    ap.add_argument("--corrupt-ckpt", default=None, choices=CORRUPTION_MODES,
+                    help="damage the newest checkpoint under --ckpt-dir "
+                         "before anything else runs (degradation testing)")
     args = ap.parse_args(argv)
     return run(args)
 

@@ -145,6 +145,32 @@ class Table:
         self._n = 0
         self.dropped = 0
 
+    def state(self) -> tuple[dict, dict]:
+        """(JSON-safe meta, {column: ndarray}) snapshot — the retained rows
+        in insertion order plus the ring counters, so ``load_state`` restores
+        ``column()``/``dropped``/``_n`` bit-exactly."""
+        meta = {"n": int(self._n), "cap": int(self._cap),
+                "max": int(self._max), "dropped": int(self.dropped)}
+        return meta, {c: self.column(c).copy() for c in self._cols}
+
+    def load_state(self, meta: dict, columns: dict) -> None:
+        """Inverse of ``state``: rebuilds the ring in place (object identity
+        is preserved — holders like ``SimReport`` keep their reference)."""
+        self._cap = int(meta["cap"])
+        self._max = int(meta["max"])
+        self._n = int(meta["n"])
+        self.dropped = int(meta["dropped"])
+        length = min(self._n, self._cap)
+        cols = {}
+        for c, arr in columns.items():
+            col = np.zeros(self._cap, arr.dtype)
+            if length:
+                # i-th oldest retained row lives at slot (n - length + i)
+                idx = (np.arange(length) + self._n - length) % self._cap
+                col[idx] = arr[:length]
+            cols[c] = col
+        self._cols = cols
+
     def bump_last(self, col: str, delta, match: dict | None = None) -> bool:
         """In-place add ``delta`` to ``col`` of the newest retained row
         matching ``match`` (column -> value); returns False when no row
@@ -195,6 +221,60 @@ class MetricsRegistry:
                                "column schema was given")
             t = self.tables[name] = Table(name, columns, **kw)
         return t
+
+    # ------------------------------------------------------------ checkpoint
+    def state(self) -> tuple[dict, dict]:
+        """(meta, arrays) for the whole registry: counters/gauges/histogram
+        scalars in ``meta`` (non-finite floats survive — this feeds our own
+        JSON reader, not strict exporters), bucket counts and table columns
+        in ``arrays`` under ``hist/<name>/buckets`` and
+        ``table/<name>/<column>`` keys."""
+        meta = {
+            "counters": {k: c.value for k, c in sorted(self.counters.items())},
+            "gauges": {k: g.value for k, g in sorted(self.gauges.items())},
+            "histograms": {k: {"bounds": list(h.bounds), "count": h.count,
+                               "total": h.total, "min": h.min, "max": h.max}
+                           for k, h in sorted(self.histograms.items())},
+            "tables": {},
+        }
+        arrays = {}
+        for k, h in sorted(self.histograms.items()):
+            arrays[f"hist/{k}/buckets"] = h.buckets.copy()
+        for k, t in sorted(self.tables.items()):
+            t_meta, t_cols = t.state()
+            t_meta["columns"] = list(t.columns)
+            meta["tables"][k] = t_meta
+            for c, arr in t_cols.items():
+                arrays[f"table/{k}/{c}"] = arr
+        return meta, arrays
+
+    def load_state(self, meta: dict, arrays: dict) -> None:
+        """Inverse of ``state``.  Existing metric objects are updated in
+        place (shared holders keep their references); missing ones are
+        created.  Restored compile/transfer counters keep counting from the
+        checkpointed totals — a resumed process recompiles, so those exceed
+        an uninterrupted run's; the per-round *tables* are what resume
+        bit-exactly."""
+        for k, v in meta.get("counters", {}).items():
+            self.counter(k).value = float(v)
+        for k, v in meta.get("gauges", {}).items():
+            self.gauge(k).value = float(v)
+        for k, hm in meta.get("histograms", {}).items():
+            h = self.histogram(k, bounds=tuple(hm["bounds"]))
+            h.bounds = tuple(float(b) for b in hm["bounds"])
+            h.buckets = np.asarray(arrays[f"hist/{k}/buckets"],
+                                   np.int64).copy()
+            h.count = int(hm["count"])
+            h.total = float(hm["total"])
+            h.min = float(hm["min"])
+            h.max = float(hm["max"])
+        for k, tm in meta.get("tables", {}).items():
+            cols = {c: arrays[f"table/{k}/{c}"] for c in tm["columns"]}
+            t = self.tables.get(k)
+            if t is None:
+                t = self.tables[k] = Table(
+                    k, {c: arr.dtype for c, arr in cols.items()})
+            t.load_state(tm, cols)
 
     # ------------------------------------------------------------ export
     def snapshot(self) -> dict:

@@ -41,6 +41,18 @@ class EventQueue:
     def __len__(self) -> int:
         return len(self._heap)
 
+    # ------------------------------------------------------------ checkpoint
+    def state(self) -> tuple[list, int]:
+        """Pending ``(time, seq, event)`` entries in (time, seq) order plus
+        the sequence counter — enough to rebuild the queue with identical
+        FIFO tie-breaking after a resume."""
+        return sorted(self._heap), self._seq
+
+    def load_state(self, entries: list, seq: int) -> None:
+        self._heap = [(float(t), int(s), ev) for t, s, ev in entries]
+        heapq.heapify(self._heap)
+        self._seq = int(seq)
+
 
 @dataclass
 class SimClock:

@@ -25,6 +25,7 @@ cluster per round — so the simulator exercises exactly the fast path.
 """
 from __future__ import annotations
 
+import logging
 import math
 from dataclasses import dataclass, replace
 
@@ -32,14 +33,20 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.ckpt.checkpoint import CheckpointError
 from repro.core import aggregation, cost_model
 from repro.core.server import FedRAC
+from repro.data import device_sampler
 from repro.obs import NULL_OBS
 from repro.sim.clock import EventQueue, SimClock
 from repro.sim.events import (Arrival, Departure, ResourceDrift, SpikeEnd,
-                              StragglerSpike)
-from repro.sim.report import ClusterRoundStats, RoundRecord, SimReport
+                              StragglerSpike, decode_event, encode_event)
+from repro.sim.faults import NULL_FAULTS
+from repro.sim.report import (ClusterRoundStats, RoundRecord, SimReport,
+                              decode_rows, encode_rows)
 from repro.sim.traces import Trace
+
+log = logging.getLogger("repro.sim")
 
 
 @dataclass
@@ -56,10 +63,22 @@ class SimConfig:
 
 
 class HeterogeneitySim:
-    """Couples a set-up ``FedRAC`` with a ``Trace`` and runs the event loop."""
+    """Couples a set-up ``FedRAC`` with a ``Trace`` and runs the event loop.
+
+    ``checkpoint`` (a ``repro.ckpt.run_state.RunCheckpointer``) arms
+    crash-safe resumable runs: a versioned run-state snapshot — planes,
+    buffered bank, sampler position, participant resources, assignment,
+    event queue, clock, report rows, metrics tables — is captured at every
+    round boundary, written at the configured cadence, and (with
+    ``resume=True``) restored from the newest valid checkpoint so a killed
+    run continues bit-identically.  ``faults`` (a
+    ``repro.sim.faults.FaultInjector``) injects SIGKILLs at the boundary
+    and mid-dispatch-block hook points for the kill-and-resume tests."""
+
+    KIND = "hetero-sim"
 
     def __init__(self, fedrac: FedRAC, trace: Trace, cfg: SimConfig,
-                 obs=None):
+                 obs=None, checkpoint=None, faults=None):
         if cfg.mar_policy not in ("drop", "mask", "wait", "buffer"):
             raise ValueError(f"unknown mar_policy {cfg.mar_policy!r}")
         if cfg.schedule not in ("parallel", "sequential"):
@@ -86,6 +105,10 @@ class HeterogeneitySim:
         self._gone: set[int] = set()                     # permanent dropouts
         # buffered async aggregation: level -> [{pid, params, n_eff, round}]
         self._bank: dict[int, list] = {lvl: [] for lvl in range(fedrac.m)}
+        self.checkpoint = checkpoint
+        self.faults = faults if faults is not None else NULL_FAULTS
+        self.report: SimReport | None = None
+        self._pending_state = None   # newest boundary snapshot (shutdown)
 
     # ------------------------------------------------------------ events
     def _apply_events(self, r: int) -> list[str]:
@@ -263,16 +286,23 @@ class HeterogeneitySim:
         report = SimReport(scenario=self.trace.name,
                            mar_policy=cfg.mar_policy, schedule=cfg.schedule,
                            obs=self.obs if self.obs.on else None)
+        self.report = report
         with tr.span("sim.run", cat="engine", mode="legacy",
                      rounds=cfg.rounds):
             with tr.span("init_params", cat="engine"):
-                params = {lvl: fl.family.init(
-                    jax.random.PRNGKey(fl.cfg.seed + lvl), lvl)
-                    for lvl in range(fl.m)}
+                resumed = self._maybe_resume(report, plane_mode=False)
+                if resumed is None:
+                    r0 = 0
+                    params = {lvl: fl.family.init(
+                        jax.random.PRNGKey(fl.cfg.seed + lvl), lvl)
+                        for lvl in range(fl.m)}
+                else:
+                    r0, params = resumed
                 tr.fence(params)
-            for r in range(cfg.rounds):
+            for r in range(r0, cfg.rounds):
                 with tr.span("round", cat="engine", round=r):
                     self._legacy_round(r, params, report, test)
+                self._round_boundary(r + 1, params, report, plane_mode=False)
             with tr.span("terminal_flush", cat="engine"):
                 self._terminal_flush(params, cfg.rounds, report)
             with tr.span("final_eval", cat="engine"):
@@ -397,19 +427,25 @@ class HeterogeneitySim:
         report = SimReport(scenario=self.trace.name,
                            mar_policy=cfg.mar_policy, schedule=cfg.schedule,
                            obs=self.obs if self.obs.on else None)
+        self.report = report
         buffered = fl.cfg.aggregation == "buffered"
         with tr.span("sim.run", cat="engine", mode="dispatch",
                      rounds=cfg.rounds):
             with tr.span("init_params", cat="engine"):
-                planes = {lvl: fl.plane_of(lvl, fl.family.init(
-                    jax.random.PRNGKey(fl.cfg.seed + lvl), lvl))
-                    for lvl in range(fl.m)}
+                resumed = self._maybe_resume(report, plane_mode=True)
+                if resumed is None:
+                    r = 0
+                    planes = {lvl: fl.plane_of(lvl, fl.family.init(
+                        jax.random.PRNGKey(fl.cfg.seed + lvl), lvl))
+                        for lvl in range(fl.m)}
+                else:
+                    r, planes = resumed
                 tr.fence(planes)
-            r = 0
             while r < cfg.rounds:
                 with tr.span("round_block", cat="engine", round=r):
                     r = self._dispatch_block(r, planes, report, test,
                                              buffered)
+                self._round_boundary(r, planes, report, plane_mode=True)
             with tr.span("terminal_flush", cat="engine"):
                 self._terminal_flush(planes, cfg.rounds, report,
                                      merge=self._anchored_merge_plane)
@@ -526,6 +562,10 @@ class HeterogeneitySim:
                     rows[L - 1][-1].acc = fl.evaluate(
                         lvl, fl.params_of(lvl, planes[lvl]), test)
             times.append(t_cluster)
+        # fault-injection point: the fused programs ran, nothing recorded —
+        # a SIGKILL here loses the whole in-flight block and resume must
+        # recompute it bit-identically from the last boundary checkpoint
+        self.faults.mid_block(r, r + L)
         with tr.span("record_rounds", cat="engine", round=r, block_len=L):
             duration = (max(times, default=0.0)
                         if cfg.schedule == "parallel" else sum(times))
@@ -626,6 +666,195 @@ class HeterogeneitySim:
             wa * cur + aggregation.aggregate_plane(
                 jnp.stack([b["plane"] for b in entries]),
                 jnp.asarray(us, jnp.float32)))
+
+    # ------------------------------------------------------------ checkpoint
+    def _round_boundary(self, r: int, params: dict, report: SimReport,
+                        plane_mode: bool) -> None:
+        """After ``r`` rounds completed: retain a host-side run-state
+        snapshot (the graceful-shutdown payload), write it at the
+        checkpointer's cadence, then fire the boundary fault hook."""
+        if self.checkpoint is not None:
+            meta, arrays = self._capture_state(r, params, report, plane_mode)
+            self._pending_state = (r, meta, arrays)
+            if self.checkpoint.due(r):
+                self.checkpoint.save(r, self.KIND, meta, arrays)
+        self.faults.round_boundary(r)
+
+    def save_now(self):
+        """Write the newest retained boundary snapshot immediately (the
+        SIGTERM/SIGINT path).  Returns the step written, or None when no
+        boundary was reached / checkpointing is off."""
+        if self.checkpoint is None or self._pending_state is None:
+            return None
+        r, meta, arrays = self._pending_state
+        self.checkpoint.save(r, self.KIND, meta, arrays)
+        return r
+
+    def _capture_state(self, r: int, params: dict, report: SimReport,
+                       plane_mode: bool) -> tuple[dict, dict]:
+        """Snapshot at the start of round ``r`` (events for round ``r`` not
+        yet applied).  Model state is serialized uniformly as per-level
+        (D_pad,) planes — exact for the fp32 families in both engines — so
+        a checkpoint is mode-agnostic: a legacy run can resume a dispatch
+        checkpoint and vice versa."""
+        fl = self.fl
+        q_entries, q_seq = self.queue.state()
+        asg = fl.assignment
+        reg_meta, reg_arrays = report.registry.state()
+        meta = {
+            "mode": "dispatch" if plane_mode else "legacy",
+            "round": int(r),
+            "clock": float(self.clock.now),
+            "sampler": {
+                "seed": int(fl.cfg.seed), "round": int(r),
+                "fingerprint": device_sampler.stream_fingerprint(
+                    int(fl.cfg.seed), int(r))},
+            "online": sorted(int(p) for p in self.online),
+            "gone": sorted(int(p) for p in self._gone),
+            "spikes": [[int(p), float(f), int(tok)]
+                       for p, (f, tok) in sorted(self._spikes.items())],
+            "spike_seq": int(self._spike_seq),
+            "rejoin_token": [[int(p), int(t)]
+                             for p, t in sorted(self._rejoin_token.items())],
+            "queue": {"seq": int(q_seq),
+                      "entries": [[float(t), int(s), encode_event(ev)]
+                                  for t, s, ev in q_entries]},
+            "assignment": {
+                "members": {str(l): [int(p) for p in v]
+                            for l, v in asg.members.items()},
+                "n_eff": [[int(p), int(v)]
+                          for p, v in sorted(asg.n_eff.items())],
+                "tau": [[int(p), int(v)]
+                        for p, v in sorted(asg.tau.items())],
+                "demotions": int(asg.demotions),
+                "diagnostics": [[int(p), int(l), str(why)]
+                                for p, l, why in asg.diagnostics],
+            },
+            "bank": {str(l): [{"pid": int(b["pid"]), "round": int(b["round"]),
+                               "n_eff": int(b["n_eff"])} for b in entries]
+                     for l, entries in self._bank.items()},
+            "rows": encode_rows(report.rows),
+            "final_acc": [[int(l), float(a)]
+                          for l, a in sorted(report.final_acc.items())],
+            "obs": reg_meta,
+        }
+        arrays = {}
+        for lvl in range(fl.m):
+            plane = (params[lvl] if plane_mode
+                     else fl.plane_of(lvl, params[lvl]))
+            arrays[f"plane/{lvl}"] = np.asarray(plane, np.float32)
+        for lvl, entries in self._bank.items():
+            for i, b in enumerate(entries):
+                row = (b["plane"] if plane_mode
+                       else fl.plane_of(lvl, b["params"]))
+                arrays[f"bank/{lvl}/{i}"] = np.asarray(row, np.float32)
+        arrays["parts/V"] = np.array([[p.s, p.r, p.a] for p in fl.parts],
+                                     np.float64)
+        arrays["parts/n_data"] = np.array([p.n_data for p in fl.parts],
+                                          np.int64)
+        for k, v in reg_arrays.items():
+            arrays[f"obs/{k}"] = v
+        return meta, arrays
+
+    def _maybe_resume(self, report: SimReport, plane_mode: bool):
+        """(r0, params-or-planes) from the newest valid checkpoint, or None
+        to start from scratch (resume off, or no checkpoint validates —
+        graceful degradation, never a crash)."""
+        ck = self.checkpoint
+        if ck is None or not ck.resume:
+            return None
+        got = ck.load_latest(self.KIND)
+        if got is None:
+            log.warning("resume requested but no valid checkpoint under "
+                        "%s; starting from round 0", ck.manager.dir)
+            return None
+        step, meta, arrays = got
+        return self._load_state(meta, arrays, report, plane_mode)
+
+    def _load_state(self, meta: dict, arrays: dict, report: SimReport,
+                    plane_mode: bool):
+        """Overlay a captured run state onto this (freshly constructed)
+        engine.  The engine/FedRAC must have been built from the same seed
+        and config — everything ``setup()`` derives deterministically
+        (data, clustering, specs) is rebuilt, only the mutated state is
+        restored.  Returns (r0, params-or-planes)."""
+        fl = self.fl
+        r0 = int(meta["round"])
+        samp = meta["sampler"]
+        if int(samp["seed"]) != int(fl.cfg.seed):
+            raise CheckpointError(
+                f"checkpoint sampler seed {samp['seed']} != configured "
+                f"seed {fl.cfg.seed}")
+        fp = device_sampler.stream_fingerprint(int(samp["seed"]),
+                                               int(samp["round"]))
+        if fp != int(samp["fingerprint"]):
+            raise CheckpointError(
+                "sampler stream fingerprint mismatch — the (absolute "
+                "round, global slot) stream diverged since this checkpoint "
+                "was written; resuming would not be bit-identical")
+        # participant resources (drift events mutate them in place)
+        V = arrays["parts/V"]
+        nd = arrays["parts/n_data"]
+        if len(V) != len(fl.parts):
+            raise CheckpointError(
+                f"checkpoint has {len(V)} participants, engine has "
+                f"{len(fl.parts)}")
+        if fl.fleet is not None:
+            fl.fleet.V[:] = V
+            fl.fleet.n_data[:] = nd
+        else:
+            for p, row, n in zip(fl.parts, V, nd):
+                p.s, p.r, p.a = float(row[0]), float(row[1]), float(row[2])
+                p.n_data = int(n)
+        am = meta["assignment"]
+        asg = fl.assignment
+        asg.members = {int(l): [int(p) for p in v]
+                       for l, v in am["members"].items()}
+        asg.n_eff = {int(p): int(v) for p, v in am["n_eff"]}
+        asg.tau = {int(p): int(v) for p, v in am["tau"]}
+        asg.demotions = int(am["demotions"])
+        asg.diagnostics = [(int(p), int(l), str(w))
+                           for p, l, w in am["diagnostics"]]
+        self.online = {int(p) for p in meta["online"]}
+        self._gone = {int(p) for p in meta["gone"]}
+        self._spikes = {int(p): (float(f), int(tok))
+                        for p, f, tok in meta["spikes"]}
+        self._spike_seq = int(meta["spike_seq"])
+        self._rejoin_token = {int(p): int(t) for p, t in meta["rejoin_token"]}
+        q = meta["queue"]
+        self.queue.load_state(
+            [(t, s, decode_event(e)) for t, s, e in q["entries"]], q["seq"])
+        self.clock.now = float(meta["clock"])
+        self._bank = {lvl: [] for lvl in range(fl.m)}
+        for l_str, entries in meta["bank"].items():
+            lvl = int(l_str)
+            for i, b in enumerate(entries):
+                row = jnp.asarray(arrays[f"bank/{lvl}/{i}"])
+                entry = {"pid": int(b["pid"]), "round": int(b["round"]),
+                         "n_eff": int(b["n_eff"])}
+                if plane_mode:
+                    entry["plane"] = row
+                else:
+                    entry["params"] = fl.params_of(lvl, row)
+                self._bank[lvl].append(entry)
+        report.rows = decode_rows(meta["rows"])
+        report.final_acc = {int(l): float(a) for l, a in meta["final_acc"]}
+        report.registry.load_state(
+            meta["obs"], {k[len("obs/"):]: v for k, v in arrays.items()
+                          if k.startswith("obs/")})
+        params = {}
+        for lvl in range(fl.m):
+            plane = jnp.asarray(arrays[f"plane/{lvl}"])
+            if plane.shape != (fl.plane_spec(lvl).d_pad,):
+                raise CheckpointError(
+                    f"level {lvl} plane shape {plane.shape} != "
+                    f"({fl.plane_spec(lvl).d_pad},) — model family/mesh "
+                    "changed since the checkpoint")
+            params[lvl] = (fl.place_plane(plane) if plane_mode
+                           else fl.params_of(lvl, plane))
+        log.info("resumed %s run at round %d from %s", meta["mode"], r0,
+                 self.checkpoint.manager.dir)
+        return r0, params
 
     def _terminal_flush(self, params: dict, rounds: int, report,
                         merge=None) -> None:

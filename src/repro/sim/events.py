@@ -6,7 +6,7 @@ same event object can be rescheduled (e.g. an auto-rejoin ``Arrival``).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import asdict, dataclass
 
 
 @dataclass(frozen=True)
@@ -53,3 +53,23 @@ class SpikeEnd(Event):
     """Internal: clears the straggler spike identified by ``token`` (scheduled
     by the engine; a stale SpikeEnd must not clear a newer spike)."""
     token: int = 0
+
+
+# name -> class registry for checkpoint (de)serialization of pending events
+EVENT_TYPES = {cls.__name__: cls
+               for cls in (Arrival, Departure, ResourceDrift,
+                           StragglerSpike, SpikeEnd)}
+
+
+def encode_event(ev: Event) -> list:
+    """JSON-safe ``[type_name, fields]`` form of one event."""
+    return [type(ev).__name__, asdict(ev)]
+
+
+def decode_event(rec: list) -> Event:
+    name, fields = rec
+    try:
+        cls = EVENT_TYPES[name]
+    except KeyError:
+        raise ValueError(f"unknown event type {name!r} in checkpoint") from None
+    return cls(**fields)

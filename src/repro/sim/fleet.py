@@ -26,6 +26,7 @@ scheduling/accounting view, the layer whose cost ceiling used to be Python.
 """
 from __future__ import annotations
 
+import logging
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -35,7 +36,15 @@ from repro.core.assignment import build_cluster_specs, reassign_by_centroids
 from repro.core.clustering import fleet_optimal_clusters
 from repro.core.resources import Fleet
 from repro.core.rounds import ConvergenceConstants
+from repro.sim.faults import NULL_FAULTS
 from repro.sim.traces import FleetTrace
+
+log = logging.getLogger("repro.sim")
+
+# FleetRoundRecord fields that are per-level arrays (serialized stacked as
+# (rounds, m) in run-state checkpoints; round/duration/events go in meta)
+_ROW_ARRAY_FIELDS = ("time", "active", "masked", "dropped", "offline",
+                     "unselected", "violations", "banked", "flushed", "bytes")
 
 
 @dataclass
@@ -127,9 +136,18 @@ def _sorted_table(tab: dict) -> dict:
 
 
 class FleetSim:
-    """Couples a ``Fleet`` with a ``FleetTrace`` and runs vectorized rounds."""
+    """Couples a ``Fleet`` with a ``FleetTrace`` and runs vectorized rounds.
 
-    def __init__(self, fleet: Fleet, trace: FleetTrace, cfg: FleetSimConfig):
+    ``checkpoint``/``faults`` mirror ``HeterogeneitySim``: a
+    ``RunCheckpointer`` snapshots the whole-fleet arrays (V, online, spike,
+    levels, dropout/rejoin state, trace cursors, per-round records) at round
+    boundaries and resumes bit-identically; a ``FaultInjector`` SIGKILLs at
+    boundaries for the kill-and-resume harness."""
+
+    KIND = "fleet-sim"
+
+    def __init__(self, fleet: Fleet, trace: FleetTrace, cfg: FleetSimConfig,
+                 checkpoint=None, faults=None):
         if cfg.mar_policy not in ("drop", "mask", "wait", "buffer"):
             raise ValueError(f"unknown mar_policy {cfg.mar_policy!r}")
         if cfg.select not in ("all", "fedcs"):
@@ -200,6 +218,10 @@ class FleetSim:
                       "spikes": _sorted_table(trace.spikes),
                       "arrivals": _sorted_table(trace.arrivals)}
         self._cur = {k: 0 for k in self._tabs}
+        self.checkpoint = checkpoint
+        self.faults = faults if faults is not None else NULL_FAULTS
+        self.report: FleetReport | None = None
+        self._pending_state = None
 
     # ------------------------------------------------------------ events
     def _due(self, name: str, r: int) -> dict:
@@ -359,9 +381,12 @@ class FleetSim:
             select=self.cfg.select, n=len(self.fleet), k=self.m,
             di_values=self.clustering.di_values,
             mar=[round(float(v), 4) for v in self.mar])
-        for r in range(self.cfg.rounds):
+        self.report = report
+        r0 = self._maybe_resume(report)
+        for r in range(r0, self.cfg.rounds):
             applied = self._apply_events(r)
             report.rows.append(self._round(r, applied))
+            self._round_boundary(r + 1, report)
         # terminal flush: updates banked in the last round still merge
         if self._banked_prev.any() and report.rows:
             report.rows[-1].flushed = (report.rows[-1].flushed
@@ -369,3 +394,86 @@ class FleetSim:
             self._banked_prev = np.zeros(self.m, np.int64)
         report.levels = self.levels
         return report
+
+    # ------------------------------------------------------------ checkpoint
+    def _round_boundary(self, r: int, report: FleetReport) -> None:
+        if self.checkpoint is not None:
+            meta, arrays = self._capture_state(r, report.rows)
+            self._pending_state = (r, meta, arrays)
+            if self.checkpoint.due(r):
+                self.checkpoint.save(r, self.KIND, meta, arrays)
+        self.faults.round_boundary(r)
+
+    def save_now(self):
+        """Write the newest retained boundary snapshot (graceful shutdown);
+        returns the step written, or None."""
+        if self.checkpoint is None or self._pending_state is None:
+            return None
+        r, meta, arrays = self._pending_state
+        self.checkpoint.save(r, self.KIND, meta, arrays)
+        return r
+
+    def _capture_state(self, r: int, rows: list) -> tuple[dict, dict]:
+        fleet = self.fleet
+        meta = {
+            "round": int(r),
+            "seed": int(self.cfg.seed),
+            "rows": [{"round": int(x.round), "duration": float(x.duration),
+                      "events": int(x.events)} for x in rows],
+        }
+        arrays = {
+            "fleet/V": fleet.V.copy(),
+            "fleet/n_data": fleet.n_data.copy(),
+            "fleet/online": fleet.online.copy(),
+            "fleet/spike": fleet.spike.copy(),
+            "levels": self.levels.copy(),
+            "gone": self.gone.copy(),
+            "rejoin_round": self.rejoin_round.copy(),
+            "spike_end": self.spike_end.copy(),
+            "banked_prev": self._banked_prev.copy(),
+            "cur": np.array([self._cur[k] for k in sorted(self._tabs)],
+                            np.int64),
+        }
+        for f in _ROW_ARRAY_FIELDS:
+            arrays[f"rows/{f}"] = (
+                np.stack([np.asarray(getattr(x, f)) for x in rows])
+                if rows else np.zeros((0, self.m)))
+        return meta, arrays
+
+    def _maybe_resume(self, report: FleetReport) -> int:
+        ck = self.checkpoint
+        if ck is None or not ck.resume:
+            return 0
+        got = ck.load_latest(self.KIND)
+        if got is None:
+            log.warning("resume requested but no valid checkpoint under "
+                        "%s; starting from round 0", ck.manager.dir)
+            return 0
+        _, meta, arrays = got
+        return self._load_state(meta, arrays, report)
+
+    def _load_state(self, meta: dict, arrays: dict,
+                    report: FleetReport) -> int:
+        fleet = self.fleet
+        fleet.V[:] = arrays["fleet/V"]
+        fleet.n_data[:] = arrays["fleet/n_data"]
+        fleet.online[:] = arrays["fleet/online"].astype(bool)
+        fleet.spike[:] = arrays["fleet/spike"]
+        self.levels[:] = arrays["levels"]
+        self.gone[:] = arrays["gone"].astype(bool)
+        self.rejoin_round[:] = arrays["rejoin_round"]
+        self.spike_end[:] = arrays["spike_end"]
+        self._banked_prev = arrays["banked_prev"].astype(np.int64).copy()
+        for k, v in zip(sorted(self._tabs), arrays["cur"]):
+            self._cur[k] = int(v)
+        report.rows = [
+            FleetRoundRecord(
+                round=int(rm["round"]), duration=float(rm["duration"]),
+                events=int(rm["events"]),
+                **{f: arrays[f"rows/{f}"][i].copy()
+                   for f in _ROW_ARRAY_FIELDS})
+            for i, rm in enumerate(meta["rows"])]
+        r0 = int(meta["round"])
+        log.info("resumed fleet run at round %d from %s", r0,
+                 self.checkpoint.manager.dir)
+        return r0

@@ -137,3 +137,42 @@ def test_checkpoint_step_management(tmp_path, key):
     assert checkpoint.latest_step(str(tmp_path)) == 4
     files = sorted(os.listdir(tmp_path))
     assert len(files) == 2
+
+
+def test_checkpoint_restore_raises_real_exceptions(tmp_path, key):
+    """Hardened restore: missing file, truncation, missing leaf, and shape
+    mismatch raise ``CheckpointError`` — never a bare assert (which
+    vanishes under ``python -O``) and never silent garbage."""
+    import pytest
+    tree = {"a": jax.random.normal(key, (3, 4)),
+            "b": jnp.arange(5, dtype=jnp.int32)}
+    path = os.path.join(tmp_path, "t.ckpt")
+    checkpoint.save(path, tree)
+    with pytest.raises(checkpoint.CheckpointError, match="cannot read"):
+        checkpoint.restore(os.path.join(tmp_path, "nope.ckpt"), like=tree)
+    with pytest.raises(checkpoint.CheckpointError, match="missing leaf"):
+        checkpoint.restore(path, like=dict(tree, c=jnp.zeros(2)))
+    with pytest.raises(checkpoint.CheckpointError, match="shape"):
+        checkpoint.restore(path, like=dict(tree, a=jnp.zeros((4, 4))))
+    with open(path, "rb") as f:
+        data = f.read()
+    with open(path, "wb") as f:       # SIGKILL-mid-write artifact
+        f.write(data[:len(data) // 2])
+    with pytest.raises(checkpoint.CheckpointError):
+        checkpoint.restore(path, like=tree)
+
+
+def test_checkpoint_restored_arrays_are_writable(tmp_path):
+    """Restored leaves are independently-owned WRITABLE copies, not
+    read-only ``np.frombuffer`` views of the msgpack payload — callers feed
+    them into donated jax buffers and mutate them in place."""
+    tree = {"a": np.arange(6, dtype=np.float32),
+            "n": {"b": np.ones((2, 3), dtype=np.int64)}}
+    path = os.path.join(tmp_path, "t.ckpt")
+    checkpoint.save(path, tree)
+    for back in (checkpoint.restore(path),           # raw {path: array} map
+                 checkpoint.restore(path, like=tree)):
+        for leaf in jax.tree.leaves(back):
+            arr = np.asarray(leaf)
+            assert arr.flags.writeable
+            arr[(0,) * arr.ndim] = 42                # must not raise

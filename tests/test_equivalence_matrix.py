@@ -35,6 +35,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.ckpt.run_state import make_checkpointer
 from repro.core import aggregation
 from repro.core import server as srv
 from repro.core.client import local_update
@@ -45,6 +46,7 @@ from repro.data.partition import dirichlet_partition
 from repro.data.synthetic import make_classification, train_test_split
 from repro.launch.mesh import make_sim_mesh
 from repro.sim import HeterogeneitySim, SimConfig, make_trace, sample_profiles
+from repro.sim.faults import FaultInjector, FaultPlan, SimulatedCrash
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 RTOL, ATOL = 2e-4, 1e-5
@@ -345,6 +347,103 @@ def test_matrix_buffered_eightway(mesh_shape):
                           f"buffered/{mesh_shape}-r8")
 
 
+# ------------------------------------------------------------ resume column
+# kill/resume ≡ uninterrupted, at BIT-exactness (np.array_equal, not the
+# rtol used across execution paths): every cell crashes at round boundary 3
+# via an in-process SimulatedCrash, then a FRESH engine (new-process
+# stand-in) resumes from the checkpoint and must reproduce the control
+# run's final params, per-round rows, and summary totals exactly.
+SIM_ROUNDS = 5
+
+
+def _resume_cell_builder(mesh_shape=None, R=8, buffered=False):
+    """() -> (engine, test batch, SimConfig, trace) for one resume cell."""
+    def build():
+        if buffered:
+            from repro.core import cost_model
+            eng, testb = _build(mesh_shape=mesh_shape, compact_to=1,
+                                aggregation="buffered", rounds_per_dispatch=R)
+            spec = eng.specs[0]
+            t = sorted(cost_model.round_time(
+                p, spec.flops_per_sample, spec.model_bytes, spec.E,
+                eng.assignment.n_eff.get(p.pid, p.n_data))
+                for p in eng.parts)
+            spec.mar = 0.5 * (t[len(t) // 2 - 1] + t[len(t) // 2])
+            simcfg = SimConfig(rounds=SIM_ROUNDS, mar_policy="buffer")
+            trace = make_trace("stable", 8, SIM_ROUNDS, seed=5)
+        else:
+            eng, testb = _build(mesh_shape=mesh_shape, rounds_per_dispatch=R)
+            simcfg = SimConfig(rounds=SIM_ROUNDS, mar_policy="mask")
+            trace = make_trace("mixed", 8, SIM_ROUNDS, seed=5)
+        return eng, testb, simcfg, trace
+    return build
+
+
+def _resume_run(ckpt_dir, builder, kill=None, resume=False):
+    eng, testb, simcfg, trace = builder()
+    ck = (make_checkpointer(str(ckpt_dir), every=1, resume=resume)
+          if ckpt_dir is not None else None)
+    faults = (FaultInjector(FaultPlan(kill_at_round=kill,
+                                      raise_instead=True))
+              if kill is not None else None)
+    sim = HeterogeneitySim(eng, trace, simcfg, checkpoint=ck, faults=faults)
+    try:
+        rep = sim.run(testb)
+    except SimulatedCrash:
+        return None
+    params = {lvl: [np.asarray(x) for x in jax.tree.leaves(p)]
+              for lvl, p in sim.params.items()}
+    rows = [(r.round, r.duration,
+             [(c.level, c.time, c.mean_loss, sorted(c.active),
+               sorted(c.dropped), sorted(c.offline),
+               sorted(c.masked.items()), sorted(c.violations),
+               sorted(c.banked), sorted(c.unselected), c.flushed, c.bytes,
+               c.acc) for c in r.clusters]) for r in rep.rows]
+    summary = {k: v for k, v in rep.summary().items()
+               if k not in ("compiles", "transfers")}   # process-local
+    return params, rows, summary
+
+
+def _assert_resume_cell(ctrl, res, tag):
+    assert res is not None, f"[{tag}] resumed run crashed"
+    for lvl in ctrl[0]:
+        for a, b in zip(ctrl[0][lvl], res[0][lvl]):
+            assert np.array_equal(a, b), f"params[{tag}] L{lvl} not bit-equal"
+    assert ctrl[1] == res[1], f"rows[{tag}]"
+    assert ctrl[2] == res[2], f"summary[{tag}]"
+
+
+RESUME_CELLS = {
+    "legacy": lambda: _resume_cell_builder(R=1),
+    "disp-r8": lambda: _resume_cell_builder(R=8),
+    "buffered": lambda: _resume_cell_builder(buffered=True),
+}
+
+
+@pytest.mark.parametrize("cell", sorted(RESUME_CELLS))
+def test_matrix_resume_fast(cell, tmp_path):
+    """Resume column, always-on subset: legacy per-round jit, fused
+    dispatch R=8, and the buffered/bank schedule (banked rows + ages ride
+    the checkpoint) — each kill/resume bit-identical to its control."""
+    builder = RESUME_CELLS[cell]()
+    ctrl = _resume_run(None, builder)
+    assert _resume_run(tmp_path, builder, kill=3) is None
+    _assert_resume_cell(ctrl, _resume_run(tmp_path, builder, resume=True),
+                        f"resume/{cell}")
+
+
+@eightway
+def test_matrix_resume_eightway(tmp_path):
+    """Resume column at 8 devices: the 4x2 (data × model) mesh cell — the
+    checkpointed planes are re-committed to the 2D sharding on restore and
+    the resumed run still matches its own control bit-exactly."""
+    builder = _resume_cell_builder(mesh_shape="4x2")
+    ctrl = _resume_run(None, builder)
+    assert _resume_run(tmp_path, builder, kill=3) is None
+    _assert_resume_cell(ctrl, _resume_run(tmp_path, builder, resume=True),
+                        "resume/4x2-r8")
+
+
 # ------------------------------------------------------- sampler × 2D mesh
 @eightway
 def test_sampler_draws_independent_of_model_axis():
@@ -387,4 +486,4 @@ def test_matrix_under_forced_host_devices():
          os.path.abspath(__file__), "-k", "eightway or model_axis"],
         capture_output=True, text=True, timeout=560, env=env, cwd=REPO)
     assert r.returncode == 0, r.stdout + "\n" + r.stderr[-3000:]
-    assert "13 passed" in r.stdout, r.stdout
+    assert "14 passed" in r.stdout, r.stdout

@@ -543,7 +543,87 @@ def run_ckpt_bench(sizes=(10_000, 100_000), rounds: int = 2, seed: int = 0,
     return out
 
 
+# ------------------------------------------------------------ async bench
+def run_async_bench(n: int = 12, rounds: int = 10, R: int = 4,
+                    seed: int = 0, spike_rate: float = 0.5) -> dict:
+    """Continuous-time async parameter server vs the global round barrier on
+    a straggler-heavy trace (Table-III profiles, transient ×4 compute
+    spikes): the same two-cluster buffered engine runs once with the sync
+    barrier and once in ``mode="async"`` (unbounded staleness), and the
+    headline is SIMULATED wall-clock to the target loss — the barrier
+    charges every round at the slowest cluster's pace (Σ_r max_l t),
+    independent clocks only ever charge each cluster its own time
+    (max_l Σ_r t ≤ Σ_r max_l, strict under straggling), so the async run
+    must reach the sync run's final master loss no later than the barrier
+    does."""
+    def one(mode):
+        eng, testb = build_cnn(n, 3, seed, 0.125, samples=60 * n,
+                               dirichlet=2.0, with_test=True, local_batch=8,
+                               compact_to=2, mar=None, pad_clusters=True,
+                               aggregation="buffered", rounds_per_dispatch=R)
+        trace = make_trace("straggler", n, rounds, seed=seed,
+                           spike_rate=spike_rate)
+        kw = ({"mode": "async", "max_staleness": None}
+              if mode == "async" else {})
+        sim = HeterogeneitySim(eng, trace, SimConfig(
+            rounds=rounds, mar_policy="buffer", eval_every=10 ** 9, **kw))
+        with Timer() as t:
+            rep = sim.run(testb)
+        # master (level 0) per-round loss against that CLUSTER's own clock:
+        # barrier time under sync (t_end — every cluster waits), the
+        # master's own cumulative clock under async
+        loss, t_cluster, t_barrier = [], [], []
+        acc = 0.0
+        for r in rep.rows:
+            c0 = next(c for c in r.clusters if c.level == 0)
+            acc += c0.time
+            loss.append(c0.mean_loss)
+            t_cluster.append(acc)
+            t_barrier.append(r.t_end)
+        wall = (rep.registry.gauge("async/wall_clock_s").value
+                if mode == "async" else rep.summary()["wall_clock_s"])
+        return {"loss": loss,
+                "t": t_cluster if mode == "async" else t_barrier,
+                "wall_clock_s": float(wall),
+                "banked": rep.summary()["banked_total"],
+                "host_s": t.dt}
+
+    res = {m: one(m) for m in ("sync", "async")}
+    target = max(res["sync"]["loss"][-1], res["async"]["loss"][-1])
+
+    def t_to_target(r):
+        return next(t for t, l in zip(r["t"], r["loss"]) if l <= target)
+    out = {"members": n, "rounds": rounds, "R": R,
+           "spike_rate": spike_rate, "target_loss": round(target, 4)}
+    for m in ("sync", "async"):
+        out[m] = {"t_to_target_s": round(t_to_target(res[m]), 4),
+                  "wall_clock_s": round(res[m]["wall_clock_s"], 4),
+                  "final_loss": round(res[m]["loss"][-1], 4),
+                  "banked": res[m]["banked"],
+                  "host_s": round(res[m]["host_s"], 3)}
+    out["speedup_to_target"] = round(
+        out["sync"]["t_to_target_s"]
+        / max(out["async"]["t_to_target_s"], 1e-9), 3)
+    return out
+
+
 # ------------------------------------------------------------ run.py hooks
+def bench_sim_async():
+    """benchmarks/run.py suite: async server vs barrier on the straggler
+    trace — simulated seconds to the sync run's final master loss (the row
+    time) plus total simulated wall-clock per mode."""
+    res = run_async_bench()
+    for m in ("sync", "async"):
+        r = res[m]
+        yield (f"sim/async_{m if m == 'async' else 'barrier'}",
+               r["t_to_target_s"] * 1e6,
+               f"t_to_target_s={r['t_to_target_s']};"
+               f"wall_clock_s={r['wall_clock_s']};"
+               f"final_loss={r['final_loss']};banked={r['banked']};"
+               f"target_loss={res['target_loss']};"
+               f"speedup_to_target={res['speedup_to_target']}")
+
+
 def bench_sim_ckpt():
     """benchmarks/run.py suite: run-state checkpoint save/validated-restore
     wall time and payload bytes at fleet sizes 10⁴/10⁵."""
@@ -649,7 +729,8 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", default="cluster",
                     choices=["cluster", "padding", "dispatch", "mesh",
-                             "mesh2d", "mesh-inner", "fleet", "ckpt", "all"],
+                             "mesh2d", "mesh-inner", "fleet", "ckpt",
+                             "async", "all"],
                     help="'mesh' re-executes itself under forced host "
                          "devices and times the plane-sharded dispatch; "
                          "'mesh2d' is the same on a 4x2 (data × model) "
@@ -739,6 +820,22 @@ def main(argv=None):
                   f"sim={r['sim_s']:7.3f}s  "
                   f"({r['rounds_per_s']:.2f} rounds/s, "
                   f"{r['events']} events)")
+    if args.mode in ("async", "all"):
+        res = run_async_bench(seed=args.seed)
+        results["async"] = res
+        print(f"async server vs barrier, {res['members']} participants × "
+              f"{res['rounds']} rounds (R={res['R']}, straggler trace, "
+              f"spike_rate={res['spike_rate']}), "
+              f"target_loss={res['target_loss']}")
+        for m in ("sync", "async"):
+            r = res[m]
+            print(f"  {m:5s} : t_to_target={r['t_to_target_s']:8.3f}s  "
+                  f"wall={r['wall_clock_s']:8.3f}s  "
+                  f"final_loss={r['final_loss']:.4f}  "
+                  f"banked={r['banked']}")
+        print(f"  async reaches target in "
+              f"{1 / max(res['speedup_to_target'], 1e-9):.2f}× the barrier "
+              f"time ({res['speedup_to_target']:.2f}× speedup)")
     if args.mode in ("ckpt", "all"):
         res = run_ckpt_bench(seed=args.seed, reps=args.reps)
         results["ckpt"] = res

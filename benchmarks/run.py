@@ -35,6 +35,7 @@ def _suites(fast: bool):
         ("sim/mesh2d", bench_sim.bench_sim_mesh2d),
         ("sim/fleet", bench_sim.bench_sim_fleet),
         ("sim/ckpt", bench_sim.bench_sim_ckpt),
+        ("sim/async", bench_sim.bench_sim_async),
     ]
     if not fast:
         suites += [

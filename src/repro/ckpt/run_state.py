@@ -12,8 +12,13 @@ and the newest-valid-or-nothing resume read.
     ckpt = make_checkpointer("runs/ckpt", every=2, keep=3, resume=True)
     HeterogeneitySim(eng, trace, cfg, checkpoint=ckpt).run(test)
 
-The engine captures a snapshot at every round boundary (cheap host copies;
-also the graceful-shutdown payload), writes it when ``due()``, and on
+The engine captures a snapshot at every round boundary — every *merge
+event* in ``mode="async"``, where per-cluster clocks replace the global
+round barrier and the snapshot additionally carries the per-cluster clock
+states, server version counters and the in-flight delta ledger under
+``meta["async"]`` (same envelope version: the section is additive) —
+(cheap host copies; also the graceful-shutdown payload), writes it when
+``due()``, and on
 ``resume`` loads the newest checkpoint that passes CRC + decode + header
 validation — a corrupt or truncated newest checkpoint degrades to the
 previous valid one with a logged warning, and no valid checkpoint at all
@@ -60,8 +65,9 @@ class RunCheckpointer:
     resume: bool = False
 
     def due(self, r: int) -> bool:
-        """Write a checkpoint at round boundary ``r``?  (r counts completed
-        rounds, so the first eligible boundary is r == every.)"""
+        """Write a checkpoint at boundary ``r``?  (r counts completed
+        rounds — merge events in async mode — so the first eligible
+        boundary is r == every.)"""
         return r > 0 and self.every > 0 and r % self.every == 0
 
     def save(self, r: int, kind: str, meta: dict, arrays: dict) -> str:

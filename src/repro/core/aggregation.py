@@ -229,6 +229,34 @@ def staleness_weights(n_list, age_list, discount: float) -> list[float]:
             for n, age in zip(n_list, age_list)]
 
 
+def version_staleness_weights(n_list, version_list, current_version: int,
+                              discount: float) -> list[float]:
+    """Async-server form of :func:`staleness_weights`: staleness is measured
+    in *server versions* — the plane version a contribution was computed
+    against vs. the version it merges at — instead of banked round-age.  A
+    ledger entry tagged ``v`` merging at version ``V`` weighs
+    ``n · discount**max(1, V - v)``; with versions advancing one per
+    committed round this is numerically identical to the round-age form,
+    which is what makes the synchronized-arrival anchor bit-exact."""
+    return staleness_weights(
+        n_list, [int(current_version) - int(v) for v in version_list],
+        discount)
+
+
+def anchored_merge_weights(anchor_weight: float, us) -> tuple[float, list[float]]:
+    """Normalize an anchored stale merge — ``anchor_weight`` is the current
+    plane's weight (Σ n_eff of the cluster), ``us`` the raw discounted
+    ledger weights — under the ``normalized_weights`` zero-total contract:
+    when everything underflows (``discount**lag → 0`` on deeply stale
+    entries AND the cluster emptied, so the anchor is 0 too), the anchor
+    keeps weight 1 and the ledger gets zeros — a zero delta, never a NaN
+    plane."""
+    total = float(anchor_weight) + float(sum(us))
+    if total <= 0.0:
+        return 1.0, [0.0 for _ in us]
+    return float(anchor_weight) / total, [float(u) / total for u in us]
+
+
 def merge_buffered(partial, contribs, norm_weights, *, obs=None):
     """Fold banked contributions into a partial FedAvg sum.
 

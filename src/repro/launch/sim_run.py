@@ -9,6 +9,12 @@ assignment) on synthetic federated data, then hands it to
 dropouts/arrivals, resource drift through dynamic reassignment, straggler
 spikes — and prints the per-round timeline plus summary (optionally JSON).
 
+``--mode async`` swaps the global round barrier for the continuous-time
+async parameter server: per-cluster clocks, pull-version/push-delta
+dispatch, streaming staleness-discounted merges, with ``--max-staleness``
+bounding how far any cluster may lead the slowest (0 = synchronized
+arrivals ≡ the sync buffered path, bit-for-bit).
+
 ``--fleet-size N`` switches to the vectorized orchestration simulator
 (``repro.sim.FleetSim``): N Table-III-resampled participants as a struct-of-
 arrays ``Fleet``, columnar traces, sampled-Dunn Procedure 1, FedCS
@@ -195,8 +201,8 @@ def run_fleet(args):
     sim = FleetSim(fleet, trace, FleetSimConfig(
         rounds=args.rounds, mar_policy=args.mar_policy, select=args.select,
         select_budget=args.select_budget, schedule=args.schedule,
-        mar=args.mar or 0.0, kappa=args.kappa, lam=lam, seed=args.seed),
-        checkpoint=ckpt, faults=faults)
+        mar=args.mar or 0.0, kappa=args.kappa, lam=lam, seed=args.seed,
+        mode=args.mode), checkpoint=ckpt, faults=faults)
     with _graceful_signals():
         try:
             report = sim.run()
@@ -241,7 +247,8 @@ def run(args):
     sim = HeterogeneitySim(eng, trace, SimConfig(
         rounds=args.rounds, mar_policy=args.mar_policy,
         schedule=args.schedule, eval_every=args.eval_every,
-        select=args.select, select_budget=args.select_budget), obs=obs,
+        select=args.select, select_budget=args.select_budget,
+        mode=args.mode, max_staleness=args.max_staleness), obs=obs,
         checkpoint=ckpt, faults=faults)
     with _graceful_signals():
         try:
@@ -296,6 +303,17 @@ def main(argv=None):
                          "--xla_force_host_platform_device_count=8")
     ap.add_argument("--schedule", default="parallel",
                     choices=["parallel", "sequential"])
+    ap.add_argument("--mode", default="sync", choices=["sync", "async"],
+                    help="async: continuous-time parameter server — each "
+                         "cluster runs on its own clock, pulls the plane "
+                         "version, pushes its delta at its own completion "
+                         "time (streaming staleness-discounted merge); "
+                         "requires --schedule parallel")
+    ap.add_argument("--max-staleness", type=int, default=None, metavar="K",
+                    help="async: max version lead of any cluster over the "
+                         "slowest one; 0 = synchronized arrivals "
+                         "(reproduces the sync buffered path bit-exactly), "
+                         "omitted = unbounded")
     ap.add_argument("--dropout-rate", type=float, default=None,
                     help="per-round dropout probability (dropout/mixed "
                          "traces; scenario default when omitted)")
@@ -362,7 +380,8 @@ def main(argv=None):
     ap.add_argument("--kill-at-round", type=int, default=None, metavar="R",
                     help="fault injection: SIGKILL this process at the "
                          "first round boundary >= R (after the boundary "
-                         "checkpoint)")
+                         "checkpoint); with --mode async, R counts MERGE "
+                         "EVENTS (the async checkpoint cadence)")
     ap.add_argument("--kill-mid-block", type=int, default=None, metavar="R",
                     help="fault injection: SIGKILL inside the dispatch "
                          "block covering round R, after the fused program "

@@ -18,10 +18,12 @@ gives way to the vectorized stack: columnar traces (``FleetTrace`` /
 ``make_fleet_trace``) over a struct-of-arrays ``core.resources.Fleet``,
 driven by ``FleetSim`` — same scenarios, same seeds, whole-fleet numpy ops.
 """
-from repro.sim.clock import EventQueue, SimClock
+from repro.sim.async_server import AsyncPlaneServer, MasterBlock
+from repro.sim.clock import ClusterClock, EventQueue, SimClock
 from repro.sim.engine import HeterogeneitySim, SimConfig
-from repro.sim.events import (Arrival, Departure, Event, ResourceDrift,
-                              SpikeEnd, StragglerSpike)
+from repro.sim.events import (Arrival, ClusterDone, Departure, Event,
+                              ResourceDrift, SpikeEnd, StragglerSpike,
+                              event_priority)
 from repro.sim.fleet import (FleetReport, FleetRoundRecord, FleetSim,
                              FleetSimConfig)
 from repro.sim.report import ClusterRoundStats, RoundRecord, SimReport
@@ -29,10 +31,11 @@ from repro.sim.traces import (SCENARIOS, FleetTrace, Trace, make_fleet_trace,
                               make_trace, sample_profiles, scenario_knobs)
 
 __all__ = [
-    "Arrival", "ClusterRoundStats", "Departure", "Event", "EventQueue",
+    "Arrival", "AsyncPlaneServer", "ClusterClock", "ClusterDone",
+    "ClusterRoundStats", "Departure", "Event", "EventQueue",
     "FleetReport", "FleetRoundRecord", "FleetSim", "FleetSimConfig",
-    "FleetTrace", "HeterogeneitySim", "ResourceDrift", "RoundRecord",
-    "SCENARIOS", "SimClock", "SimConfig", "SimReport", "SpikeEnd",
-    "StragglerSpike", "Trace", "make_fleet_trace", "make_trace",
-    "sample_profiles", "scenario_knobs",
+    "FleetTrace", "HeterogeneitySim", "MasterBlock", "ResourceDrift",
+    "RoundRecord", "SCENARIOS", "SimClock", "SimConfig", "SimReport",
+    "SpikeEnd", "StragglerSpike", "Trace", "event_priority",
+    "make_fleet_trace", "make_trace", "sample_profiles", "scenario_knobs",
 ]

@@ -38,12 +38,14 @@ from repro.core import aggregation, cost_model
 from repro.core.server import FedRAC
 from repro.data import device_sampler
 from repro.obs import NULL_OBS
-from repro.sim.clock import EventQueue, SimClock
-from repro.sim.events import (Arrival, Departure, ResourceDrift, SpikeEnd,
-                              StragglerSpike, decode_event, encode_event)
+from repro.sim.async_server import AsyncPlaneServer, MasterBlock
+from repro.sim.clock import ClusterClock, EventQueue, SimClock
+from repro.sim.events import (Arrival, ClusterDone, Departure, ResourceDrift,
+                              SpikeEnd, StragglerSpike)
 from repro.sim.faults import NULL_FAULTS
 from repro.sim.report import (ClusterRoundStats, RoundRecord, SimReport,
-                              decode_rows, encode_rows)
+                              decode_rows, decode_stats, encode_rows,
+                              encode_stats)
 from repro.sim.traces import Trace
 
 log = logging.getLogger("repro.sim")
@@ -60,6 +62,11 @@ class SimConfig:
     min_mem: float = 0.25
     select: str = "all"               # all | fedcs (per-cluster selection)
     select_budget: int = 0            # fedcs: max clients/cluster (0 = ∞)
+    mode: str = "sync"                # sync | async (continuous-time server)
+    max_staleness: int | None = None  # async: max committed-round lead over
+    #                                   the slowest cluster; 0 = barrier
+    #                                   (reproduces the sync buffered path),
+    #                                   None = unbounded
 
 
 class HeterogeneitySim:
@@ -88,6 +95,12 @@ class HeterogeneitySim:
         if cfg.mar_policy == "buffer" and fedrac.cfg.aggregation != "buffered":
             raise ValueError(
                 'mar_policy "buffer" needs FLConfig(aggregation="buffered")')
+        if cfg.mode not in ("sync", "async"):
+            raise ValueError(f"unknown mode {cfg.mode!r}")
+        if cfg.mode == "async" and cfg.schedule == "sequential":
+            # Eq. 10 serializes master → slaves inside every round — a
+            # global order that contradicts independent cluster clocks
+            raise ValueError('mode "async" requires schedule "parallel"')
         self.fl = fedrac
         self.trace = trace
         self.cfg = cfg
@@ -112,13 +125,29 @@ class HeterogeneitySim:
 
     # ------------------------------------------------------------ events
     def _apply_events(self, r: int) -> list[str]:
-        applied = []
+        """Fire every due event (sync engines; async barrier sweeps)."""
         # Arrivals first at equal timestamps: a scheduled rejoin and a fresh
         # trace Departure landing on the same round must net to "rejoined,
         # then dropped again" — otherwise the Departure (popped first, pid
         # still offline) would be silently discarded and churn understated.
-        due = sorted(self.queue.pop_due(float(r)),
-                     key=lambda te: (te[0], not isinstance(te[1], Arrival)))
+        # The (time, priority, seq) heap key encodes exactly this order.
+        return self._apply_event_list(self.queue.pop_due(float(r)))
+
+    def _apply_events_for(self, lvl: int, r: int) -> list[str]:
+        """Async per-cluster event visibility: fire only the due events whose
+        participant currently belongs to cluster ``lvl`` (each cluster
+        observes device state at ITS dispatch boundaries; a migration
+        lands at the owning cluster's dispatch and becomes visible to the
+        target cluster at its own next dispatch).  Non-matching entries
+        keep their heap position, so the global total order is preserved."""
+        owner = {pid: l for l, ms in self.fl.assignment.members.items()
+                 for pid in ms}
+        due = self.queue.pop_due_where(
+            float(r), lambda ev: owner.get(ev.pid) == lvl)
+        return self._apply_event_list(due)
+
+    def _apply_event_list(self, due: list) -> list[str]:
+        applied = []
         for t, ev in due:
             if isinstance(ev, Departure):
                 # applies even while transiently offline: a fresh Departure
@@ -280,6 +309,8 @@ class HeterogeneitySim:
 
     # ------------------------------------------------------------ round loop
     def run(self, test) -> SimReport:
+        if self.cfg.mode == "async":
+            return self._run_async(test)
         if self.fl.cfg.rounds_per_dispatch > 1:
             return self._run_dispatch(test)
         fl, cfg, tr = self.fl, self.cfg, self.obs.tracer
@@ -613,8 +644,8 @@ class HeterogeneitySim:
         fl = self.fl
         cap = fl._capacity(len(members))
         dp = fl.plane_spec(lvl).d_pad
-        us = aggregation.staleness_weights(
-            [b["n_eff"] for b in ripe], [r - b["round"] for b in ripe],
+        us = aggregation.version_staleness_weights(
+            [b["n_eff"] for b in ripe], [b["round"] for b in ripe], r,
             fl.cfg.staleness_discount)
         # membership may have shrunk below the banked backlog (event between
         # blocks): Σu-preserving compression fits it into the carry slots
@@ -639,16 +670,18 @@ class HeterogeneitySim:
         """Shared anchor math for flushes with no live contributors: the
         cluster's full live n_eff weight W anchors the convex combination,
         so discounted stale updates nudge — never replace — the model.
+        Staleness is the server-version lag (== round age in sync mode);
+        ``anchored_merge_weights`` carries the zero-total contract, so an
+        emptied cluster flushing deeply-stale (underflowed) entries gets a
+        zero delta rather than a NaN plane.
         Returns (anchor weight, normalized per-entry weights)."""
         fl = self.fl
         W = float(sum(fl.assignment.n_eff.get(pid, 1)
                       for pid in fl.assignment.members.get(lvl, [])))
-        us = aggregation.staleness_weights(
-            [b["n_eff"] for b in entries],
-            [r - b["round"] for b in entries],
-            fl.cfg.staleness_discount)
-        total = W + sum(us)
-        return W / total, [u / total for u in us]
+        us = aggregation.version_staleness_weights(
+            [b["n_eff"] for b in entries], [b["round"] for b in entries],
+            r, fl.cfg.staleness_discount)
+        return aggregation.anchored_merge_weights(W, us)
 
     def _anchored_merge(self, cur, entries: list, r: int, lvl: int):
         """Anchored flush over pytree params (legacy engine)."""
@@ -666,6 +699,514 @@ class HeterogeneitySim:
             wa * cur + aggregation.aggregate_plane(
                 jnp.stack([b["plane"] for b in entries]),
                 jnp.asarray(us, jnp.float32)))
+
+    # ------------------------------------------------------------ async
+    def _run_async(self, test) -> SimReport:
+        """Continuous-time asynchronous parameter server (ROADMAP item 3):
+        every cluster runs on its own clock.  A dispatch pulls the cluster's
+        current server state+version, runs its block eagerly, and registers
+        a completion on a deterministic (time, priority, seq) queue; popping
+        a completion COMMITS the block — a merge event: the server version
+        advances by the block length, ledger staleness re-prices in server
+        versions, the conservation invariant re-checks, and the cluster may
+        dispatch again subject to ``max_staleness`` (committed-round lead
+        over the slowest unfinished cluster; 0 degenerates to barrier
+        sweeps that reproduce the sync buffered path bit-for-bit).
+        Checkpoints and fault hooks re-anchor on merge events."""
+        fl, cfg, tr = self.fl, self.cfg, self.obs.tracer
+        plane = self._async_plane = fl.cfg.rounds_per_dispatch > 1
+        report = SimReport(scenario=self.trace.name,
+                           mar_policy=cfg.mar_policy, schedule=cfg.schedule,
+                           obs=self.obs if self.obs.on else None)
+        self.report = report
+        self._aclk = {lvl: ClusterClock() for lvl in range(fl.m)}
+        self._servers: dict[int, AsyncPlaneServer] = {}
+        self._pending_blocks: dict[int, dict] = {}
+        self._done_q = EventQueue()
+        self._row_buf: dict[int, dict] = {}
+        self._ev_buf: dict[int, list] = {}
+        self._emitted = 0
+        self._merge_step = 0
+        self._master_block = None
+        with tr.span("sim.run", cat="engine", mode="async",
+                     rounds=cfg.rounds):
+            with tr.span("init_params", cat="engine"):
+                if self._maybe_resume_async(report) is None:
+                    for lvl in range(fl.m):
+                        init = fl.family.init(
+                            jax.random.PRNGKey(fl.cfg.seed + lvl), lvl)
+                        state = fl.plane_of(lvl, init) if plane else init
+                        self._servers[lvl] = AsyncPlaneServer(
+                            lvl, state, ledger=self._bank[lvl])
+                tr.fence({l: s.state for l, s in self._servers.items()})
+            while True:
+                with tr.span("async_schedule", cat="engine",
+                             step=self._merge_step):
+                    self._async_schedule(report, test)
+                nxt = self._done_q.pop()
+                if nxt is None:
+                    break
+                t_done, ev = nxt
+                with tr.span("merge_event", cat="engine", level=ev.level,
+                             step=self._merge_step):
+                    self._async_commit(ev.level, t_done, report)
+                    self._async_emit_rows(report)
+                self._merge_step += 1
+                self._async_boundary(report)
+            if self._row_buf:
+                raise RuntimeError(
+                    "async round assembly incomplete: rounds "
+                    f"{sorted(self._row_buf)} missing cluster contributions")
+            states = {lvl: self._servers[lvl].state for lvl in range(fl.m)}
+            with tr.span("terminal_flush", cat="engine"):
+                self._terminal_flush(
+                    states, cfg.rounds, report,
+                    merge=self._anchored_merge_plane if plane else None)
+                for lvl in range(fl.m):
+                    self._servers[lvl].state = states[lvl]
+            with tr.span("final_eval", cat="engine"):
+                for lvl in range(fl.m):
+                    if not fl.assignment.members.get(lvl):
+                        continue
+                    last = (report.rows[-1].clusters[lvl].acc
+                            if report.rows else None)
+                    report.final_acc[lvl] = (
+                        last if last is not None
+                        else fl.evaluate(lvl, self._async_params(lvl), test))
+                self.params = {lvl: self._async_params(lvl)
+                               for lvl in range(fl.m)}
+            report.registry.gauge("async/wall_clock_s").set(
+                max((c.now for c in self._aclk.values()), default=0.0))
+        return report
+
+    def _async_params(self, lvl: int):
+        s = self._servers[lvl].state
+        return self.fl.params_of(lvl, s) if self._async_plane else s
+
+    def _async_schedule(self, report: SimReport, test) -> None:
+        """Dispatch every ready cluster.  Ready = unfinished, nothing in
+        flight, and within ``max_staleness`` committed rounds of the slowest
+        unfinished cluster (the frontier cluster is never stalled, so
+        progress is guaranteed).  ``max_staleness=0`` degenerates to barrier
+        sweeps: all clusters dispatch together at the shared round with a
+        shared block length — the sync buffered path's exact structure."""
+        fl, cfg = self.fl, self.cfg
+        unfinished = [l for l in range(fl.m)
+                      if self._servers[l].version < cfg.rounds]
+        if not unfinished:
+            return
+        frontier = min(self._servers[l].version for l in unfinished)
+        ready = [l for l in unfinished
+                 if l not in self._pending_blocks
+                 and (cfg.max_staleness is None
+                      or self._servers[l].version - frontier
+                      <= cfg.max_staleness)]
+        if not ready:
+            return
+        reg = report.registry
+        for lvl in ready:
+            reg.gauge(f"async/version_lag/{lvl}").set(
+                float(self._servers[lvl].version - frontier))
+        if cfg.max_staleness == 0:
+            if len(ready) < len(unfinished):
+                return                    # barrier: wait for in-flight
+            self._async_sweep(ready, report, test)
+        else:
+            for lvl in ready:
+                self._async_dispatch_one(lvl, report, test)
+
+    def _async_sweep(self, levels: list, report: SimReport, test) -> None:
+        """Barrier sweep (``max_staleness=0``): all clusters at the same
+        round, one global event pop and a shared block length — including
+        the anchored-flush L=1 force — exactly as ``_dispatch_block``."""
+        fl = self.fl
+        r = self._servers[levels[0]].version
+        ev_log = self._apply_events(r)
+        if ev_log:
+            self._ev_buf.setdefault(r, []).extend(ev_log)
+        L = self._block_len(r)
+        decisions = {}
+        for lvl in levels:
+            members = list(fl.assignment.members.get(lvl, []))
+            if not members:
+                continue
+            stats, masks, weights, t_cluster = self._mar_decisions(
+                lvl, members)
+            ripe = self._servers[lvl].ripe()
+            live = float(weights.sum()) > 0.0
+            if not live and (ripe or stats.banked):
+                L = 1
+            decisions[lvl] = (members, stats, masks, weights, t_cluster,
+                              ripe, live)
+        for lvl in levels:
+            self._async_exec(lvl, r, L, decisions.get(lvl), report, test)
+
+    def _async_dispatch_one(self, lvl: int, report: SimReport, test) -> None:
+        """Independent-clock dispatch: the cluster pops only its own
+        participants' due events, freezes MAR decisions, and runs its block
+        at its own round cursor with a per-cluster block length."""
+        fl = self.fl
+        r = self._servers[lvl].version
+        ev_log = self._apply_events_for(lvl, r)
+        if ev_log:
+            self._ev_buf.setdefault(r, []).extend(ev_log)
+        members = list(fl.assignment.members.get(lvl, []))
+        L = self._block_len(r)
+        dec = None
+        if members:
+            stats, masks, weights, t_cluster = self._mar_decisions(
+                lvl, members)
+            ripe = self._servers[lvl].ripe()
+            live = float(weights.sum()) > 0.0
+            if not live and (ripe or stats.banked):
+                L = 1
+            dec = (members, stats, masks, weights, t_cluster, ripe, live)
+        self._async_exec(lvl, r, L, dec, report, test)
+
+    def _async_exec(self, lvl: int, r: int, L: int, dec, report: SimReport,
+                    test) -> None:
+        """Eagerly run one cluster block [r, r+L): ripe-ledger flush, bank
+        carry, the fused dispatch (or legacy per-round program), per-round
+        row cloning and block-end eval — then register the pending commit
+        at the cluster's own completion time on the completion queue."""
+        fl, cfg, tr = self.fl, self.cfg, self.obs.tracer
+        server = self._servers[lvl]
+        buffered = fl.cfg.aggregation == "buffered"
+        kd = fl.m > 1 and fl.cfg.use_kd
+        mb_start = None
+        if lvl == 0 and kd:
+            # pre-flush, pre-block master state: the parallel-cadence KD
+            # teacher anchor (copied in plane mode — the dispatch donates
+            # its input buffer; legacy pytrees are rebuilt functionally)
+            mb_start = (jnp.copy(server.state) if self._async_plane
+                        else server.state)
+        new_state, losses, hist, t_cluster = None, None, None, 0.0
+        if dec is not None:
+            members, stats, masks, weights, t_cluster, ripe, live = dec
+            if live or stats.banked or ripe:
+                state = server.state
+                if ripe:
+                    h = report.registry.histogram("async/staleness")
+                    for b in ripe:
+                        h.observe(float(server.lag_of(b)))
+                    server.drop_ripe()
+                if self._async_plane:
+                    if ripe and not live:
+                        with tr.span("bank_flush", cat="engine", level=lvl,
+                                     entries=len(ripe)):
+                            state = self._anchored_merge_plane(
+                                state, ripe, r, lvl)
+                            tr.fence(state)
+                        new_state = state
+                    if live or stats.banked:
+                        bank = (self._bank_carry(lvl, members,
+                                                 ripe if live else [],
+                                                 stats.banked, r)
+                                if buffered else None)
+                        kw = {}
+                        if lvl == 0:
+                            kw["want_history"] = kd and L > 1
+                        elif kd:
+                            with tr.span("kd_teacher", cat="engine",
+                                         level=lvl):
+                                kw["teacher_planes"] = self._async_teacher(
+                                    r, L)
+                        with tr.span("dispatch", cat="engine", level=lvl,
+                                     round=r, block_len=L):
+                            # the input plane is donated; the server keeps
+                            # its committed state until the commit event,
+                            # so hand the program a copy
+                            out = fl.dispatch_rounds(
+                                lvl, members, jnp.copy(state), r, L,
+                                step_masks=masks, weights=weights,
+                                bank=bank, **kw)
+                            tr.fence(out.plane)
+                        new_state = out.plane
+                        if lvl == 0 and kw.get("want_history"):
+                            hist = out.history
+                        losses = np.asarray(out.losses)
+                        if stats.banked:
+                            bank_rows = out.bank[0]
+                            for pid in stats.banked:
+                                i = members.index(pid)
+                                server.ledger.append({
+                                    "pid": pid, "round": r + L - 1,
+                                    "n_eff": fl.assignment.n_eff.get(pid, 1),
+                                    "plane": bank_rows[i]})
+                else:
+                    teacher = (self._async_teacher_legacy(r)
+                               if kd and lvl > 0 else None)
+                    contribs = None
+                    if ripe and live:
+                        us = aggregation.version_staleness_weights(
+                            [b["n_eff"] for b in ripe],
+                            [b["round"] for b in ripe], r,
+                            fl.cfg.staleness_discount)
+                        contribs = [(b["params"], u)
+                                    for b, u in zip(ripe, us)]
+                    elif ripe:
+                        state = self._anchored_merge(state, ripe, r, lvl)
+                        new_state = state
+                    if live or stats.banked:
+                        with tr.span("cluster_round", cat="engine",
+                                     level=lvl, round=r):
+                            out = fl.cluster_round(
+                                lvl, members, state, r, teacher=teacher,
+                                step_masks=masks, weights=weights,
+                                buffered=contribs, return_stack=buffered)
+                            tr.fence(out[0])
+                        new_state = out[0]
+                        losses = np.asarray(out[1])[None]
+                        if stats.banked:
+                            stack = out[2]
+                            for pid in stats.banked:
+                                i = members.index(pid)
+                                server.ledger.append({
+                                    "pid": pid, "round": r,
+                                    "n_eff": fl.assignment.n_eff.get(pid, 1),
+                                    "params": jax.tree.map(
+                                        lambda x, i=i: x[i], stack)})
+        if lvl == 0 and kd:
+            self._master_block = MasterBlock(r, L, mb_start, hist)
+        if dec is None:
+            rows = [ClusterRoundStats(level=lvl, time=0.0)
+                    for _ in range(L)]
+        else:
+            contributing = weights > 0
+            rows = []
+            for j in range(L):
+                s = self._clone_stats(stats)
+                s.flushed = (len(ripe) if j == 0
+                             else len(stats.banked) if live else 0)
+                if losses is not None and contributing.any():
+                    s.mean_loss = float(np.mean(losses[j][contributing]))
+                rows.append(s)
+            if cfg.eval_every and (r + L) % cfg.eval_every == 0:
+                state_now = new_state if new_state is not None else \
+                    server.state
+                with tr.span("eval", cat="engine", level=lvl):
+                    rows[-1].acc = fl.evaluate(
+                        lvl,
+                        fl.params_of(lvl, state_now) if self._async_plane
+                        else state_now, test)
+        self.faults.mid_block(r, r + L)
+        clk = self._aclk[lvl]
+        self._pending_blocks[lvl] = {
+            "r0": r, "L": L, "rows": rows, "t_round": float(t_cluster),
+            "state": new_state,
+            "members_n": len(members) if dec is not None else 0}
+        self._done_q.push(clk.now + L * float(t_cluster),
+                          ClusterDone(-1, level=lvl))
+
+    def _async_teacher(self, r: int, L: int):
+        """Per-round KD teacher stack for a slave block in async mode:
+        round-aligned with the master's latest block → the exact
+        parallel-cadence stack the sync schedule uses; misaligned (clusters
+        drifted apart under unbounded staleness) → the master's latest
+        committed plane broadcast — a stale teacher, the KD analogue of a
+        stale gradient."""
+        mb = self._master_block
+        if mb is not None and mb.r0 == r and mb.length == L:
+            return self._teacher_planes(L, mb.start, mb.hist,
+                                        self._servers[0].state)
+        t = self._servers[0].state
+        return self.fl.place_plane_stack(
+            jnp.broadcast_to(t, (L,) + t.shape))
+
+    def _async_teacher_legacy(self, r: int):
+        """Legacy-path teacher params: the master's pre-round state when
+        round-aligned, else its latest committed state (stale teacher)."""
+        mb = self._master_block
+        if mb is not None and mb.r0 == r:
+            return mb.start
+        return self._servers[0].state
+
+    def _async_commit(self, lvl: int, t_done: float,
+                      report: SimReport) -> None:
+        """Merge event: install the block's state at the server, advance
+        version and cluster clock, verify conservation, and file the
+        per-round rows into the global-round assembly buffer."""
+        p = self._pending_blocks.pop(lvl)
+        server = self._servers[lvl]
+        server.commit(p["state"] if p["state"] is not None else server.state,
+                      p["L"])
+        clk = self._aclk[lvl]
+        for j, s in enumerate(p["rows"]):
+            self._check_conservation(s, p["members_n"], p["r0"] + j)
+            self._row_buf.setdefault(p["r0"] + j, {})[lvl] = (
+                s, clk.now + j * p["t_round"], p["t_round"])
+        clk.advance(p["L"] * p["t_round"], rounds=p["L"])
+        self.clock.now = max(self.clock.now, float(t_done))
+        report.registry.counter("async/merges").inc()
+
+    @staticmethod
+    def _check_conservation(s: ClusterRoundStats, n: int, r: int) -> None:
+        """Per-merge-event conservation invariant: every member at dispatch
+        time lands in exactly one bucket (masked ⊂ active)."""
+        got = (len(s.active) + len(s.dropped) + len(s.offline)
+               + len(s.unselected) + len(s.banked))
+        if got != n:
+            raise RuntimeError(
+                f"conservation violated at round {r} level {s.level}: "
+                f"{got} bucketed of {n} members")
+
+    def _async_emit_rows(self, report: SimReport) -> None:
+        """Emit assembled ``RoundRecord``s in global round order once every
+        cluster has contributed its row for that round.  t_start is the
+        earliest per-cluster round start, duration the slowest cluster's
+        per-round time — for a single cluster both collapse to the sync
+        engine's values."""
+        fl, cfg = self.fl, self.cfg
+        while self._emitted < cfg.rounds:
+            per = self._row_buf.get(self._emitted)
+            if per is None or len(per) < fl.m:
+                return
+            del self._row_buf[self._emitted]
+            t_start = min(t for _, t, _ in per.values())
+            duration = max(d for _, _, d in per.values())
+            report.add(RoundRecord(
+                round=self._emitted, t_start=t_start, duration=duration,
+                clusters=[per[lvl][0] for lvl in range(fl.m)],
+                events=self._ev_buf.pop(self._emitted, [])))
+            self._emitted += 1
+
+    def _async_boundary(self, report: SimReport) -> None:
+        """After each merge event: retain/write a checkpoint (step = the
+        monotonic merge-event counter — async has no global round), then
+        fire the boundary fault hook (``kill_at_round=k`` kills at the k-th
+        merge event in async mode)."""
+        step = self._merge_step
+        if self.checkpoint is not None:
+            meta, arrays = self._capture_state_async(report)
+            self._pending_state = (step, meta, arrays)
+            if self.checkpoint.due(step):
+                self.checkpoint.save(step, self.KIND, meta, arrays)
+        self.faults.round_boundary(step)
+
+    def _capture_state_async(self, report: SimReport) -> tuple[dict, dict]:
+        """Async snapshot = the sync capture at the frontier round (committed
+        server states, ledger, participant/trace state, rows, metrics) plus
+        the async section: per-cluster clocks, server version/merge
+        counters, the completion queue, pending (in-flight) block outputs
+        and the partial round-assembly buffers."""
+        fl = self.fl
+        plane = self._async_plane
+        unfinished = [l for l in range(fl.m)
+                      if self._servers[l].version < self.cfg.rounds]
+        frontier = (min(self._servers[l].version for l in unfinished)
+                    if unfinished else self.cfg.rounds)
+        states = {lvl: self._servers[lvl].state for lvl in range(fl.m)}
+        meta, arrays = self._capture_state(frontier, states, report, plane)
+        meta["mode"] = "async"
+        a = {
+            "step": int(self._merge_step),
+            "emitted": int(self._emitted),
+            "plane_mode": bool(plane),
+            "clocks": [[int(lvl), float(c.now), int(c.round)]
+                       for lvl, c in sorted(self._aclk.items())],
+            "servers": [[int(lvl), int(s.version), int(s.merges)]
+                        for lvl, s in sorted(self._servers.items())],
+            "done_q": self._done_q.encode(),
+            "ev_buf": [[int(r), [str(e) for e in evs]]
+                       for r, evs in sorted(self._ev_buf.items())],
+            "row_buf": [[int(r),
+                         [[int(lvl), encode_stats(s), float(t), float(d)]
+                          for lvl, (s, t, d) in sorted(per.items())]]
+                        for r, per in sorted(self._row_buf.items())],
+            "pending": {str(lvl): {
+                "r0": int(p["r0"]), "L": int(p["L"]),
+                "t_round": float(p["t_round"]),
+                "members_n": int(p["members_n"]),
+                "has_state": p["state"] is not None,
+                "rows": [encode_stats(s) for s in p["rows"]],
+            } for lvl, p in sorted(self._pending_blocks.items())},
+            "master_block": None,
+        }
+        for lvl, p in self._pending_blocks.items():
+            if p["state"] is not None:
+                row = p["state"] if plane else fl.plane_of(lvl, p["state"])
+                arrays[f"async/pending/{lvl}/state"] = np.asarray(
+                    row, np.float32)
+        mb = self._master_block
+        if mb is not None:
+            a["master_block"] = {"r0": int(mb.r0), "L": int(mb.length),
+                                 "has_hist": mb.hist is not None}
+            row = mb.start if plane else fl.plane_of(0, mb.start)
+            arrays["async/mb/start"] = np.asarray(row, np.float32)
+            if mb.hist is not None:
+                arrays["async/mb/hist"] = np.asarray(mb.hist, np.float32)
+        meta["async"] = a
+        return meta, arrays
+
+    def _maybe_resume_async(self, report: SimReport):
+        """Restore the full async state (servers, clocks, pending blocks,
+        completion queue, assembly buffers) from the newest valid
+        checkpoint; returns None to start fresh."""
+        ck = self.checkpoint
+        if ck is None or not ck.resume:
+            return None
+        got = ck.load_latest(self.KIND)
+        if got is None:
+            log.warning("resume requested but no valid checkpoint under "
+                        "%s; starting from scratch", ck.manager.dir)
+            return None
+        step, meta, arrays = got
+        return self._load_state_async(meta, arrays, report)
+
+    def _load_state_async(self, meta: dict, arrays: dict,
+                          report: SimReport) -> bool:
+        fl = self.fl
+        plane = self._async_plane
+        a = meta.get("async")
+        if a is not None and bool(a["plane_mode"]) != plane:
+            raise CheckpointError(
+                "async checkpoint was written with rounds_per_dispatch "
+                f"{'> 1' if a['plane_mode'] else '== 1'}; the engine's "
+                "pending-block representation does not translate")
+        _, states = self._load_state(meta, arrays, report, plane,
+                                     async_mode=True)
+        for lvl in range(fl.m):
+            self._servers[lvl] = AsyncPlaneServer(lvl, states[lvl],
+                                                  ledger=self._bank[lvl])
+        for lvl, ver, merges in a["servers"]:
+            self._servers[int(lvl)].version = int(ver)
+            self._servers[int(lvl)].merges = int(merges)
+        self._aclk = {int(lvl): ClusterClock(float(now), int(rd))
+                      for lvl, now, rd in a["clocks"]}
+        self._done_q.load_encoded(a["done_q"])
+        self._merge_step = int(a["step"])
+        self._emitted = int(a["emitted"])
+        self._ev_buf = {int(r): [str(e) for e in evs]
+                        for r, evs in a["ev_buf"]}
+        self._row_buf = {
+            int(r): {int(lvl): (decode_stats(s), float(t), float(d))
+                     for lvl, s, t, d in per}
+            for r, per in a["row_buf"]}
+        self._pending_blocks = {}
+        for l_str, p in a["pending"].items():
+            lvl = int(l_str)
+            state = None
+            if p["has_state"]:
+                row = jnp.asarray(arrays[f"async/pending/{lvl}/state"])
+                state = (fl.place_plane(row) if plane
+                         else fl.params_of(lvl, row))
+            self._pending_blocks[lvl] = {
+                "r0": int(p["r0"]), "L": int(p["L"]),
+                "t_round": float(p["t_round"]),
+                "members_n": int(p["members_n"]), "state": state,
+                "rows": [decode_stats(s) for s in p["rows"]]}
+        mb = a.get("master_block")
+        self._master_block = None
+        if mb is not None:
+            row = jnp.asarray(arrays["async/mb/start"])
+            start = row if plane else fl.params_of(0, row)
+            hist = (jnp.asarray(arrays["async/mb/hist"])
+                    if mb["has_hist"] else None)
+            self._master_block = MasterBlock(int(mb["r0"]), int(mb["L"]),
+                                             start, hist)
+        log.info("resumed async run at merge step %d from %s",
+                 self._merge_step, self.checkpoint.manager.dir)
+        return True
 
     # ------------------------------------------------------------ checkpoint
     def _round_boundary(self, r: int, params: dict, report: SimReport,
@@ -698,7 +1239,6 @@ class HeterogeneitySim:
         a checkpoint is mode-agnostic: a legacy run can resume a dispatch
         checkpoint and vice versa."""
         fl = self.fl
-        q_entries, q_seq = self.queue.state()
         asg = fl.assignment
         reg_meta, reg_arrays = report.registry.state()
         meta = {
@@ -716,9 +1256,7 @@ class HeterogeneitySim:
             "spike_seq": int(self._spike_seq),
             "rejoin_token": [[int(p), int(t)]
                              for p, t in sorted(self._rejoin_token.items())],
-            "queue": {"seq": int(q_seq),
-                      "entries": [[float(t), int(s), encode_event(ev)]
-                                  for t, s, ev in q_entries]},
+            "queue": self.queue.encode(),
             "assignment": {
                 "members": {str(l): [int(p) for p in v]
                             for l, v in asg.members.items()},
@@ -772,12 +1310,21 @@ class HeterogeneitySim:
         return self._load_state(meta, arrays, report, plane_mode)
 
     def _load_state(self, meta: dict, arrays: dict, report: SimReport,
-                    plane_mode: bool):
+                    plane_mode: bool, async_mode: bool = False):
         """Overlay a captured run state onto this (freshly constructed)
         engine.  The engine/FedRAC must have been built from the same seed
         and config — everything ``setup()`` derives deterministically
         (data, clustering, specs) is rebuilt, only the mutated state is
         restored.  Returns (r0, params-or-planes)."""
+        if bool(meta.get("async")) != bool(async_mode):
+            # sync engines cannot honour pending async blocks (they would be
+            # silently dropped) and async engines cannot synthesize
+            # per-cluster clocks from a global round cursor
+            raise CheckpointError(
+                "checkpoint mode mismatch: {}-mode checkpoint cannot "
+                "resume a {}-mode run".format(
+                    "async" if meta.get("async") else "sync",
+                    "async" if async_mode else "sync"))
         fl = self.fl
         r0 = int(meta["round"])
         samp = meta["sampler"]
@@ -821,9 +1368,7 @@ class HeterogeneitySim:
                         for p, f, tok in meta["spikes"]}
         self._spike_seq = int(meta["spike_seq"])
         self._rejoin_token = {int(p): int(t) for p, t in meta["rejoin_token"]}
-        q = meta["queue"]
-        self.queue.load_state(
-            [(t, s, decode_event(e)) for t, s, e in q["entries"]], q["seq"])
+        self.queue.load_encoded(meta["queue"])
         self.clock.now = float(meta["clock"])
         self._bank = {lvl: [] for lvl in range(fl.m)}
         for l_str, entries in meta["bank"].items():

@@ -55,10 +55,29 @@ class SpikeEnd(Event):
     token: int = 0
 
 
+@dataclass(frozen=True)
+class ClusterDone(Event):
+    """Internal async-server event: cluster ``level``'s in-flight dispatch
+    block completes and its delta is ready to merge.  Lives on the
+    *completion* queue (timestamps in simulated seconds, not round units);
+    ``pid`` is unused and pinned to -1."""
+    level: int = 0
+
+
 # name -> class registry for checkpoint (de)serialization of pending events
 EVENT_TYPES = {cls.__name__: cls
                for cls in (Arrival, Departure, ResourceDrift,
-                           StragglerSpike, SpikeEnd)}
+                           StragglerSpike, SpikeEnd, ClusterDone)}
+
+
+def event_priority(ev: Event) -> int:
+    """Fixed per-type heap tie-break: at equal timestamps an ``Arrival``
+    must be visible before any other event (a rejoin landing at the same
+    instant as a drift/departure would otherwise be masked); every other
+    type keeps FIFO order via the sequence number.  This makes merge order
+    in the async server seed-stable across platforms rather than an
+    artifact of insertion order."""
+    return 0 if isinstance(ev, Arrival) else 1
 
 
 def encode_event(ev: Event) -> list:

@@ -68,6 +68,11 @@ class FleetSimConfig:
     min_speed: float = 0.05           # drift floors, as in SimConfig
     min_rate: float = 0.1
     min_mem: float = 0.25
+    mode: str = "sync"                # sync (global barrier) | async
+    #   async: clusters advance on independent cumulative clocks; a round's
+    #   wall-clock charge is the increment of the SLOWEST cumulative clock,
+    #   so total wall-clock = max_l Σ_r t[l,r] ≤ the barrier's Σ_r max_l —
+    #   the no-global-straggler-bound accounting of the async server
 
 
 @dataclass
@@ -154,6 +159,10 @@ class FleetSim:
             raise ValueError(f"unknown select {cfg.select!r}")
         if cfg.schedule not in ("parallel", "sequential"):
             raise ValueError(f"unknown schedule {cfg.schedule!r}")
+        if cfg.mode not in ("sync", "async"):
+            raise ValueError(f"unknown mode {cfg.mode!r}")
+        if cfg.mode == "async" and cfg.schedule == "sequential":
+            raise ValueError('mode "async" requires schedule "parallel"')
         self.fleet, self.trace, self.cfg = fleet, trace, cfg
         n = len(fleet)
 
@@ -212,6 +221,8 @@ class FleetSim:
         self.rejoin_round = np.full(n, np.inf)
         self.spike_end = np.full(n, -np.inf)
         self._banked_prev = np.zeros(self.m, np.int64)
+        # async mode: per-cluster cumulative clocks (simulated seconds)
+        self.cluster_time = np.zeros(self.m)
 
         self._tabs = {"dropouts": _sorted_table(trace.dropouts),
                       "drifts": _sorted_table(trace.drifts),
@@ -357,12 +368,33 @@ class FleetSim:
         ct = np.zeros(m)
         contributing = contrib_t > 0
         np.maximum.at(ct, lv[contributing], contrib_t[contributing])
-        duration = (float(ct.max(initial=0.0)) if cfg.schedule == "parallel"
-                    else float(ct.sum()))
+        if cfg.mode == "async":
+            # independent cluster clocks: each cluster accumulates its OWN
+            # round time; the round's wall-clock charge is the increment of
+            # the slowest cumulative clock, so Σ durations telescopes to
+            # max_l Σ_r t[l,r] — no global straggler bound
+            prev = float(self.cluster_time.max(initial=0.0))
+            self.cluster_time += ct
+            duration = float(self.cluster_time.max(initial=0.0)) - prev
+        else:
+            duration = (float(ct.max(initial=0.0))
+                        if cfg.schedule == "parallel" else float(ct.sum()))
 
         cnt = lambda mask: np.bincount(lv[mask], minlength=m)
         n_active, n_masked = cnt(active), cnt(is_masked)
         n_dropped, n_banked = cnt(dropped), cnt(banked)
+        if cfg.mode == "async":
+            # conservation re-derived per merge event: every participant in
+            # exactly one bucket of its cluster's merge
+            buckets = (n_active + n_masked + n_dropped + n_banked
+                       + cnt(offline) + cnt(unselected & online)
+                       + cnt(sel & (weights <= 0) & ~is_masked & ~dropped
+                             & ~banked))
+            n_lv = np.bincount(lv, minlength=m)
+            if not np.array_equal(buckets, n_lv):
+                raise RuntimeError(
+                    f"conservation violated at round {r}: per-level buckets "
+                    f"{buckets.tolist()} != membership {n_lv.tolist()}")
         rec = FleetRoundRecord(
             round=r, duration=duration, time=ct,
             active=n_active, masked=n_masked, dropped=n_dropped,
@@ -431,6 +463,7 @@ class FleetSim:
             "rejoin_round": self.rejoin_round.copy(),
             "spike_end": self.spike_end.copy(),
             "banked_prev": self._banked_prev.copy(),
+            "cluster_time": self.cluster_time.copy(),
             "cur": np.array([self._cur[k] for k in sorted(self._tabs)],
                             np.int64),
         }
@@ -464,6 +497,8 @@ class FleetSim:
         self.rejoin_round[:] = arrays["rejoin_round"]
         self.spike_end[:] = arrays["spike_end"]
         self._banked_prev = arrays["banked_prev"].astype(np.int64).copy()
+        if "cluster_time" in arrays:     # absent in pre-async checkpoints
+            self.cluster_time[:] = arrays["cluster_time"]
         for k, v in zip(sorted(self._tabs), arrays["cur"]):
             self._cur[k] = int(v)
         report.rows = [

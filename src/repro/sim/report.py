@@ -56,24 +56,45 @@ class ClusterRoundStats:
         return set(self.active) | set(self.masked)
 
 
+def encode_stats(c: "ClusterRoundStats") -> dict:
+    """JSON-safe form of one ``ClusterRoundStats``.  ``masked`` is flattened
+    to ``[pid, granted]`` pairs — JSON object keys are strings, so a plain
+    ``asdict`` would silently stringify the pids."""
+    return {
+        "level": c.level, "time": c.time,
+        "active": list(c.active), "dropped": list(c.dropped),
+        "offline": list(c.offline),
+        "masked": [[int(p), int(g)] for p, g in c.masked.items()],
+        "violations": list(c.violations), "banked": list(c.banked),
+        "unselected": list(c.unselected), "flushed": c.flushed,
+        "bytes": c.bytes, "mean_loss": c.mean_loss, "acc": c.acc,
+    }
+
+
+def decode_stats(c: dict) -> "ClusterRoundStats":
+    """Inverse of ``encode_stats``."""
+    return ClusterRoundStats(
+        level=int(c["level"]), time=float(c["time"]),
+        active=[int(p) for p in c["active"]],
+        dropped=[int(p) for p in c["dropped"]],
+        offline=[int(p) for p in c["offline"]],
+        masked={int(p): int(g) for p, g in c["masked"]},
+        violations=[int(p) for p in c["violations"]],
+        banked=[int(p) for p in c["banked"]],
+        unselected=[int(p) for p in c["unselected"]],
+        flushed=int(c["flushed"]), bytes=float(c["bytes"]),
+        mean_loss=float(c["mean_loss"]),
+        acc=None if c["acc"] is None else float(c["acc"]))
+
+
 def encode_rows(rows: list) -> list:
-    """JSON-safe form of ``[RoundRecord]`` for run-state checkpoints.
-    ``masked`` is flattened to ``[pid, granted]`` pairs — JSON object keys
-    are strings, so a plain ``asdict`` would silently stringify the pids."""
+    """JSON-safe form of ``[RoundRecord]`` for run-state checkpoints."""
     out = []
     for r in rows:
         out.append({
             "round": r.round, "t_start": r.t_start, "duration": r.duration,
             "events": list(r.events),
-            "clusters": [{
-                "level": c.level, "time": c.time,
-                "active": list(c.active), "dropped": list(c.dropped),
-                "offline": list(c.offline),
-                "masked": [[int(p), int(g)] for p, g in c.masked.items()],
-                "violations": list(c.violations), "banked": list(c.banked),
-                "unselected": list(c.unselected), "flushed": c.flushed,
-                "bytes": c.bytes, "mean_loss": c.mean_loss, "acc": c.acc,
-            } for c in r.clusters],
+            "clusters": [encode_stats(c) for c in r.clusters],
         })
     return out
 
@@ -82,23 +103,11 @@ def decode_rows(data: list) -> list:
     """Inverse of ``encode_rows``."""
     rows = []
     for r in data:
-        clusters = [ClusterRoundStats(
-            level=int(c["level"]), time=float(c["time"]),
-            active=[int(p) for p in c["active"]],
-            dropped=[int(p) for p in c["dropped"]],
-            offline=[int(p) for p in c["offline"]],
-            masked={int(p): int(g) for p, g in c["masked"]},
-            violations=[int(p) for p in c["violations"]],
-            banked=[int(p) for p in c["banked"]],
-            unselected=[int(p) for p in c["unselected"]],
-            flushed=int(c["flushed"]), bytes=float(c["bytes"]),
-            mean_loss=float(c["mean_loss"]),
-            acc=None if c["acc"] is None else float(c["acc"]),
-        ) for c in r["clusters"]]
         rows.append(RoundRecord(round=int(r["round"]),
                                 t_start=float(r["t_start"]),
                                 duration=float(r["duration"]),
-                                clusters=clusters,
+                                clusters=[decode_stats(c)
+                                          for c in r["clusters"]],
                                 events=[str(e) for e in r["events"]]))
     return rows
 

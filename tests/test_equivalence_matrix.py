@@ -285,21 +285,29 @@ def test_matrix_kd_sim_eightway(mesh_shape):
 
 
 # ------------------------------------------------------------ buffered async
-def _run_buffered_sim(mesh_shape, R, rounds=5, seed=0):
+def _run_buffered_sim(mesh_shape, R, rounds=5, seed=0, mode="sync",
+                      max_staleness=0, compact_to=1):
     """Buffered schedule under a straggling cluster (the slower half misses
     the deadline every round → banks, flushes next round).  Returns
     (final params, structural telemetry, per-round mean losses).  The
-    stream bridge makes the comparison numeric, not just structural."""
+    stream bridge makes the comparison numeric, not just structural.
+    ``mode="async"`` runs the continuous-time async server instead; with
+    ``max_staleness=0`` (synchronized arrivals) it must reproduce the
+    buffered path bit-for-bit."""
     from repro.core import cost_model
-    eng, testb = _build(mesh_shape=mesh_shape, seed=seed, compact_to=1,
+    eng, testb = _build(mesh_shape=mesh_shape, seed=seed,
+                        compact_to=compact_to,
                         aggregation="buffered", rounds_per_dispatch=R)
     spec = eng.specs[0]
     t = sorted(cost_model.round_time(
         p, spec.flops_per_sample, spec.model_bytes, spec.E,
         eng.assignment.n_eff.get(p.pid, p.n_data)) for p in eng.parts)
     spec.mar = 0.5 * (t[len(t) // 2 - 1] + t[len(t) // 2])
+    kw = ({"mode": "async", "max_staleness": max_staleness}
+          if mode == "async" else {})
     sim = HeterogeneitySim(eng, make_trace("stable", len(eng.parts), rounds),
-                           SimConfig(rounds=rounds, mar_policy="buffer"))
+                           SimConfig(rounds=rounds, mar_policy="buffer",
+                                     **kw))
     rep = sim.run(testb)
     tel = [(r.round, [(c.level, sorted(c.active), sorted(c.banked),
                        c.flushed) for c in r.clusters]) for r in rep.rows]
@@ -347,6 +355,58 @@ def test_matrix_buffered_eightway(mesh_shape):
                           f"buffered/{mesh_shape}-r8")
 
 
+# ------------------------------------------------- async ≡ sync-arrivals
+# The async-server anchor: ``mode="async"`` with ``max_staleness=0``
+# (synchronized arrivals — every cluster merges at the shared barrier)
+# must reproduce the buffered path BIT-exactly (np.array_equal, not the
+# matrix rtol): same final params, same bank/flush telemetry, same
+# per-round mean losses.  Version-based staleness discounts degenerate to
+# the buffered round-age discounts round for round, so any drift here is
+# an async-scheduler bug, not numerics.
+def _assert_async_cell(golden, got, tag):
+    gp, gtel, gl = golden
+    p, tel, l = got
+    assert tel == gtel, f"telemetry[{tag}]"
+    assert np.array_equal(gl, l, equal_nan=True), f"mean_losses[{tag}]"
+    for lvl in gp:
+        for x, y in zip(jax.tree.leaves(gp[lvl]), jax.tree.leaves(p[lvl])):
+            assert np.array_equal(np.asarray(x), np.asarray(y)), \
+                f"params[{tag}] L{lvl} not bit-equal"
+
+
+@pytest.mark.parametrize("R", [1, 8])
+def test_matrix_async_sync_arrivals_fast(R):
+    """Async column, always-on subset: legacy per-round jit (R=1, against
+    the cached buffered golden) and fused dispatch (R=8) — synchronized
+    arrivals reproduce the buffered engine bit-for-bit."""
+    golden = (_buffered_golden() if R == 1
+              else _run_buffered_sim(None, R))
+    got = _run_buffered_sim(None, R, mode="async", max_staleness=0)
+    _assert_async_cell(golden, got, f"async/sync-arrivals-r{R}")
+
+
+def test_matrix_async_kd_barrier():
+    """Async column with a real slave cluster (compact_to=2): the KD
+    teacher rides ``MasterBlock`` — at synchronized arrivals the slave
+    block aligns with the master's dispatch and gets the exact per-round
+    teacher stack, so the whole two-cluster run stays bit-exact."""
+    golden = _run_buffered_sim(None, 8, rounds=6, compact_to=2)
+    got = _run_buffered_sim(None, 8, rounds=6, compact_to=2,
+                            mode="async", max_staleness=0)
+    _assert_async_cell(golden, got, "async/kd-barrier-r8")
+
+
+@eightway
+def test_matrix_async_eightway():
+    """Async column at 8 devices: the 4x2 (data × model) mesh cell — the
+    async scheduler drives the same column-sharded dispatch programs and
+    synchronized arrivals still match the buffered run bit-exactly."""
+    _assert_async_cell(_run_buffered_sim("4x2", 8),
+                       _run_buffered_sim("4x2", 8, mode="async",
+                                         max_staleness=0),
+                       "async/4x2-r8")
+
+
 # ------------------------------------------------------------ resume column
 # kill/resume ≡ uninterrupted, at BIT-exactness (np.array_equal, not the
 # rtol used across execution paths): every cell crashes at round boundary 3
@@ -356,8 +416,12 @@ def test_matrix_buffered_eightway(mesh_shape):
 SIM_ROUNDS = 5
 
 
-def _resume_cell_builder(mesh_shape=None, R=8, buffered=False):
+def _resume_cell_builder(mesh_shape=None, R=8, buffered=False, mode="sync",
+                         max_staleness=None):
     """() -> (engine, test batch, SimConfig, trace) for one resume cell."""
+    kw = ({"mode": "async", "max_staleness": max_staleness}
+          if mode == "async" else {})
+
     def build():
         if buffered:
             from repro.core import cost_model
@@ -369,11 +433,11 @@ def _resume_cell_builder(mesh_shape=None, R=8, buffered=False):
                 eng.assignment.n_eff.get(p.pid, p.n_data))
                 for p in eng.parts)
             spec.mar = 0.5 * (t[len(t) // 2 - 1] + t[len(t) // 2])
-            simcfg = SimConfig(rounds=SIM_ROUNDS, mar_policy="buffer")
+            simcfg = SimConfig(rounds=SIM_ROUNDS, mar_policy="buffer", **kw)
             trace = make_trace("stable", 8, SIM_ROUNDS, seed=5)
         else:
             eng, testb = _build(mesh_shape=mesh_shape, rounds_per_dispatch=R)
-            simcfg = SimConfig(rounds=SIM_ROUNDS, mar_policy="mask")
+            simcfg = SimConfig(rounds=SIM_ROUNDS, mar_policy="mask", **kw)
             trace = make_trace("mixed", 8, SIM_ROUNDS, seed=5)
         return eng, testb, simcfg, trace
     return build
@@ -417,6 +481,13 @@ RESUME_CELLS = {
     "legacy": lambda: _resume_cell_builder(R=1),
     "disp-r8": lambda: _resume_cell_builder(R=8),
     "buffered": lambda: _resume_cell_builder(buffered=True),
+    # async cell: two clusters on independent clocks, unbounded staleness,
+    # mixed arrival/departure trace; ``kill=3`` counts MERGE EVENTS (the
+    # async checkpoint cadence), and the resumed run — per-cluster clocks,
+    # server versions, in-flight ledger and pending blocks all off the
+    # checkpoint — must match its own uninterrupted control bit-exactly
+    "async": lambda: _resume_cell_builder(R=1, mode="async",
+                                          max_staleness=None),
 }
 
 
@@ -486,4 +557,4 @@ def test_matrix_under_forced_host_devices():
          os.path.abspath(__file__), "-k", "eightway or model_axis"],
         capture_output=True, text=True, timeout=560, env=env, cwd=REPO)
     assert r.returncode == 0, r.stdout + "\n" + r.stderr[-3000:]
-    assert "14 passed" in r.stdout, r.stdout
+    assert "15 passed" in r.stdout, r.stdout

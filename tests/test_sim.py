@@ -41,8 +41,9 @@ def test_event_queue_fifo_tie_break():
     q.push(1.0, StragglerSpike(2))
     q.push(1.0, Arrival(3))
     assert [e for _, e in q.pop_due(0.5)] == [Arrival(1)]
-    # equal timestamps pop in insertion order
-    assert [e.pid for _, e in q.pop_due(1.0)] == [0, 2, 3]
+    # equal timestamps pop Arrivals first (priority 0), then the other
+    # classes in insertion order — the total (time, priority, seq) key
+    assert [e.pid for _, e in q.pop_due(1.0)] == [3, 0, 2]
     assert len(q) == 0
 
 

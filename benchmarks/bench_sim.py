@@ -165,13 +165,16 @@ class TokenShardFedRAC(srv.FedRAC):
 
 def build_micro_lm(n_members: int, steps: int, seed: int, R: int,
                    batch: int = 4, d_model: int = 16, seq: int = 9,
-                   vocab: int = 16):
+                   vocab: int = 16, n_heads: int = 1, n_layers: int = 1,
+                   mesh=None, **cfg_kw):
     """Dispatch-bound cluster: a micro LM whose per-round XLA program runs in
-    a few ms, so per-round host overhead dominates the legacy path."""
-    base = ModelConfig(name="micro-lm", family="dense", n_layers=1,
-                       d_model=d_model, n_heads=1, n_kv_heads=1,
-                       head_dim=d_model, d_ff=2 * d_model, vocab_size=vocab,
-                       rope_theta=1e4)
+    a few ms, so per-round host overhead dominates the legacy path.  The TP
+    bench widens it (``n_heads``/``d_model`` divisible by the model axis)
+    and puts it on a 2D ``mesh``."""
+    base = ModelConfig(name="micro-lm", family="dense", n_layers=n_layers,
+                       d_model=d_model, n_heads=n_heads, n_kv_heads=n_heads,
+                       head_dim=d_model // n_heads, d_ff=2 * d_model,
+                       vocab_size=vocab, rope_theta=1e4)
     fam = lm_family(base, alpha=0.5)
     corpus = make_lm_corpus(vocab, 4000, seed=seed)
     parts = participants_from_matrix(sample_profiles(n_members, seed=seed),
@@ -182,8 +185,9 @@ def build_micro_lm(n_members: int, steps: int, seed: int, R: int,
     cfg = srv.FLConfig(steps_per_round=steps, lr=0.1, seed=seed,
                        compact_to=1, mar=1e9, class_balanced=False,
                        pad_clusters=False, local_batch=batch,
-                       rounds_per_dispatch=R)
-    return TokenShardFedRAC(parts, cd, fam, cfg, classes=vocab).setup()
+                       rounds_per_dispatch=R, **cfg_kw)
+    return TokenShardFedRAC(parts, cd, fam, cfg, classes=vocab,
+                            mesh=mesh).setup()
 
 
 def build_micro_mlp(n_members: int, steps: int, seed: int, R: int,
@@ -354,6 +358,97 @@ def run_mesh_bench_subprocess(n: int = 24, R: int = 8, reps: int = 3,
             raise RuntimeError(
                 f"mesh bench subprocess failed:\n{r.stderr[-2000:]}")
         return json.loads(out.read_text())["mesh"]
+    finally:
+        out.unlink(missing_ok=True)
+
+
+# ------------------------------------------------------------ tp bench
+def run_tp_bench(n: int = 8, R: int = 8, reps: int = 3, seed: int = 0,
+                 mesh_shape: str = "2x4", rounds: int = 24,
+                 steps: int = 2) -> dict:
+    """GSPMD tensor-parallel member forward vs the legacy gather path on a
+    2D (data × model) mesh, over a TP-able micro LM (heads/d_ff/vocab all
+    divide the model axis).  Three rows: the unsharded fused dispatch
+    (1 device), the legacy ``tp_forward=False`` path (plane columns sharded
+    at rest, but each round all-gathers the full plane and replicates the
+    forward), and the TP path (member forward partitioned over ``model`` —
+    per-layer activation collectives only).  On this container's virtual
+    CPU devices TP buys no wall-clock (same cores, more collectives); the
+    headline is the memory column: per-device parameter bytes for the
+    forward drop from the full plane to plane/model_size.  Requires
+    ≥ prod(mesh_shape) devices — run via ``--mode tp`` (subprocess sets
+    XLA_FLAGS)."""
+    from repro.launch.mesh import make_sim_mesh, parse_sim_mesh_shape
+    shape = parse_sim_mesh_shape(mesh_shape)
+    n_dev = int(np.prod(shape))
+    if jax.device_count() < n_dev:
+        raise RuntimeError(
+            f"tp bench needs ≥{n_dev} devices (have {jax.device_count()});"
+            " use --mode tp, which re-executes under XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={n_dev}")
+
+    def build(mesh=None, tp=True):
+        return build_micro_lm(n, steps, seed, R, d_model=32, n_heads=4,
+                              vocab=64, seq=17, mesh=mesh, tp_forward=tp)
+
+    engs = {"fused_r8": build(),
+            "gather_r8": build(make_sim_mesh(shape), tp=False),
+            "tp_r8": build(make_sim_mesh(shape), tp=True)}
+    assert engs["tp_r8"]._tp and not engs["gather_r8"]._tp
+    members = {k: list(e.assignment.members[0]) for k, e in engs.items()}
+    for k, e in engs.items():                        # compile all paths
+        e._train_cluster(0, members[k], max(R, 2), None, record_every=10**9)
+    sps = {k: [] for k in engs}
+    for _ in range(reps):                            # interleaved medians
+        for k, e in engs.items():
+            with Timer() as t:
+                p, _ = e._train_cluster(0, members[k], rounds, None,
+                                        record_every=10**9)
+                jax.block_until_ready(jax.tree.leaves(p))
+            sps[k].append(n * steps * rounds / t.dt)
+    med = {k: statistics.median(v) for k, v in sps.items()}
+    msize = shape[1]
+    tp_spec = engs["tp_r8"].plane_spec(0)
+    legacy_bytes = engs["gather_r8"].plane_spec(0).d_pad * 4
+    return {"members": n, "rounds": rounds, "R": R, "steps": steps,
+            "devices": n_dev, "mesh_shape": "x".join(map(str, shape)),
+            "fused_steps_per_s": round(med["fused_r8"], 1),
+            "gather_steps_per_s": round(med["gather_r8"], 1),
+            "tp_steps_per_s": round(med["tp_r8"], 1),
+            "tp_vs_gather": round(med["tp_r8"] / med["gather_r8"], 3),
+            # forward-path parameter bytes per device: the gather path
+            # re-materializes the full plane, TP touches only its column
+            "fwd_bytes_per_device": tp_spec.d_pad // tp_spec.msize * 4,
+            "fwd_bytes_legacy": legacy_bytes,
+            "fwd_bytes_ratio": round(
+                (tp_spec.d_pad // tp_spec.msize * 4) / legacy_bytes, 3),
+            "model_size": msize}
+
+
+def run_tp_bench_subprocess(n: int = 8, R: int = 8, reps: int = 3,
+                            seed: int = 0, mesh_shape: str = "2x4") -> dict:
+    """Re-execute this file with forced host devices and collect the
+    tp-bench JSON (same contract as ``run_mesh_bench_subprocess``)."""
+    from repro.launch.mesh import parse_sim_mesh_shape
+    n_dev = int(np.prod(parse_sim_mesh_shape(mesh_shape)))
+    fd, out = tempfile.mkstemp(suffix=".json")
+    os.close(fd)
+    out = pathlib.Path(out)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={n_dev} "
+                        + env.get("XLA_FLAGS", "")).strip()
+    env["JAX_PLATFORMS"] = "cpu"
+    try:
+        r = subprocess.run(
+            [sys.executable, os.path.abspath(__file__), "--mode", "tp-inner",
+             "--members", str(n), "--dispatch-r", str(R), "--reps", str(reps),
+             "--seed", str(seed), "--mesh-shape", str(mesh_shape),
+             "--json", str(out)],
+            capture_output=True, text=True, timeout=560, env=env)
+        if r.returncode != 0:
+            raise RuntimeError(
+                f"tp bench subprocess failed:\n{r.stderr[-2000:]}")
+        return json.loads(out.read_text())["tp"]
     finally:
         out.unlink(missing_ok=True)
 
@@ -666,6 +761,25 @@ def bench_sim_mesh2d():
            ) + ((res["phases"],) if res.get("phases") else ())
 
 
+def bench_sim_tp():
+    """benchmarks/run.py suite: GSPMD tensor-parallel member forward on a
+    forced-host-device ``2x4`` mesh vs the legacy gather path — wall-clock
+    rows plus the per-device forward-parameter-bytes ratio (the reason the
+    TP path exists: D/model_size instead of the full plane)."""
+    res = run_tp_bench_subprocess(n=8, R=8, reps=3)
+    for tag, key in (("fused_r8", "fused_steps_per_s"),
+                     ("gather_r8", "gather_steps_per_s"),
+                     ("tp_r8", "tp_steps_per_s")):
+        sps = res[key]
+        yield (f"sim/tp_{tag}", 1e6 / max(sps, 1e-9),
+               f"client_steps_per_s={sps};devices={res['devices']};"
+               f"mesh_shape={res['mesh_shape']};"
+               f"tp_vs_gather={res['tp_vs_gather']};"
+               f"fwd_bytes_per_device={res['fwd_bytes_per_device']};"
+               f"fwd_bytes_legacy={res['fwd_bytes_legacy']};"
+               f"fwd_bytes_ratio={res['fwd_bytes_ratio']}")
+
+
 def bench_sim_dispatch():
     """benchmarks/run.py suite: fused multi-round dispatch vs legacy rounds
     on the dispatch-bound MLP cluster (CPU-budget scale; the micro-LM
@@ -729,13 +843,16 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", default="cluster",
                     choices=["cluster", "padding", "dispatch", "mesh",
-                             "mesh2d", "mesh-inner", "fleet", "ckpt",
-                             "async", "all"],
+                             "mesh2d", "mesh-inner", "tp", "tp-inner",
+                             "fleet", "ckpt", "async", "all"],
                     help="'mesh' re-executes itself under forced host "
                          "devices and times the plane-sharded dispatch; "
                          "'mesh2d' is the same on a 4x2 (data × model) "
                          "mesh with plane columns sharded 2-way "
-                         "('mesh-inner' is their subprocess entry)")
+                         "('mesh-inner' is their subprocess entry); 'tp' "
+                         "times the GSPMD tensor-parallel member forward "
+                         "vs the legacy gather path on a 2x4 mesh "
+                         "('tp-inner' is its subprocess entry)")
     ap.add_argument("--dispatch-r", type=int, default=8,
                     help="dispatch mode: rounds fused per program")
     ap.add_argument("--mesh-shape", default=None, metavar="DATA[xMODEL]",
@@ -760,13 +877,39 @@ def main(argv=None):
                     help="also write results as JSON (CI tracks the suite "
                          "via benchmarks/run.py --json BENCH_core.json)")
     args = ap.parse_args(argv)
-    if (args.mode in ("dispatch", "mesh", "mesh2d", "mesh-inner", "all")
+    if (args.mode in ("dispatch", "mesh", "mesh2d", "mesh-inner", "tp",
+                      "tp-inner", "all")
             and args.dispatch_r < 2):
         ap.error("--dispatch-r must be ≥ 2 (R=1 IS the legacy baseline)")
     if args.mesh_shape is None:
-        args.mesh_shape = "4x2" if args.mode == "mesh2d" else "8"
+        args.mesh_shape = ("4x2" if args.mode == "mesh2d"
+                           else "2x4" if args.mode in ("tp", "tp-inner")
+                           else "8")
 
     results = {}
+    if args.mode in ("tp", "tp-inner"):
+        if args.mode == "tp":
+            res = run_tp_bench_subprocess(n=args.members, R=args.dispatch_r,
+                                          reps=args.reps, seed=args.seed,
+                                          mesh_shape=args.mesh_shape)
+        else:
+            res = run_tp_bench(n=args.members, R=args.dispatch_r,
+                               reps=args.reps, seed=args.seed,
+                               mesh_shape=args.mesh_shape)
+        results["tp"] = res
+        print(f"micro-lm cluster of C={res['members']} members, "
+              f"{res['steps']} local steps × {res['rounds']} rounds, "
+              f"{res['mesh_shape']} (data × model) mesh")
+        print(f"  fused  (R={res['R']}, 1 dev)  : "
+              f"{res['fused_steps_per_s']:10.1f} client-steps/s")
+        print(f"  gather (R={res['R']}, {res['devices']} dev) : "
+              f"{res['gather_steps_per_s']:10.1f} client-steps/s "
+              f"(full plane per device: {res['fwd_bytes_legacy']} B)")
+        print(f"  tp     (R={res['R']}, {res['devices']} dev) : "
+              f"{res['tp_steps_per_s']:10.1f} client-steps/s "
+              f"({res['tp_vs_gather']:.2f}× vs gather; forward params "
+              f"{res['fwd_bytes_per_device']} B/device = "
+              f"{res['fwd_bytes_ratio']:.2f}× the full plane)")
     if args.mode in ("mesh", "mesh2d", "mesh-inner"):
         if args.mode in ("mesh", "mesh2d"):
             res = run_mesh_bench_subprocess(n=args.members, R=args.dispatch_r,

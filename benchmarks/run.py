@@ -33,6 +33,7 @@ def _suites(fast: bool):
         ("sim/dispatch", bench_sim.bench_sim_dispatch),
         ("sim/mesh", bench_sim.bench_sim_mesh),
         ("sim/mesh2d", bench_sim.bench_sim_mesh2d),
+        ("sim/tp", bench_sim.bench_sim_tp),
         ("sim/fleet", bench_sim.bench_sim_fleet),
         ("sim/ckpt", bench_sim.bench_sim_ckpt),
         ("sim/async", bench_sim.bench_sim_async),

@@ -120,11 +120,15 @@ def fedavg_delta_plane(global_plane, plane, weights):
                      jnp.zeros_like(global_plane))
 
 
-def merge_buffered_plane(partial_plane, bank_plane, bank_weights):
+def merge_buffered_plane(partial_plane, bank_plane, bank_weights, *,
+                         use_kernel: bool | None = None):
     """Plane form of ``merge_buffered``: fold banked rows (already normalized
     by the live+buffered total) into a partial plane sum — one contraction,
-    no per-contribution tree_map."""
-    return partial_plane + aggregate_plane(bank_plane, bank_weights)
+    no per-contribution tree_map.  ``use_kernel=False`` forces the plain
+    tensordot (required inside GSPMD global-view programs, where the Pallas
+    fedagg custom call cannot be partitioned)."""
+    return partial_plane + aggregate_plane(bank_plane, bank_weights,
+                                           use_kernel=use_kernel)
 
 
 # ------------------------------------------------------- sharded flat plane

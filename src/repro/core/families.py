@@ -3,12 +3,14 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
 from repro.core.server import FLModelFamily
 from repro.models import cnn
 from repro.models import transformer
 from repro.configs.base import ModelConfig
 from repro.core.scaling import compress_config, model_bytes, param_count
+from repro.launch.sharding import tp_specs
 
 
 def cnn_family(*, classes: int = 10, in_channels: int = 1, alpha: float = 0.5,
@@ -40,8 +42,22 @@ def cnn_family(*, classes: int = 10, in_channels: int = 1, alpha: float = 0.5,
                 cur = max(1, cur // 4)
         return total
 
+    def param_specs(level, template, msize, axis):
+        """Megatron-style conv pairing: even convs shard OUT channels (dim
+        3), odd convs shard IN channels (dim 2) so the channel-sharded
+        activation feeds straight in; the dense head is row-parallel (its
+        input channels arrive sharded from the last — even — conv).
+        Non-divisible widths are demoted to replication downstream."""
+        convs = [{"w": P(None, None, None, axis) if i % 2 == 0
+                  else P(None, None, axis, None),
+                  "b": P(axis) if i % 2 == 0 else P()}
+                 for i in range(len(template["convs"]))]
+        return {"convs": convs,
+                "dense": {"w": P(axis, None), "b": P()}}
+
     return FLModelFamily(init=init, loss_and_logits=loss_and_logits,
-                         model_bytes=mb, flops_per_sample=flops)
+                         model_bytes=mb, flops_per_sample=flops,
+                         param_specs=param_specs)
 
 
 def mlp_family(*, classes: int = 10, in_dim: int = 14 * 14,
@@ -74,15 +90,33 @@ def mlp_family(*, classes: int = 10, in_dim: int = 14 * 14,
         h = width(level)
         return 4.0 * (in_dim * h + h + h * classes + classes)
 
+    def param_specs(level, template, msize, axis):
+        # column-parallel layer 1, row-parallel layer 2: one all-reduce
+        # per forward (the canonical Megatron MLP split)
+        return {"w1": P(None, axis), "b1": P(axis),
+                "w2": P(axis, None), "b2": P()}
+
     return FLModelFamily(
         init=init, loss_and_logits=loss_and_logits, model_bytes=mb,
         flops_per_sample=lambda l: 2.0 * (in_dim * width(l)
-                                          + width(l) * classes))
+                                          + width(l) * classes),
+        param_specs=param_specs)
 
 
 def lm_family(base_cfg: ModelConfig, alpha: float = 0.5) -> FLModelFamily:
     """Federated LM family: per-cluster α-compressed configs (same vocab →
-    KD-compatible logits).  batch = {"tokens": (B,S), "y": (B,S) next ids}."""
+    KD-compatible logits).
+
+    Batch contract: ``batch = {"tokens": (B, S)}``.  The LM loss derives its
+    next-token labels from ``tokens[:, 1:]`` itself — it reads no other key.
+    Under KD the engine's batches additionally carry ``"y": (B,)``, the
+    last-position token id: that key is consumed by the KD wrapper in
+    ``core.client`` as the hard label paired with this family's KD logits.
+    KD logits convention: ``loss_and_logits`` returns the LAST-position
+    distribution ``logits[:, -1]`` of shape (B, V) — the (B, classes) shape
+    the CNN/MLP families emit, so master→slave distillation is
+    family-uniform (teacher and student distributions align at the one
+    position both predict: the next token after the full prompt)."""
     def cfg_at(level):
         return compress_config(base_cfg, alpha, level)
 
@@ -100,7 +134,14 @@ def lm_family(base_cfg: ModelConfig, alpha: float = 0.5) -> FLModelFamily:
         # logits for KD: last position distribution ((B,V) to match CNN API)
         return ce, logits[:, -1]
 
+    def param_specs(level, template, msize, axis):
+        # same Megatron name rules the launch stack uses (launch/sharding):
+        # vocab-parallel embed/head, column-parallel wq/wk/wv/up,
+        # row-parallel wo/down; non-divisible dims replicate
+        return tp_specs(cfg_at(level), template, msize, axis)
+
     return FLModelFamily(
         init=init, loss_and_logits=loss_and_logits,
         model_bytes=lambda l: float(model_bytes(cfg_at(l))),
-        flops_per_sample=lambda l: 6.0 * param_count(cfg_at(l)))
+        flops_per_sample=lambda l: 6.0 * param_count(cfg_at(l)),
+        param_specs=param_specs)

@@ -8,6 +8,7 @@ backbones both plug in); per-cluster client training runs through
 from __future__ import annotations
 
 import time
+from contextlib import nullcontext
 from dataclasses import dataclass, field
 from typing import Callable
 
@@ -19,13 +20,14 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core import aggregation, assignment as asg, clustering, compaction
 from repro.core import cost_model, rounds as rnd
 from repro.core.client import local_update, make_cluster_update
-from repro.core.plane import make_plane_spec, plane_specs
+from repro.core.plane import make_plane_spec, make_tp_plane_spec, plane_specs
 from repro.core.resources import (LAMBDA_PAPER, Fleet, Participant,
                                   resource_matrix, unit_normalize)
 from repro.data import device_sampler
 from repro.data.sampler import class_balanced_batches, sample_batches
+from repro.models.tp import tp_shard_ctx
 from repro.launch.sharding import (member_specs, replicated_specs,
-                                   shard_member_tree)
+                                   shard_member_tree, to_named)
 from repro.obs import NULL_OBS
 
 
@@ -36,6 +38,12 @@ class FLModelFamily:
     loss_and_logits: Callable
     model_bytes: Callable          # level -> bytes
     flops_per_sample: Callable     # level -> flops
+    # Optional tensor-parallel rules: (level, params_template, msize, axis)
+    # -> PartitionSpec pytree matching the params.  When present (and the
+    # engine runs on a 2D mesh with ``tp_forward``), the dispatch path
+    # GSPMD-shards the member FORWARD along the model axis instead of
+    # all-gathering plane columns per round — see ``core.plane.TPPlaneSpec``.
+    param_specs: Callable | None = None
 
 
 @dataclass
@@ -97,6 +105,14 @@ class FLConfig:
     # multi-round blocks run copy-free; the caller's handle to the donated
     # buffer is dead after the call.
     donate_plane: bool = True
+    # true tensor-parallel member forward on a 2D (data × model) mesh: the
+    # dispatch block runs as ONE GSPMD global-view program whose plane
+    # carries the TP layout (``core.plane.TPPlaneSpec``), so the member
+    # forward/backward is Megatron-sharded along the model axis and the
+    # full (D,) plane is never materialized per device.  Requires the
+    # family to provide ``param_specs``; False keeps the legacy shard_map
+    # path that transiently all-gathers plane columns every round.
+    tp_forward: bool = True
     consts: rnd.ConvergenceConstants = field(default_factory=rnd.ConvergenceConstants)
 
 
@@ -216,6 +232,12 @@ class FedRAC:
         # (and its compiled programs) is exactly the pre-2D one.
         self.model_axis = mesh_model_axis if self._mesh_m > 1 else None
         self._pspecs = plane_specs(mesh_axis, self.model_axis)
+        # true TP forward: the 2D-mesh dispatch block runs as one GSPMD
+        # global-view program over a TP-layout plane (family supplies the
+        # per-leaf rules).  Families without ``param_specs`` — and engines
+        # with ``tp_forward=False`` — keep the legacy column-gather path.
+        self._tp = (self._mesh_m > 1 and cfg.tp_forward
+                    and family.param_specs is not None)
         # (level, use_kd, capacity, want_stack, …) -> jitted round programs
         self._programs = {}
         # dispatch-path caches: level -> PlaneSpec; (level, members) ->
@@ -228,6 +250,9 @@ class FedRAC:
         self._shard_len_pad = None
         self._class_m_pad = None
         self._class_tables = {}           # pid -> (table, counts) host arrays
+        # TP dispatch normalizes a FIXED KD teacher pytree to its level-0
+        # plane once per teacher identity (strong ref pins the id)
+        self._t_plane_cache = None
 
     # ------------------------------------------------------------ setup
     def setup(self):
@@ -375,9 +400,15 @@ class FedRAC:
         ``model_size × PLANE_ALIGN`` so each device's column slice keeps the
         Pallas fedagg tile grid aligned."""
         if level not in self._plane_specs:
-            self._plane_specs[level] = make_plane_spec(
-                self.family.init(jax.random.PRNGKey(0), level),
-                model_size=self._mesh_m)
+            template = self.family.init(jax.random.PRNGKey(0), level)
+            if self._tp:
+                specs = self.family.param_specs(level, template,
+                                                self._mesh_m, self.model_axis)
+                self._plane_specs[level] = make_tp_plane_spec(
+                    template, specs, msize=self._mesh_m, axis=self.model_axis)
+            else:
+                self._plane_specs[level] = make_plane_spec(
+                    template, model_size=self._mesh_m)
         return self._plane_specs[level]
 
     def plane_of(self, level: int, params) -> jnp.ndarray:
@@ -722,17 +753,24 @@ class FedRAC:
         per-round teacher stack stay replicated.  On a 2D (data × model)
         mesh they instead split COLUMN-wise along the model axis — each
         device stores only its D/model_size slice of the plane, bank and
-        teacher/history stacks.  Per round the plane (and teacher) columns
-        are all-gathered transiently for the local forward, each device
-        contracts its (member rows × column slice) subgrid, and the same
-        single psum over ``mesh_axis`` finishes the FedAvg — columns never
-        need reduction, so the model axis adds no collective beyond the
-        gather."""
+        teacher/history stacks.  With ``tp_forward`` (and a family that
+        provides ``param_specs``) the 2D block compiles as ONE GSPMD
+        global-view program over a TP-layout plane
+        (``core.plane.TPPlaneSpec``): the member forward/backward itself is
+        Megatron-sharded along the model axis — ``to_params`` is a chain of
+        device-local reshapes, XLA inserts only the per-layer activation
+        collectives, and the full (D,) plane never materializes on any
+        device.  The legacy 2D path (``tp_forward=False``) instead
+        all-gathers the plane (and teacher) columns transiently each round
+        for a replicated local forward; either way each device contracts
+        its (member rows × column slice) subgrid and a single data-axis
+        reduction finishes the FedAvg — columns never need reduction."""
         cfg = self.cfg
+        tp = self._tp
         key = ("dispatch", level, use_kd, capacity, R, balanced, banked,
                want_history, cfg.lr, cfg.kd_T, cfg.kd_alpha, cfg.seed,
                cfg.steps_per_round, cfg.local_batch, cfg.donate_plane,
-               t_per_round, self._mesh_n, self._mesh_m)
+               t_per_round, self._mesh_n, self._mesh_m, tp)
         if key in self._programs:
             return self._programs[key]
         loss_fn = jax.tree_util.Partial(self.family.loss_and_logits, level)
@@ -740,10 +778,21 @@ class FedRAC:
         update = make_cluster_update(loss_fn, cfg.lr, **kw)
         t_loss_fn = jax.tree_util.Partial(self.family.loss_and_logits, 0)
         spec = self.plane_spec(level)
-        t_spec = self.plane_spec(0) if (use_kd and t_per_round) else None
+        t_spec = (self.plane_spec(0) if (use_kd and (t_per_round or tp))
+                  else None)
         steps, batch, seed = cfg.steps_per_round, cfg.local_batch, cfg.seed
-        axis = self.mesh_axis if self.mesh is not None else None
-        maxis = self.model_axis if self.mesh is not None else None
+        # The TP program is written in the GLOBAL view (no named axes: full
+        # capacity, offset 0, one global weight sum) — numerically the
+        # unsharded program — and GSPMD partitions it via the in/out
+        # shardings + constraints below.  The shard_map path keeps its
+        # per-device view with explicit collectives.
+        axis = self.mesh_axis if (self.mesh is not None and not tp) else None
+        maxis = self.model_axis if (self.mesh is not None and not tp) else None
+        use_kernel = False if tp else None    # Pallas agg can't GSPMD-split
+
+        def _constrain(x, pspec):
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(self.mesh, pspec))
 
         def _gather_cols(plane_loc):
             """Local column slice -> full plane (2D mesh), else identity."""
@@ -772,31 +821,48 @@ class FedRAC:
                                                      offset=offset)
             batches = jax.vmap(lambda sh, ix: self._batch_from_gathered(
                 jax.tree.map(lambda a: a[ix], sh)))(shards, idx)
-            params = spec.to_params(_gather_cols(g))
+            params = (spec.to_params(g, mesh=self.mesh) if tp
+                      else spec.to_params(_gather_cols(g)))
             p_stack = jax.tree.map(
                 lambda x: jnp.broadcast_to(x[None], (C_loc,) + x.shape),
                 params)
+            if tp:
+                # member rows over `data`, each member's leaves TP-sharded —
+                # the broadcast stays a broadcast; the forward partitions
+                p_stack = jax.tree.map(
+                    lambda x, sp: _constrain(
+                        x, P(self.mesh_axis, *sp)),
+                    p_stack, spec.leaf_specs())
             teachers = None
             if use_kd:
-                t_params = (t_spec.to_params(_gather_cols(teacher))
-                            if t_per_round else teacher)
+                if tp:
+                    t_params = t_spec.to_params(teacher, mesh=self.mesh)
+                elif t_per_round:
+                    t_params = t_spec.to_params(_gather_cols(teacher))
+                else:
+                    t_params = teacher
                 teachers = jax.vmap(
                     jax.vmap(lambda b: t_loss_fn(t_params, b)[1]))(batches)
             new_stack, losses = update(p_stack, batches, step_masks, teachers)
             # keep only this device's column slice of the updated members:
             # the carry plane, bank rows and aggregate all live column-
             # sharded, so the full-width member plane is transient
-            new_plane = _local_cols(jax.vmap(spec.to_plane)(new_stack))
+            stacked = jax.vmap(spec.to_plane)(new_stack)
+            new_plane = (_constrain(stacked, self._pspecs["members"]) if tp
+                         else _local_cols(stacked))
             total = jnp.sum(weights) + (jnp.sum(bank_w) if banked else 0.0)
             if axis is not None:
                 total = jax.lax.psum(total, axis)
             denom = jnp.where(total > 0.0, total, 1.0)
-            local = aggregation.aggregate_plane(new_plane, weights / denom)
+            local = aggregation.aggregate_plane(new_plane, weights / denom,
+                                                use_kernel=use_kernel)
             if banked:
-                local = aggregation.merge_buffered_plane(local, bank_p,
-                                                         bank_w / denom)
+                local = aggregation.merge_buffered_plane(
+                    local, bank_p, bank_w / denom, use_kernel=use_kernel)
             agg = jax.lax.psum(local, axis) if axis is not None else local
             g_next = jnp.where(total > 0.0, agg, g)
+            if tp:
+                g_next = _constrain(g_next, self._pspecs["plane"])
             if maxis is not None:
                 # every model column computes identical losses (same batches,
                 # same gathered params); the pmean is numerically a no-op
@@ -815,6 +881,13 @@ class FedRAC:
             rs = r0 + jnp.arange(R, dtype=jnp.int32)
             return (rs, teacher) if t_per_round else rs
 
+        def _trace_ctx():
+            """TP activation hints (models/tp.py) are scoped at TRACE time:
+            entered inside the jitted function so the member forwards trace
+            with the hint context active — exactly and only for TP blocks."""
+            return (tp_shard_ctx(self.mesh, self.model_axis) if tp
+                    else nullcontext())
+
         if banked:
             def block_fn(plane, bank_plane, bank_w, shards, n_i,
                          tables, counts, r0, step_masks, weights, bank_gain,
@@ -829,8 +902,9 @@ class FedRAC:
                         step_masks, weights, t, off)
                     ys = (losses, g2) if want_history else (losses,)
                     return (g2, new_plane, bank_gain), ys
-                carry, ys = jax.lax.scan(
-                    body, (plane, bank_plane, bank_w), _xs(r0, teacher))
+                with _trace_ctx():
+                    carry, ys = jax.lax.scan(
+                        body, (plane, bank_plane, bank_w), _xs(r0, teacher))
                 return carry + tuple(ys)
             donate = (0, 1) if cfg.donate_plane else ()
         else:
@@ -845,12 +919,43 @@ class FedRAC:
                         step_masks, weights, t, off)
                     ys = (losses, g2) if want_history else (losses,)
                     return g2, ys
-                g, ys = jax.lax.scan(body, plane, _xs(r0, teacher))
+                with _trace_ctx():
+                    g, ys = jax.lax.scan(body, plane, _xs(r0, teacher))
                 return (g,) + tuple(ys)
             donate = (0,) if cfg.donate_plane else ()
 
         fn = block_fn
-        if axis is not None:
+        if tp:
+            # GSPMD global view: same argument layout as the shard_map wrap,
+            # but expressed as jit in/out shardings — the block body carries
+            # the constraints, XLA does the partitioning.
+            sp = self._pspecs
+            daxis = self.mesh_axis
+            def ns(s):
+                return NamedSharding(self.mesh, s)
+
+            def named(tree):
+                return to_named(self.mesh, tree)
+            Pm = ns(P(daxis))
+            Pg, Pmm = ns(sp["plane"]), ns(sp["members"])
+            t_in = None
+            if use_kd:                     # fixed teacher rides as a plane
+                t_in = ns(sp["stack"]) if t_per_round else ns(sp["plane"])
+            tail = (named(member_specs(pack["shards"], daxis)), Pm,
+                    named(member_specs(pack["tables"], daxis)),
+                    named(member_specs(pack["counts"], daxis)), None,
+                    ns(sp["masks"]), Pm)
+            ys_sh = (ns(sp["losses"]),) + ((ns(sp["stack"]),)
+                                           if want_history else ())
+            if banked:
+                in_sh = (Pg, Pmm, Pm) + tail + (Pm, t_in)
+                out_sh = (Pg, Pmm, Pm) + ys_sh
+            else:
+                in_sh = (Pg,) + tail + (t_in,)
+                out_sh = (Pg,) + ys_sh
+            prog = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                           donate_argnums=donate)
+        elif axis is not None:
             sp = self._pspecs
             Pm, Pr = sp["rows"], P()
             Pg, Pmm = sp["plane"], sp["members"]
@@ -872,7 +977,9 @@ class FedRAC:
             fn = aggregation._shard_map(block_fn, mesh=self.mesh,
                                         in_specs=in_specs,
                                         out_specs=out_specs)
-        prog = jax.jit(fn, donate_argnums=donate)
+            prog = jax.jit(fn, donate_argnums=donate)
+        else:
+            prog = jax.jit(fn, donate_argnums=donate)
         if self.obs.on:
             prog = _TimedProgram(
                 prog, self.obs,
@@ -940,7 +1047,18 @@ class FedRAC:
                                        balanced, banked, want_history,
                                        t_per_round=t_per_round, pack=pack,
                                        teacher_example=teacher)
-        t_arg = teacher_planes if t_per_round else teacher
+        if t_per_round:
+            t_arg = teacher_planes
+        elif use_kd and self._tp:
+            # the TP program consumes the fixed teacher as a TP-layout
+            # level-0 plane (its in-program forward is sharded too);
+            # convert once per teacher pytree identity
+            if (self._t_plane_cache is None
+                    or self._t_plane_cache[0] is not teacher):
+                self._t_plane_cache = (teacher, self.plane_of(0, teacher))
+            t_arg = self._t_plane_cache[1]
+        else:
+            t_arg = teacher
         tail = (pack["shards"], pack["n"], pack["tables"], pack["counts"],
                 jnp.asarray(r0, jnp.int32), masks, w)
         with self.obs.tracer.span("block_exec", cat="fl", level=level,

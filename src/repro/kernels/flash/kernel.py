@@ -68,10 +68,29 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 def flash_attention_bh(q, k, v, *, causal: bool = True, window: int = 0,
                        softcap: float = 0.0, block_q: int = 128,
                        block_k: int = 128, sm_scale: float | None = None,
-                       interpret: bool = True):
-    """q: (BH, Sq, hd); k, v: (BH, Sk, hd) — head-flattened attention."""
+                       interpret: bool = True, heads: int | None = None):
+    """q: (B·H, Sq, hd); k, v: (B·KV, Sk, hd) — head-flattened attention.
+
+    With ``heads`` (= H, the per-batch query-head count) and KV < H
+    (grouped-query attention), each query-head grid row reads its group's
+    KV row straight out of the compact (B·KV, …) tensors through the
+    BlockSpec index map — the kernel never materializes the G×-repeated
+    K/V the old ``jnp.repeat`` expansion built.  ``heads=None`` (or
+    KV == H) keeps the identity row mapping."""
     BH, Sq, hd = q.shape
+    BKV = k.shape[0]
     Sk = k.shape[1]
+    if heads is None or BKV == BH:
+        def kv_map(b, i, j):
+            return (b, j, 0)
+    else:
+        H = heads
+        assert BH % H == 0 and (BKV * H) % BH == 0, (BH, BKV, H)
+        KV = (BKV * H) // BH          # kv heads per batch
+        G = H // KV                   # query heads per kv head
+
+        def kv_map(b, i, j):
+            return ((b // H) * KV + (b % H) // G, j, 0)
     block_q = min(block_q, Sq)
     block_k = min(block_k, Sk)
     assert Sq % block_q == 0 and Sk % block_k == 0, (Sq, Sk, block_q, block_k)
@@ -86,8 +105,8 @@ def flash_attention_bh(q, k, v, *, causal: bool = True, window: int = 0,
         grid=(BH, n_q, n_k),
         in_specs=[
             pl.BlockSpec((None, block_q, hd), lambda b, i, j: (b, i, 0)),
-            pl.BlockSpec((None, block_k, hd), lambda b, i, j: (b, j, 0)),
-            pl.BlockSpec((None, block_k, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((None, block_k, hd), kv_map),
+            pl.BlockSpec((None, block_k, hd), kv_map),
         ],
         out_specs=pl.BlockSpec((None, block_q, hd), lambda b, i, j: (b, i, 0)),
         out_shape=jax.ShapeDtypeStruct((BH, Sq, hd), q.dtype),

@@ -1,9 +1,16 @@
 """jit'd public wrapper: GQA-aware flash attention.
 
-Accepts model-layout tensors q:(B,S,H,hd), k/v:(B,T,KV,hd); expands grouped
-KV heads, flattens (B,H), and calls the Pallas kernel.  On CPU backends the
-kernel runs in interpret mode (Python execution of the kernel body); on TPU
-it lowers to Mosaic.
+Accepts model-layout tensors q:(B,S,H,hd), k/v:(B,T,KV,hd); flattens the
+(batch, head) axes and calls the Pallas kernel, which maps each grouped
+query head to its KV head inside the grid (K/V stay compact — no G×
+repeat).  On CPU backends the kernel runs in interpret mode (Python
+execution of the kernel body); on TPU it lowers to Mosaic.
+
+Differentiable: a ``custom_vjp`` pairs the kernel forward with a backward
+that recomputes attention through the pure-jnp grouped reference and
+transposes that — the standard flash pattern (save q/k/v, not the S×T
+probabilities), which is what lets ``attn_impl="pallas"`` serve the
+member-training forward of the FL dispatch path, not just prefill.
 """
 from __future__ import annotations
 
@@ -14,9 +21,65 @@ import jax.numpy as jnp
 
 from repro.kernels.flash.kernel import flash_attention_bh
 
+NEG = -2.0 ** 30
+
 
 def _interpret_default() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def _ref_gqa(q, k, v, causal: bool, window: int, softcap: float):
+    """Grouped-query attention in model layout, pure jnp — the backward
+    recompute (same masking/softcap semantics as the kernel)."""
+    B, S, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qr = q.reshape(B, S, KV, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bskgd,btkd->bkgst", qr, k.astype(jnp.float32))
+    s = s * (hd ** -0.5)
+    if softcap > 0:
+        s = jnp.tanh(s / softcap) * softcap
+    qi = jnp.arange(S)[:, None]
+    ki = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= ki <= qi
+    if window > 0:
+        mask &= (qi - ki) < window
+    s = jnp.where(mask[None, None, None], s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", p, v.astype(jnp.float32))
+    return out.reshape(B, S, H, hd).astype(q.dtype)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def _flash(q, k, v, causal, window, softcap, block_q, block_k, interpret):
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    # GQA rides the kernel's grid→KV-row index map: K/V stay compact
+    # (B·KV, Sk, hd), no G× repeat materialization before the call
+    qb = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    kb = k.transpose(0, 2, 1, 3).reshape(B * KV, k.shape[1], hd)
+    vb = v.transpose(0, 2, 1, 3).reshape(B * KV, v.shape[1], hd)
+    ob = flash_attention_bh(qb, kb, vb, causal=causal, window=window,
+                            softcap=softcap, block_q=block_q, block_k=block_k,
+                            interpret=interpret, heads=H)
+    return ob.reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+
+
+def _flash_fwd(q, k, v, causal, window, softcap, block_q, block_k, interpret):
+    out = _flash(q, k, v, causal, window, softcap, block_q, block_k, interpret)
+    return out, (q, k, v)
+
+
+def _flash_bwd(causal, window, softcap, block_q, block_k, interpret, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q, k, v: _ref_gqa(q, k, v, causal, window, softcap), q, k, v)
+    return vjp(g)
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
 
 
 @partial(jax.jit, static_argnames=("causal", "window", "softcap", "block_q",
@@ -25,16 +88,5 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
                     softcap: float = 0.0, block_q: int = 128,
                     block_k: int = 128, interpret: bool | None = None):
     interpret = _interpret_default() if interpret is None else interpret
-    B, S, H, hd = q.shape
-    KV = k.shape[2]
-    G = H // KV
-    if G > 1:
-        k = jnp.repeat(k, G, axis=2)
-        v = jnp.repeat(v, G, axis=2)
-    qb = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
-    kb = k.transpose(0, 2, 1, 3).reshape(B * H, k.shape[1], hd)
-    vb = v.transpose(0, 2, 1, 3).reshape(B * H, v.shape[1], hd)
-    ob = flash_attention_bh(qb, kb, vb, causal=causal, window=window,
-                            softcap=softcap, block_q=block_q, block_k=block_k,
-                            interpret=interpret)
-    return ob.reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+    return _flash(q, k, v, causal, window, softcap, block_q, block_k,
+                  interpret)

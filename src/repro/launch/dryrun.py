@@ -19,6 +19,7 @@ import traceback
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import INPUT_SHAPES, get_config, list_archs
@@ -88,6 +89,7 @@ def make_kd_train_step(cfg_t: ModelConfig, cfg_s: ModelConfig,
         B, S, _ = h_s.shape
         n = (S - 1) // chunk
         cut = n * chunk
+        tail = (S - 1) - cut
         resh = lambda t: jnp.moveaxis(
             t[:, :cut].reshape(B, n, chunk, -1), 1, 0)
         lbl = jnp.moveaxis(batch["tokens"][:, 1:cut + 1].reshape(B, n, chunk),
@@ -101,9 +103,22 @@ def make_kd_train_step(cfg_t: ModelConfig, cfg_s: ModelConfig,
             l = kd_loss(sl, lbl_c, tl, T=2.0, alpha=0.3, valid_mask=mask)
             return acc + l, None
 
-        total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32),
-                                (resh(h_t), resh(h_s), lbl))
-        l = total / n
+        if n:       # chunk > S-1: everything is tail, nothing to scan
+            total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32),
+                                    (resh(h_t), resh(h_s), lbl))
+        else:
+            total = jnp.zeros((), jnp.float32)
+        # kd_loss is a MEAN over its positions, so chunk means combine by
+        # token-count weighting; the (S-1) mod chunk remainder gets its own
+        # (static-shape) chunk outside the scan instead of being dropped
+        l = total * chunk
+        if tail:
+            ht_c, hs_c = h_t[:, cut:S - 1], h_s[:, cut:S - 1]
+            tl = jax.lax.stop_gradient(ht_c @ head_t.T.astype(ht_c.dtype))
+            sl = hs_c @ head_s.T.astype(hs_c.dtype)
+            l = l + tail * kd_loss(sl, batch["tokens"][:, cut + 1:], tl,
+                                   T=2.0, alpha=0.3, valid_mask=mask)
+        l = l / (S - 1)
         return l + cfg_s.router_aux_coef * aux, l
 
     def cached_loss(sp, t_logits, batch):
@@ -204,6 +219,19 @@ def lower_fl_round(cfg: ModelConfig, mesh, *, clients: int = 256,
         return jitted.lower(stack_shape, batches, weights), fcfg
 
 
+def prefill_out_spec(cfg: ModelConfig, shape, mesh, dp):
+    """Prefill logit out-spec: the two divisibility guards COMPOSE — the
+    batch axis splits along ``dp`` only when global_batch divides it, and
+    the vocab axis splits along `model` only when padded_vocab divides;
+    a non-divisible batch must not resurrect a vocab split the vocab
+    guard already rejected (it used to: the batch fallback overwrote the
+    whole spec with P(None, 'model') unconditionally)."""
+    vocab_ok = cfg.padded_vocab % mesh.shape.get("model", 1) == 0
+    dp_total = int(np.prod([mesh.shape[a] for a in dp]))
+    batch_ok = shape.global_batch % dp_total == 0
+    return P(dp if batch_ok else None, "model" if vocab_ok else None)
+
+
 def lower_one(cfg: ModelConfig, shape_name: str, mesh, *, lr: float = 1e-4,
               kd: bool = False, kd_chunk: int = 0):
     """Returns (lowered, meta).  Raises on sharding/lowering bugs."""
@@ -266,9 +294,7 @@ def lower_one(cfg: ModelConfig, shape_name: str, mesh, *, lr: float = 1e-4,
         batch = specs.train_inputs(cfg, shape)
         b_spec = sharding.batch_specs(cfg, batch, mesh)
         step = make_prefill_step(cfg)
-        out_spec = P(dp, "model") if cfg.padded_vocab % mesh.shape.get("model", 1) == 0 else P(dp, None)
-        if shape.global_batch % int(jnp.prod(jnp.array([mesh.shape[a] for a in dp]))) != 0:
-            out_spec = P(None, "model")
+        out_spec = prefill_out_spec(cfg, shape, mesh, dp)
         jitted = jax.jit(step,
                          in_shardings=sharding.to_named(mesh, (p_spec, b_spec)),
                          out_shardings=sharding.to_named(mesh, out_spec))

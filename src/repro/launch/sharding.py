@@ -39,12 +39,15 @@ def _leaf_name(path) -> str:
     return ""
 
 
-def param_specs(cfg: ModelConfig, params_shape, mesh):
-    """params_shape: pytree of ShapeDtypeStruct (or arrays)."""
-    msize = mesh.shape.get("model", 1)
+def tp_specs(cfg: ModelConfig, params_shape, msize: int,
+             axis: str = "model"):
+    """Name-rule TP PartitionSpecs for a bare model-axis SIZE (no mesh).
 
-    if cfg.shard_mode == "fsdp":
-        return _fsdp_param_specs(params_shape, mesh)
+    The mesh-independent core of ``param_specs``: the FL dispatch path
+    (``core/families.lm_family``) bridges its plane world to the same
+    Megatron column/row/vocab rules through this entry point, with ``axis``
+    naming whatever mesh axis the caller's world shards models along.
+    params_shape: pytree of ShapeDtypeStruct (or arrays)."""
 
     def spec(path, leaf):
         name = _leaf_name(path)
@@ -55,16 +58,23 @@ def param_specs(cfg: ModelConfig, params_shape, mesh):
         if is_moe and cfg.moe_shard == "ep":
             dim = nd - 3
             if leaf.shape[dim] % msize == 0:
-                out[dim] = "model"
+                out[dim] = axis
                 return P(*out)
         if name in PARAM_DIM:
             dim = PARAM_DIM[name]
             dim = dim if dim >= 0 else nd + dim
             if 0 <= dim < nd and leaf.shape[dim] % msize == 0:
-                out[dim] = "model"
+                out[dim] = axis
         return P(*out)
 
     return jax.tree_util.tree_map_with_path(spec, params_shape)
+
+
+def param_specs(cfg: ModelConfig, params_shape, mesh):
+    """params_shape: pytree of ShapeDtypeStruct (or arrays)."""
+    if cfg.shard_mode == "fsdp":
+        return _fsdp_param_specs(params_shape, mesh)
+    return tp_specs(cfg, params_shape, mesh.shape.get("model", 1))
 
 
 def _fsdp_param_specs(params_shape, mesh):
@@ -132,7 +142,14 @@ def cache_specs(cfg: ModelConfig, cache_shape, mesh, *, shard_seq: bool):
             if shard_seq:
                 seq_axes = dp + ("model",) if cfg.cache_shard == "seq" else dp
                 seq_total = dp_size * (msize if cfg.cache_shard == "seq" else 1)
-                out[2] = seq_axes if leaf.shape[2] % seq_total == 0 else dp
+                if leaf.shape[2] % seq_total == 0:
+                    out[2] = seq_axes
+                elif leaf.shape[2] % dp_size == 0:
+                    # seq not divisible by the widened data+model product:
+                    # fall back to data-only — but only if THAT divides;
+                    # otherwise replicate (the dp fallback used to be
+                    # unconditional, producing invalid specs for odd S)
+                    out[2] = dp
                 if cfg.cache_shard == "hd" and leaf.shape[4] % msize == 0:
                     out[4] = "model"
                 return P(*out)

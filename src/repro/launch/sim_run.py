@@ -182,7 +182,8 @@ def build(args):
                        aggregation=("buffered" if args.mar_policy == "buffer"
                                     else "sync"),
                        staleness_discount=args.staleness_discount,
-                       rounds_per_dispatch=args.rounds_per_dispatch)
+                       rounds_per_dispatch=args.rounds_per_dispatch,
+                       tp_forward=args.tp_forward)
     mesh = make_sim_mesh(args.mesh_shape) if args.mesh_shape else None
     eng = srv.FedRAC(parts, client_data, fam, cfg, classes=classes,
                      mesh=mesh).setup()
@@ -237,8 +238,10 @@ def run(args):
     if eng.mesh is not None:
         plane_txt = (f", plane columns sharded {eng._mesh_m}-way"
                      if eng._mesh_m > 1 else "")
+        fwd_txt = (", TP member forward" if eng._tp else
+                   ", replicated member forward" if eng._mesh_m > 1 else "")
         print(f"mesh={dict(eng.mesh.shape)} "
-              f"(member axis sharded {eng._mesh_n}-way{plane_txt})")
+              f"(member axis sharded {eng._mesh_n}-way{plane_txt}{fwd_txt})")
     trace = make_trace(args.trace, args.participants, args.rounds,
                        seed=args.seed, **_trace_knobs(args))
     obs = None
@@ -301,6 +304,15 @@ def main(argv=None):
                          "(data × model)-subgrid reduce + one psum over "
                          "data; on CPU force devices with XLA_FLAGS="
                          "--xla_force_host_platform_device_count=8")
+    ap.add_argument("--tp-forward", default=True,
+                    action=argparse.BooleanOptionalAction,
+                    help="on a 2D mesh, run the member FORWARD tensor-"
+                         "parallel over the model axis (GSPMD-partitioned "
+                         "member step: per-layer activation collectives "
+                         "only, no transient full-plane all-gather); "
+                         "--no-tp-forward keeps the legacy shard_map path "
+                         "that gathers plane columns and replicates the "
+                         "forward per device")
     ap.add_argument("--schedule", default="parallel",
                     choices=["parallel", "sequential"])
     ap.add_argument("--mode", default="sync", choices=["sync", "async"],

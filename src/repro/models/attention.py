@@ -16,6 +16,14 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.models.layers import (apply_mrope, apply_rope, dense_init,
                                  rms_head_norm, softcap)
+from repro.models.tp import shard_hint, tp_ctx
+
+from jax.sharding import PartitionSpec as P
+
+try:                                    # jax >= 0.5 top-level export
+    _shard_map = jax.shard_map
+except AttributeError:                  # jax 0.4.x experimental location
+    from jax.experimental.shard_map import shard_map as _shard_map
 
 NEG_INF = -2.0 ** 30  # large-but-finite: keeps fully-masked rows NaN-free
 
@@ -36,9 +44,11 @@ def init_attn(key, cfg: ModelConfig, dtype):
 
 def _project_qkv(p, cfg: ModelConfig, x, positions):
     B, S, _ = x.shape
-    q = (x @ p["wq"]).reshape(B, S, cfg.n_heads, cfg.head_dim)
-    k = (x @ p["wk"]).reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
-    v = (x @ p["wv"]).reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    # TP hint: column-parallel wq/wk/wv leave the HEAD axis sharded —
+    # attention then runs head-local per device (Megatron cut #1)
+    q = shard_hint((x @ p["wq"]).reshape(B, S, cfg.n_heads, cfg.head_dim), 2)
+    k = shard_hint((x @ p["wk"]).reshape(B, S, cfg.n_kv_heads, cfg.head_dim), 2)
+    v = shard_hint((x @ p["wv"]).reshape(B, S, cfg.n_kv_heads, cfg.head_dim), 2)
     if cfg.qk_norm:
         q = rms_head_norm(p["q_norm"], q)
         k = rms_head_norm(p["k_norm"], k)
@@ -131,8 +141,27 @@ def attn_forward(p, cfg: ModelConfig, x, positions, *, local: bool = False,
     window = cfg.sliding_window if local else 0
     if cfg.attn_impl == "pallas" and not cfg.mrope_sections and causal:
         from repro.kernels.flash import ops as flash_ops
-        out = flash_ops.flash_attention(
-            q, k, v, causal=True, window=window, softcap=cfg.attn_softcap)
+
+        def _flash(q, k, v):
+            return flash_ops.flash_attention(
+                q, k, v, causal=True, window=window,
+                softcap=cfg.attn_softcap)
+
+        c = tp_ctx()
+        if (c is not None
+                and cfg.n_heads % c[0].shape[c[1]] == 0
+                and cfg.n_kv_heads % c[0].shape[c[1]] == 0):
+            # head-sharded TP: run the Pallas kernel per device on its
+            # LOCAL head shard — shard_map keeps the kernel call out of
+            # GSPMD's hands (a custom call has no partitioning rule), so
+            # the sharded attention path is served by the same kernel
+            mesh, axis = c
+            hs = P(None, None, axis, None)
+            out = _shard_map(_flash, mesh=mesh,
+                             in_specs=(hs, hs, hs), out_specs=hs,
+                             check_rep=False)(q, k, v)
+        else:
+            out = _flash(q, k, v)
     elif cfg.attn_impl == "blocked":
         out = _sdpa_blocked(cfg, q, k, v, causal=causal, window=window)
     else:
@@ -141,6 +170,9 @@ def attn_forward(p, cfg: ModelConfig, x, positions, *, local: bool = False,
         else:
             mask = jnp.ones((1, 1, S, S), bool)
         out = _sdpa(cfg, q, k, v, mask)
+    # TP hint: head-sharded context feeds the row-parallel wo — the
+    # contraction's all-reduce is the layer's single output collective
+    out = shard_hint(out, 2)
     return out.reshape(B, S, cfg.q_dim) @ p["wo"]
 
 

@@ -10,6 +10,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.models.tp import shard_hint
 
 
 # --------------------------------------------------------------------------- init
@@ -109,8 +110,10 @@ def init_mlp(key, d_model: int, d_ff: int, dtype):
 
 
 def apply_mlp(p, x):
-    g = jax.nn.silu(x @ p["w_gate"])
-    return (g * (x @ p["w_up"])) @ p["w_down"]
+    # TP hint: column-parallel w_gate/w_up leave the FFN hidden sharded;
+    # the row-parallel w_down contraction is the layer's one all-reduce
+    g = jax.nn.silu(shard_hint(x @ p["w_gate"], -1))
+    return (g * shard_hint(x @ p["w_up"], -1)) @ p["w_down"]
 
 
 def softcap(x, cap: float):

@@ -1,0 +1,61 @@
+"""Tensor-parallel activation hints for the model zoo.
+
+The FL dispatch path compiles member forwards inside ONE GSPMD global-view
+program (``core/server._dispatch_programs`` with ``tp_forward``), where the
+parameters are already TP-sharded by ``core.plane.TPPlaneSpec``.  GSPMD
+propagates shardings from the weights on its own, but the model code can do
+better than propagation at the classic Megatron cut points — the head axis
+of q/k/v, the FFN hidden, the vocab-parallel logits — and only the model
+code knows where those are.  This module carries that knowledge without
+threading a mesh through every forward signature: the server enters
+``tp_shard_ctx`` around the block trace, and ``shard_hint`` becomes a
+``with_sharding_constraint`` exactly there (a no-op everywhere else:
+single-device tests, the legacy shard_map path, the launch dry-run which
+has its own pjit specs).
+
+Hints are advisory and shape-guarded: a dim that does not divide the mesh
+axis is silently left unconstrained, mirroring the replication fallback of
+``launch/sharding.tp_specs``.
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_CTX: "tuple | None" = None        # (mesh, model-axis name) or None
+
+
+@contextmanager
+def tp_shard_ctx(mesh, axis: str):
+    """Activate TP hints for code traced within this block (trace-time
+    scoping: enter it inside the function being jitted)."""
+    global _CTX
+    prev = _CTX
+    _CTX = (mesh, axis)
+    try:
+        yield
+    finally:
+        _CTX = prev
+
+
+def tp_ctx():
+    """The active (mesh, axis) TP context, or None."""
+    return _CTX
+
+
+def shard_hint(x, dim: int):
+    """Constrain ``x``'s dimension ``dim`` to the TP model axis when a
+    context is active and the dim divides the axis size; identity
+    otherwise.  Safe under vmap (the batched dim stays unconstrained)."""
+    c = _CTX
+    if c is None:
+        return x
+    mesh, axis = c
+    d = dim if dim >= 0 else x.ndim + dim
+    if x.shape[d] % mesh.shape[axis] != 0:
+        return x
+    sp = [None] * x.ndim
+    sp[d] = axis
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*sp)))

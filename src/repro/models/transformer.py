@@ -16,6 +16,7 @@ from repro.models import mamba, xlstm_blocks as xb
 from repro.models.layers import (apply_mlp, apply_norm, embed_init, init_mlp,
                                  init_norm, softcap)
 from repro.models.moe import apply_moe, init_moe
+from repro.models.tp import shard_hint
 
 
 def _init_mixer(key, cfg: ModelConfig, kind: str, dtype):
@@ -126,7 +127,10 @@ def forward(cfg: ModelConfig, params, tokens=None, *, embeds=None,
     if return_hidden:
         return h, jnp.sum(auxs)
     head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
-    logits = (h @ head.T.astype(h.dtype)) * cfg.logit_scale
+    # TP hint: the vocab-parallel head keeps logits VOCAB-sharded — the
+    # downstream logsumexp/gather loss reduces partials per device instead
+    # of materializing the full (B,S,V) per device (Megatron vocab loss)
+    logits = shard_hint((h @ head.T.astype(h.dtype)) * cfg.logit_scale, -1)
     logits = softcap(logits, cfg.final_softcap)
     return logits, jnp.sum(auxs)
 

@@ -460,8 +460,14 @@ class HeterogeneitySim:
                            obs=self.obs if self.obs.on else None)
         self.report = report
         buffered = fl.cfg.aggregation == "buffered"
+        # surface which member-forward the block programs compile: "tp"
+        # (GSPMD-partitioned over the model axis), "gather" (2D mesh with
+        # tp_forward off — transient plane all-gather + replicated forward),
+        # or "replicated" (no model axis to shard over)
+        fwd = ("tp" if fl._tp else
+               "gather" if getattr(fl, "_mesh_m", 1) > 1 else "replicated")
         with tr.span("sim.run", cat="engine", mode="dispatch",
-                     rounds=cfg.rounds):
+                     member_forward=fwd, rounds=cfg.rounds):
             with tr.span("init_params", cat="engine"):
                 resumed = self._maybe_resume(report, plane_mode=True)
                 if resumed is None:

@@ -87,7 +87,7 @@ class StreamBridgedFedRAC(srv.FedRAC):
         raise KeyError(pid)
 
 
-def _build(mesh_shape=None, n=8, seed=0, **cfg_kw):
+def _build(mesh_shape=None, n=8, seed=0, family=None, **cfg_kw):
     ds = make_classification("synth-mnist", 400, seed=seed)
     train, test = train_test_split(ds)
     idx = dirichlet_partition(train.y, n, alpha=2.0, seed=seed)
@@ -101,8 +101,8 @@ def _build(mesh_shape=None, n=8, seed=0, **cfg_kw):
                        **({"compact_to": 2,
                            "rounds_per_dispatch": 8} | cfg_kw))
     mesh = make_sim_mesh(mesh_shape) if mesh_shape else None
-    eng = StreamBridgedFedRAC(parts, cd, mlp_family(), cfg, classes=10,
-                              mesh=mesh).setup()
+    eng = StreamBridgedFedRAC(parts, cd, family or mlp_family(), cfg,
+                              classes=10, mesh=mesh).setup()
     testb = {"x": jnp.asarray(test.x), "y": jnp.asarray(test.y)}
     return eng, testb
 
@@ -543,6 +543,139 @@ def test_sampler_draws_independent_of_model_axis():
     np.testing.assert_array_equal(sharded, full.astype(np.float32))
 
 
+# --------------------------------------------------------------- TP column
+# On 2D meshes the engine now defaults to the GSPMD tensor-parallel member
+# forward (``FLConfig.tp_forward``), so every 4x2/2x4 cell above already
+# exercises TP for the MLP family.  The cells below cover what those don't:
+# the legacy shard_map gather path (``tp_forward=False``), the CNN/LM
+# families' TP specs, and the per-device-memory acceptance criterion.
+@eightway
+@pytest.mark.parametrize("mesh_shape", ["4x2", "2x4"])
+@pytest.mark.parametrize("scenario", ["fedavg", "kd"])
+def test_matrix_legacy_gather_eightway(scenario, mesh_shape):
+    """``tp_forward=False`` keeps the pre-TP shard_map path (transient
+    column all-gather + replicated forward) working against the golden."""
+    golden, level, members = _golden(scenario)
+    eng, _ = _build(mesh_shape=mesh_shape, tp_forward=False)
+    assert not eng._tp
+    teacher = _teacher(eng) if scenario == "kd" else None
+    _assert_cell(golden, _run_dispatch(eng, level, members, ROUNDS, 8,
+                                       teacher),
+                 f"legacy-gather/{scenario}/{mesh_shape}")
+
+
+def _build_tp_family(famname, mesh_shape=None, **cfg_kw):
+    """Engine over the CNN or (token-data) LM family for the TP cells."""
+    if famname == "cnn":
+        from repro.core.families import cnn_family
+        fam = cnn_family(classes=10, in_channels=1, base_width=0.125)
+        return _build(mesh_shape=mesh_shape, family=fam,
+                      class_balanced=False, **cfg_kw)[0]
+    from repro.configs.base import ModelConfig
+    from repro.core.families import lm_family
+    from repro.data.synthetic import make_lm_corpus, lm_batches
+    base = ModelConfig(name="matrix-lm", family="dense", n_layers=2,
+                       d_model=32, n_heads=4, n_kv_heads=4, head_dim=8,
+                       d_ff=64, vocab_size=64, rope_theta=1e4)
+    corpus = make_lm_corpus(64, 8_000, seed=0)
+    chunks = np.array_split(corpus, 8)
+    cd = [{"tokens": lm_batches(ch, 32, 17, 1, seed=i)[0]}
+          for i, ch in enumerate(chunks)]
+    parts = participants_from_matrix(sample_profiles(8, seed=0),
+                                     n_data=[64] * 8)
+
+    class TokenFedRAC(srv.FedRAC):
+        def _batch_from_gathered(self, g):
+            return {"tokens": g["tokens"], "y": g["tokens"][:, :, -1]}
+
+    cfg = srv.FLConfig(steps_per_round=3, lr=0.05, seed=0, local_batch=4,
+                       compact_to=2, rounds_per_dispatch=8,
+                       class_balanced=False, **cfg_kw)
+    mesh = make_sim_mesh(mesh_shape) if mesh_shape else None
+    return TokenFedRAC(parts, cd, lm_family(base, alpha=0.5), cfg,
+                       classes=64, mesh=mesh).setup()
+
+
+def _bank_for(eng, level, cap):
+    """Two seeded bank rows in THIS engine's plane layout (TP and legacy
+    planes are not byte-compatible — banks only convert through pytrees)."""
+    rows = jnp.stack([eng.plane_of(level, eng.family.init(
+        jax.random.PRNGKey(100 + i), level)) for i in range(2)])
+    D = rows.shape[1]
+    return (eng.place_member_plane(
+                jnp.zeros((cap, D), jnp.float32).at[:2].set(rows)),
+            eng.place_member_sharded(
+                jnp.zeros((cap,), jnp.float32).at[:2].set(
+                    jnp.asarray([0.5, 0.25]))),
+            eng.place_member_sharded(jnp.zeros((cap,), jnp.float32)))
+
+
+@eightway
+@pytest.mark.parametrize("famname", ["cnn", "lm"])
+@pytest.mark.parametrize("scenario", ["fedavg", "kd", "buffered"])
+def test_matrix_tp_families_eightway(famname, scenario):
+    """TP ≡ replicated for the CNN and LM families on the 2x4 mesh:
+    identical dispatch blocks (same sampler stream, same bank rows) on the
+    TP engine and the unsharded engine must agree to matrix tolerance —
+    with one compile per program (the LM KD cell also runs the teacher
+    forward TP-sharded)."""
+    level = 0 if scenario == "fedavg" else 1
+    outs = {}
+    for shape in (None, "2x4"):
+        eng = _build_tp_family(famname, mesh_shape=shape)
+        if shape is not None:
+            assert eng._tp, "TP inactive on the 2D mesh"
+        members = list(eng.assignment.members[level])
+        cap = eng._capacity(len(members))
+        teacher = (eng.family.init(jax.random.PRNGKey(42), 0)
+                   if scenario != "fedavg" else None)
+        bank = _bank_for(eng, level, cap) if scenario == "buffered" else None
+        plane = eng.plane_of(level, eng.family.init(
+            jax.random.PRNGKey(eng.cfg.seed + level), level))
+        out = eng.dispatch_rounds(level, members, plane, 0, ROUNDS,
+                                  teacher=teacher, bank=bank)
+        outs[shape] = (eng.params_of(level, out.plane),
+                       np.asarray(out.losses))
+        if shape is not None:
+            stats = eng.compile_stats()
+            bad = {k: v for k, v in stats.items() if v != 1}
+            assert not bad, bad
+    _assert_cell(outs[None], outs["2x4"], f"tp/{famname}/{scenario}")
+
+
+@eightway
+def test_tp_member_forward_sharding_eightway():
+    """Acceptance criterion for the TP member forward: per-device plane
+    bytes scale as D/model_size, and the lowered dispatch program contains
+    NO plane-magnitude all-gather — the transient column gather the TP
+    path exists to kill (the legacy path all-gathers the full (D,) plane
+    into every device each round)."""
+    from repro.launch.hlo_analysis import collective_bytes
+    eng, _ = _build(mesh_shape="2x4")
+    level, members = 0, list(eng.assignment.members[0])
+    cap = eng._capacity(len(members))
+    spec = eng.plane_spec(level)
+    plane = eng.plane_of(level, eng.family.init(jax.random.PRNGKey(3), level))
+    out = eng.dispatch_rounds(level, members, plane, 0, 8)
+    # each device holds exactly its 1/msize column slice of the plane
+    shard_sizes = {s.data.size for s in out.plane.addressable_shards}
+    assert shard_sizes == {spec.d_pad // spec.msize}, shard_sizes
+    # lower the cached program and audit its collectives
+    balanced = eng.cfg.class_balanced and level == 0
+    pack = eng._shard_pack(level, members, cap, balanced)
+    prog = eng._dispatch_programs(level, False, cap, 8, balanced, False,
+                                  False, pack=pack)
+    masks = eng.place_member_sharded(
+        jnp.ones((cap, eng.cfg.steps_per_round), jnp.float32))
+    w = eng.place_member_sharded(jnp.ones((cap,), jnp.float32))
+    low = prog.lower(out.plane, pack["shards"], pack["n"], pack["tables"],
+                     pack["counts"], jnp.asarray(0, jnp.int32), masks, w,
+                     None)
+    cb = collective_bytes(low.compile().as_text())
+    plane_bytes = spec.d_pad * 4
+    assert cb["bytes"].get("all-gather", 0) < plane_bytes // 2, cb["bytes"]
+
+
 # ------------------------------------------------------ subprocess (tier-1)
 @pytest.mark.slow
 def test_matrix_under_forced_host_devices():
@@ -557,4 +690,4 @@ def test_matrix_under_forced_host_devices():
          os.path.abspath(__file__), "-k", "eightway or model_axis"],
         capture_output=True, text=True, timeout=560, env=env, cwd=REPO)
     assert r.returncode == 0, r.stdout + "\n" + r.stderr[-3000:]
-    assert "15 passed" in r.stdout, r.stdout
+    assert "26 passed" in r.stdout, r.stdout

@@ -115,6 +115,58 @@ def test_long_context_shard_seq():
     assert sp2["p0"]["k"][2] == ("data", "model")   # default "seq" 
 
 
+def test_shard_seq_fallback_divisibility():
+    """shard_seq fallback chain: (data, model) when S divides the full
+    product, data-only when S divides only dp_size, REPLICATED otherwise —
+    the dp fallback used to be unconditional, emitting invalid specs for
+    sequence lengths not divisible by the data axis."""
+    import jax.numpy as jnp
+    cfg = get_config("gemma2-9b")          # cache_shard="seq" default
+    seq_total = 16 * 16                    # data * model on MESH
+
+    def k_spec(S):
+        cache = {"p0": {"k": jax.ShapeDtypeStruct((2, 1, S, 2, 8),
+                                                  jnp.bfloat16)}}
+        sp = sharding.cache_specs(cfg, cache, MESH, shard_seq=True)
+        return sp["p0"]["k"]
+
+    assert k_spec(seq_total)[2] == ("data", "model")   # full split
+    assert k_spec(16 * 17)[2] == ("data",)             # dp-only fallback
+    assert k_spec(274)[2] is None                      # 274 % 16 != 0
+    # hd-mode: seq_total is dp_size only; same chain without `model`
+    def k_spec_hd(S):
+        cache = {"p0": {"k": jax.ShapeDtypeStruct((2, 1, S, 2, 32),
+                                                  jnp.bfloat16)}}
+        sp = sharding.cache_specs(cfg.replace(cache_shard="hd"), cache,
+                                  MESH, shard_seq=True)
+        return sp["p0"]["k"]
+
+    assert k_spec_hd(32)[2] == ("data",)
+    assert k_spec_hd(34)[2] is None
+
+
+def test_prefill_out_spec_guards_compose():
+    """The prefill logit out-spec's batch and vocab guards act on their own
+    axes: a non-divisible global_batch drops ONLY the batch split and must
+    not resurrect a vocab split the vocab guard rejected."""
+    from repro.configs.base import InputShape
+    from repro.launch.dryrun import prefill_out_spec
+    cfg = get_config("olmo-1b")
+    dp = ("data",)
+    assert cfg.padded_vocab % 16 == 0
+    ok = InputShape("p", 128, 32, "prefill")          # 32 % 16 == 0
+    odd = InputShape("p", 128, 3, "prefill")          # 3 % 16 != 0
+    assert prefill_out_spec(cfg, ok, MESH, dp) == P(dp, "model")
+    assert prefill_out_spec(cfg, odd, MESH, dp) == P(None, "model")
+    # a model axis the (256-padded) vocab does NOT divide: vocab never
+    # sharded, whatever the batch does (this is the composition the
+    # unconditional override used to break)
+    mesh5 = _abstract_mesh(("data", 16), ("model", 5))
+    assert cfg.padded_vocab % 5 != 0
+    assert prefill_out_spec(cfg, ok, mesh5, dp) == P(dp, None)
+    assert prefill_out_spec(cfg, odd, mesh5, dp) == P(None, None)
+
+
 def test_applicability_rules():
     ok, _ = specs.applicable(get_config("xlstm-350m"), "long_500k")
     assert ok
